@@ -1,0 +1,20 @@
+"""Shared benchmark plumbing: CSV emit + claim checks."""
+
+from __future__ import annotations
+
+CHECKS: list[tuple[str, bool, str]] = []
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.3f},{derived}")
+
+
+def check(claim: str, ok: bool, detail: str = "") -> None:
+    CHECKS.append((claim, ok, detail))
+    print(f"# CHECK {'PASS' if ok else 'FAIL'}: {claim}  {detail}")
+
+
+def summary() -> int:
+    fails = [c for c in CHECKS if not c[1]]
+    print(f"# {len(CHECKS) - len(fails)}/{len(CHECKS)} claim checks passed")
+    return len(fails)

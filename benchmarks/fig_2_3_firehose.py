@@ -1,0 +1,44 @@
+"""Paper Fig 2.3 (related work): Firehose 8-byte put latency over an
+increasing working set — the pinning cliff past M(+MAXVICTIM)."""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.core.firehose import (FirehoseConfig, FirehoseNode,
+                                 rendezvous_put_latency_us)
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    cfg = FirehoseConfig(M_bytes=8 << 20, maxvictim_bytes=1 << 20)
+    buckets_m = cfg.M_bytes // cfg.bucket_bytes
+    lat_small = lat_big = 0.0
+    for frac in (0.25, 0.5, 0.75, 1.0, 1.1, 1.25, 1.5, 2.0):
+        node = FirehoseNode(cfg)
+        ws = int(buckets_m * frac)
+        for b in range(ws):            # warm to steady state
+            node.put_latency_us(b)
+        total = n = 0
+        for _ in range(2):
+            for b in range(ws):
+                total += node.put_latency_us(b)
+                n += 1
+        avg = total / n
+        emit(f"fig2.3/firehose_ws_{frac:.2f}M", avg,
+             f"hit_rate={node.hit_rate:.3f}")
+        if frac == 0.5:
+            lat_small = avg
+        if frac == 2.0:
+            lat_big = avg
+    rdv = rendezvous_put_latency_us(8)
+    emit("fig2.3/rendezvous_no_unpin", rendezvous_put_latency_us(8, unpin=False), "")
+    emit("fig2.3/rendezvous", rdv, "")
+    check("C9: Firehose latency cliff past pinnable memory M",
+          lat_big > 2 * lat_small,
+          f"{lat_small:.1f}us -> {lat_big:.1f}us")
+    check("C9: past-M Firehose approaches Rendezvous(no-unpin)",
+          lat_big > 0.4 * rendezvous_put_latency_us(8, unpin=False))
+
+
+if __name__ == "__main__":
+    main()

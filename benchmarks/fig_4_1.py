@@ -1,0 +1,34 @@
+"""Paper Fig 4.1: remote write, all buffers pre-touched — transfer-only
+latency ("Ideal") vs +pin / +touch overhead vs "Real" measurements."""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.core.engine import BufferPrep
+from repro.core.experiments import SIZES, run_remote_write
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    c = DEFAULT_COST_MODEL
+    ideal_16 = None
+    for s in SIZES:
+        r = run_remote_write(s, BufferPrep.TOUCHED, BufferPrep.TOUCHED)
+        if s == 16:
+            ideal_16 = r.latency_us
+        emit(f"fig4.1/ideal/{s}B", r.latency_us, "transfer-only")
+        emit(f"fig4.1/ideal+touch/{s}B", r.latency_us + 2 * c.touch_us(s),
+             "plus touch of both buffers")
+        emit(f"fig4.1/ideal+pin/{s}B",
+             r.latency_us + 2 * (c.pin_us(s) + c.unpin_us(s)),
+             "plus pin+unpin of both buffers")
+        rp = run_remote_write(s, BufferPrep.PINNED, BufferPrep.PINNED)
+        emit(f"fig4.1/real_pinned/{s}B", rp.latency_us + rp.prep_us,
+             "Listing-4.2 style incl. prep")
+    check("C1: ideal 16B RTT = 4 us", abs(ideal_16 - 4.0) < 0.25,
+          f"measured {ideal_16:.2f}")
+
+
+if __name__ == "__main__":
+    main()

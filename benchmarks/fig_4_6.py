@@ -1,0 +1,28 @@
+"""Paper Fig 4.6: timeout counts, src-only vs src+dst (the mechanism's
+explicit-retransmit advantage), across the size sweep."""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.core.engine import BufferPrep
+from repro.core.experiments import SIZES, run_remote_write
+from repro.core.resolver import Strategy
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    ok = True
+    for s in SIZES:
+        src = run_remote_write(s, BufferPrep.FAULTING, BufferPrep.TOUCHED,
+                               strategy=Strategy.TOUCH_A_PAGE)
+        both = run_remote_write(s, BufferPrep.FAULTING, BufferPrep.FAULTING,
+                                strategy=Strategy.TOUCH_A_PAGE)
+        emit(f"fig4.6/timeouts_src/{s}B", src.stats.timeouts, "count")
+        emit(f"fig4.6/timeouts_both/{s}B", both.stats.timeouts, "count")
+        if s >= 16384:
+            ok &= both.stats.timeouts < src.stats.timeouts
+    check("C6: fewer timeouts with faults on both sides (>=16KB)", ok)
+
+
+if __name__ == "__main__":
+    main()

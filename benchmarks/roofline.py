@@ -1,0 +1,58 @@
+"""Roofline table from the dry-run artifacts (deliverable g).
+
+Reads results/dryrun/*.json (written by ``repro.launch.dryrun``) and
+prints, per (arch × shape) on the single-pod mesh:
+
+    compute term   = HLO_dot_FLOPs/dev ÷ 197 TFLOP/s
+    memory term    = HLO_bytes/dev     ÷ 819 GB/s
+    collective term= collective B/dev  ÷ 50 GB/s/link
+    dominant term, MODEL_FLOPS = 6·N·D (3·2·N·D fwd+bwd; 2·N·D inference),
+    MODEL_FLOPS / (HLO_FLOPs × chips), and the bottleneck note.
+"""
+
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "..", "results", "dryrun")
+
+NOTES = {
+    "compute_s": "compute-bound: raise MXU utilization (tiling, fewer "
+                 "recompute flops)",
+    "memory_s": "HBM-bound: fuse/reduce activation traffic, keep KV reads "
+                "page-local",
+    "collective_s": "ICI-bound: overlap collectives, shrink DP gradient "
+                    "bytes (compression), re-balance TP/DP",
+}
+
+
+def load(mesh: str = "pod16x16") -> list[dict]:
+    recs = []
+    for f in sorted(glob.glob(os.path.join(RESULTS, f"*__{mesh}.json"))):
+        r = json.load(open(f))
+        if r.get("status") == "ok":
+            recs.append(r)
+    return recs
+
+
+def main() -> None:
+    recs = load()
+    if not recs:
+        print("no dry-run artifacts found; run "
+              "`PYTHONPATH=src python -m repro.launch.dryrun --all` first")
+        return
+    print("arch,shape,compute_s,memory_s,collective_s,dominant,"
+          "model_flops,useful_ratio,fits_hbm,note")
+    for r in recs:
+        t = r["roofline_terms_s"]
+        dom = r["dominant_term"]
+        print(f"{r['arch']},{r['shape']},{t['compute_s']:.3e},"
+              f"{t['memory_s']:.3e},{t['collective_s']:.3e},{dom},"
+              f"{r['model_flops_total']:.3e},{r['useful_flops_ratio']:.3f},"
+              f"{r['fits_hbm']},\"{NOTES[dom]}\"")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,42 @@
+"""Benchmark entry point: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run`` prints every table as
+``name,us_per_call,derived`` CSV plus claim checks (DESIGN.md §1 C1-C9),
+exiting non-zero if any claim check fails.
+"""
+
+from __future__ import annotations
+
+import sys
+
+from benchmarks import (fig_2_3_firehose, fig_4_1, fig_4_2, fig_4_3, fig_4_4,
+                        fig_4_6, fig_4_7, table_4_1, thp_study,
+                        timeout_sweep)
+from benchmarks.common import summary
+
+MODULES = (
+    ("Table 4.1 (OS-call overheads)", table_4_1),
+    ("Fig 4.1 (pre-touched transfer latency)", fig_4_1),
+    ("Fig 4.2 (fault at destination)", fig_4_2),
+    ("Fig 4.3 (fault at source)", fig_4_3),
+    ("Fig 4.4/4.5 (faults at both)", fig_4_4),
+    ("Fig 4.6 (timeout counts)", fig_4_6),
+    ("Fig 4.7 (driver latency)", fig_4_7),
+    ("Timeout sweep + beyond-paper resolvers", timeout_sweep),
+    ("THP study (§3.1.2.3 motivation)", thp_study),
+    ("Fig 2.3 (Firehose working-set cliff)", fig_2_3_firehose),
+)
+
+
+def main() -> None:
+    for title, mod in MODULES:
+        print(f"\n### {title}")
+        mod.main()
+    print()
+    fails = summary()
+    if fails:
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""Paper Table 4.1: overhead of mmap/munmap/pin/unpin/touch per buffer."""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.core.costmodel import DEFAULT_COST_MODEL, TABLE_4_1, TABLE_4_1_SIZES
+
+
+def main() -> None:
+    c = DEFAULT_COST_MODEL
+    print("name,us_per_call,derived")
+    ops = {"mmap": c.mmap_us, "munmap": c.munmap_us, "pin": c.pin_us,
+           "unpin": c.unpin_us, "touch": c.touch_us}
+    exact = True
+    for op, fn in ops.items():
+        for i, size in enumerate(TABLE_4_1_SIZES):
+            v = fn(size)
+            emit(f"table4.1/{op}/{size}B", v, f"paper={TABLE_4_1[op][i]}")
+            exact &= abs(v - TABLE_4_1[op][i]) < 1e-9
+    check("C2: Table 4.1 reproduced exactly (calibration table)", exact)
+    check("C2: pin cost grows with pages",
+          c.pin_us(65536) > c.pin_us(16384) > c.pin_us(4096))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,47 @@
+"""Paper §4 timeout study: 25 ms / 2.5 ms / 1 ms retransmission timeouts
+(1 ms best) + beyond-paper extensions: finer timeouts and the KERNEL_RAPF
+/ STREAM resolvers the thesis lists as future work."""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.core.addresses import TIMEOUT_SWEEP_US
+from repro.core.engine import BufferPrep
+from repro.core.experiments import run_remote_write
+from repro.core.resolver import Strategy
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    lats = {}
+    for to in TIMEOUT_SWEEP_US + (250.0, 100.0):
+        r = run_remote_write(16384, BufferPrep.FAULTING, BufferPrep.TOUCHED,
+                             strategy=Strategy.TOUCH_A_PAGE, timeout_us=to)
+        lats[to] = r.latency_us
+        emit(f"timeout_sweep/src_tap/{to/1000:g}ms", r.latency_us,
+             f"timeouts={r.stats.timeouts}")
+    check("C7: 1ms beats 2.5ms beats 25ms (paper's sweep)",
+          lats[1000.0] < lats[2500.0] < lats[25000.0])
+
+    # beyond-paper: future-work resolvers on the dst-fault path
+    base = run_remote_write(65536, BufferPrep.TOUCHED, BufferPrep.FAULTING,
+                            strategy=Strategy.TOUCH_AHEAD)
+    kr = run_remote_write(65536, BufferPrep.TOUCHED, BufferPrep.FAULTING,
+                          strategy=Strategy.KERNEL_RAPF)
+    st = run_remote_write(65536, BufferPrep.TOUCHED, BufferPrep.FAULTING,
+                          strategy=Strategy.STREAM)
+    emit("beyond/touch_ahead/64KB", base.latency_us, "paper mechanism")
+    emit("beyond/kernel_rapf/64KB", kr.latency_us,
+         "future-work #1: full-kernel path")
+    emit("beyond/stream_prefetch/64KB", st.latency_us,
+         "beyond-paper: next-block prediction")
+    check("beyond-paper: kernel RAPF beats user-space RAPF hop",
+          kr.latency_us < base.latency_us,
+          f"{kr.latency_us:.0f} vs {base.latency_us:.0f}")
+    check("beyond-paper: stream prefetch beats plain Touch-Ahead",
+          st.latency_us <= kr.latency_us,
+          f"{st.latency_us:.0f} vs {kr.latency_us:.0f}")
+
+
+if __name__ == "__main__":
+    main()

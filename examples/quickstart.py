@@ -1,0 +1,57 @@
+"""Quickstart: the paper's mechanism in six steps.
+
+    PYTHONPATH=src python examples/quickstart.py
+
+1. Build a two-node virtual-address RDMA fabric.
+2. mmap buffers WITHOUT pinning (demand paging on).
+3. Issue a remote write whose destination pages are not resident.
+4. Watch the mechanism: NACK -> fault FIFO -> driver tasklet ->
+   Touch-Ahead page-in -> RAPF -> retransmission -> completion.
+5. Compare against the pinning baseline.
+6. Same idea on the ML data plane: a paged KV pool with a spilled page.
+"""
+
+import numpy as np
+
+from repro.core import BufferPrep, RDMAEngine, Strategy
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.memory.kv_cache import PagedKVManager
+
+SRC, DST, SIZE, PD = 0x10_0000_0000, 0x20_0000_0000, 65536, 1
+
+print("== 1-4: remote write with destination faults (Touch-Ahead) ==")
+eng = RDMAEngine(n_nodes=2, strategy=Strategy.TOUCH_AHEAD)
+eng.map_buffer(0, PD, SRC, SIZE, prep=BufferPrep.TOUCHED)
+eng.map_buffer(1, PD, DST, SIZE, prep=BufferPrep.FAULTING)   # not pinned!
+t = eng.remote_write(PD, 0, SRC, 1, DST, SIZE)
+st = eng.run_transfer(t)
+print(f"  64KB write completed in {st.latency_us:.1f} us")
+print(f"  faults at dst: {st.dst_faults}, FIFO entries handled: "
+      f"{st.fifo_entries_handled} (skipped dups: {st.fifo_entries_skipped})")
+print(f"  explicit RAPF retransmissions: {st.rapf_retransmits}, "
+      f"timeouts: {st.timeouts}")
+print(f"  driver time {st.driver_us:.1f} us, library-thread time "
+      f"{st.user_us:.1f} us")
+
+print("\n== 5: the pinning alternative ==")
+eng2 = RDMAEngine(n_nodes=2)
+c1 = eng2.map_buffer(0, PD, SRC, SIZE, prep=BufferPrep.PINNED)
+c2 = eng2.map_buffer(1, PD, DST, SIZE, prep=BufferPrep.PINNED)
+t2 = eng2.remote_write(PD, 0, SRC, 1, DST, SIZE)
+st2 = eng2.run_transfer(t2)
+print(f"  pinned transfer: {st2.latency_us:.1f} us + pin/unpin overhead "
+      f"{c1.total_us + c2.total_us:.1f} us on the critical path")
+print(f"  (and the memory stays locked — the thesis' utilization argument)")
+
+print("\n== 6: the same mechanism on a paged KV cache ==")
+kv = PagedKVManager(n_frames=8, page_tokens=256, max_pages_per_seq=8,
+                    strategy=Strategy.TOUCH_AHEAD)
+kv.add_sequence(1)
+kv.append_tokens(1, 2048)          # fills the pool
+kv.add_sequence(2)
+kv.append_tokens(2, 512, spill_candidates=[1])   # seq 1 pages spill
+print(f"  pool spills while admitting seq 2: {kv.stats.spills}")
+n = kv.ensure_resident(1, spill_candidates=[2])  # seq 1 scheduled again
+print(f"  re-activating seq 1 faulted {n} pages back in "
+      f"({kv.stats.fault_events} fault events — Touch-Ahead blocks)")
+print(f"  simulated fault-handling time: {kv.stats.simulated_us:.1f} us")

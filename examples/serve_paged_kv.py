@@ -1,0 +1,39 @@
+"""End-to-end serving driver: batched requests against a paged KV cache
+with an UNDERSIZED frame pool, so admission forces spills and
+re-activation faults pages back in Touch-Ahead style.
+
+    PYTHONPATH=src python examples/serve_paged_kv.py
+"""
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.core.resolver import Strategy
+from repro.models.config import reduced
+from repro.models.registry import model_for
+from repro.serving.engine import ServingEngine
+from repro.serving.sampler import SamplerConfig
+
+cfg = reduced(get_config("h2o_danube_1_8b"), n_layers=3)
+model = model_for(cfg)
+params = model.init_params(cfg, jax.random.PRNGKey(0))
+
+for strategy in (Strategy.TOUCH_A_PAGE, Strategy.TOUCH_AHEAD):
+    eng = ServingEngine(cfg, params, max_batch=2, max_len=96,
+                        pool_frames=5,           # undersized on purpose
+                        strategy=strategy,
+                        sampler=SamplerConfig(temperature=0.0))
+    rng = np.random.default_rng(0)
+    reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=20),
+                       max_new_tokens=14) for _ in range(5)]
+    eng.run_until_done()
+    s = eng.stats
+    kv = eng.kv.stats
+    print(f"{strategy.value:14s}: {s.tokens_generated} tokens, "
+          f"{s.decode_steps} decode steps, spills={kv.spills}, "
+          f"fault_events={kv.fault_events}, "
+          f"page-ins={kv.fault_page_ins}, "
+          f"simulated fault time={kv.simulated_us:.1f}us")
+print("\nTouch-Ahead resolves a spilled sequence in block-granular fault")
+print("events; Touch-A-Page pays one event per page (the thesis' contrast).")

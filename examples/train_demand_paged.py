@@ -1,0 +1,76 @@
+"""End-to-end training driver (deliverable b): trains a ~100M-parameter
+qwen3-family model for a few hundred steps on CPU with:
+
+  * microbatched gradient accumulation + per-layer remat,
+  * checkpoint/restart (kill it mid-run and start again: it resumes),
+  * host-paged optimizer state streamed block-wise with Touch-Ahead
+    prefetch — the thesis' mechanism applied to training memory.
+
+    PYTHONPATH=src python examples/train_demand_paged.py [--steps 300]
+"""
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.pipeline import SyntheticLM
+from repro.distributed.checkpoint import Checkpointer
+from repro.memory.offload import PagedAdamW
+from repro.models.config import reduced
+from repro.models.registry import model_for
+from repro.optim.adamw import AdamWConfig
+from repro.optim.schedules import cosine_with_warmup
+from repro.training.trainer import TrainConfig, make_loss_fn
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--steps", type=int, default=300)
+ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_demo")
+args = ap.parse_args()
+
+# ~100M params: qwen3 family, reduced depth/width
+cfg = reduced(get_config("qwen3_14b"), n_layers=6, d_model=512, head_dim=64,
+              n_heads=8, n_kv_heads=4, d_ff=1536, vocab_size=32768,
+              dtype="float32")
+model = model_for(cfg)
+params = model.init_params(cfg, jax.random.PRNGKey(0))
+n = sum(x.size for x in jax.tree_util.tree_leaves(params))
+print(f"model: {cfg.name}-reduced, {n/1e6:.1f}M params")
+
+opt_cfg = AdamWConfig(lr=3e-4, schedule=cosine_with_warmup(3e-4, 30,
+                                                           args.steps))
+paged_opt = PagedAdamW(opt_cfg, params, block_elems=1 << 21,
+                       )
+print(f"optimizer moments: host-paged, device working set "
+      f"{paged_opt.device_bytes_resident()/2**20:.0f} MiB "
+      f"(vs {2*n*4/2**20:.0f} MiB fully resident)")
+
+tcfg = TrainConfig(microbatches=2, remat=True,
+                   optimizer=opt_cfg)
+loss_fn = jax.jit(jax.value_and_grad(make_loss_fn(cfg, tcfg)))
+ds = SyntheticLM(cfg.vocab_size, seq_len=64, batch_per_shard=8)
+ck = Checkpointer()
+
+step0 = 0
+restored = ck.restore_latest(args.checkpoint_dir, params)
+if restored is not None:
+    params, _, step0 = restored
+    print(f"resumed from checkpoint at step {step0}")
+
+t0 = time.perf_counter()
+for step in range(step0, args.steps):
+    tokens, labels = ds.batch_at(step)
+    loss, grads = loss_fn(params, tokens, labels)
+    params = paged_opt.update(params, grads)
+    if (step + 1) % 25 == 0:
+        dt = (time.perf_counter() - t0) / 25
+        print(f"step {step+1:4d}  loss {float(loss):.4f}  {dt:.2f}s/step  "
+              f"opt-blocks streamed {paged_opt.stats.blocks_streamed} "
+              f"(prefetch overlap {paged_opt.stats.prefetch_overlapped})")
+        t0 = time.perf_counter()
+    if (step + 1) % 100 == 0:
+        ck.save(args.checkpoint_dir, params, None, step + 1)
+        print(f"  checkpoint @ {step+1}")
+print("done.")

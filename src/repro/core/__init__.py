@@ -1,0 +1,22 @@
+"""Core: the paper's contribution — page-fault handling for virtual-address
+RDMA — as a composable library (see DESIGN.md §2 for the TPU adaptation)."""
+
+from repro.core.addresses import (BLOCK_SIZE, MTU, PAGE_SIZE, PAGES_PER_BLOCK,
+                                  NetlinkMessage, RAPFMessage)
+from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
+from repro.core.engine import BufferPrep, RDMAEngine
+from repro.core.fault import SMMU, Access, Disposition, FaultModel
+from repro.core.fault_fifo import FaultFIFO, FIFOEntry
+from repro.core.pagetable import (FrameAllocator, PageState, PageTable,
+                                  SegmentationFault)
+from repro.core.resolver import Resolution, Resolver, Strategy
+from repro.core.simulator import EventLoop, Resource
+
+__all__ = [
+    "BLOCK_SIZE", "MTU", "PAGE_SIZE", "PAGES_PER_BLOCK",
+    "NetlinkMessage", "RAPFMessage", "CostModel", "DEFAULT_COST_MODEL",
+    "BufferPrep", "RDMAEngine", "SMMU", "Access", "Disposition", "FaultModel",
+    "FaultFIFO", "FIFOEntry", "FrameAllocator", "PageState", "PageTable",
+    "SegmentationFault", "Resolution", "Resolver", "Strategy",
+    "EventLoop", "Resource",
+]

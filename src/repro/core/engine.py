@@ -1,0 +1,136 @@
+"""User-level RDMA engine API over the simulated ExaNeSt fabric.
+
+This is the "page fault library" + PLDMA user API of the thesis, exposed the
+way an application would use it: map buffers, optionally prepare them
+(pin / touch / leave faulting), then issue remote writes/reads and collect
+per-transfer statistics.  `benchmarks/` and the property tests drive
+everything through this class.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from typing import Optional
+
+from repro.core import addresses as A
+from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
+from repro.core.fault import FaultModel
+from repro.core.node import Link, Node, Transfer, TransferStats
+from repro.core.pagetable import FrameAllocator
+from repro.core.resolver import Resolver, Strategy
+from repro.core.simulator import EventLoop
+
+
+class BufferPrep(enum.Enum):
+    """How a buffer is prepared before the RDMA (the thesis' comparisons)."""
+    FAULTING = "faulting"        # mmap'ed only: every page faults on access
+    TOUCHED = "touched"          # pre-touched: resident, unpinned
+    PINNED = "pinned"            # pinned (and therefore resident)
+
+
+@dataclasses.dataclass
+class PrepCost:
+    """User-side microseconds spent preparing / releasing one buffer."""
+    mmap_us: float = 0.0
+    prep_us: float = 0.0         # touch or pin
+    release_us: float = 0.0      # unpin (pin case)
+    munmap_us: float = 0.0
+
+    @property
+    def total_us(self) -> float:
+        return self.mmap_us + self.prep_us + self.release_us + self.munmap_us
+
+
+class RDMAEngine:
+    def __init__(self, n_nodes: int = 2,
+                 strategy: Strategy = Strategy.TOUCH_AHEAD,
+                 cost: Optional[CostModel] = None,
+                 hupcf: bool = True,
+                 fault_model: FaultModel = FaultModel.TERMINATE,
+                 frames_per_node: int = 1 << 20,
+                 pin_limit_bytes: Optional[int] = None,
+                 lookahead: int = A.PAGES_PER_BLOCK,
+                 hops: int = 1):
+        self.loop = EventLoop()
+        self.cost = cost or DEFAULT_COST_MODEL
+        self.resolver = Resolver(strategy=strategy, cost=self.cost,
+                                 lookahead=lookahead)
+        self.pin_limit_bytes = pin_limit_bytes
+        self.nodes: list[Node] = []
+        for i in range(n_nodes):
+            node = Node(self.loop, self.cost, i, self.resolver,
+                        allocator=FrameAllocator(frames_per_node),
+                        hupcf=hupcf, fault_model=fault_model)
+            self.nodes.append(node)
+        # full-duplex links between every pair (and loopback), one hop each
+        for a in self.nodes:
+            for b in self.nodes:
+                a.links_to[b.node_id] = Link(self.loop, self.cost,
+                                             hops=hops if a is not b else 1)
+                a.peer[b.node_id] = b
+        self._tid = 0
+
+    # ------------------------------------------------------------- buffers
+    def map_buffer(self, node_idx: int, pd: int, va: int, nbytes: int,
+                   prep: BufferPrep = BufferPrep.FAULTING,
+                   charge: bool = True) -> PrepCost:
+        """mmap (+ touch/pin) a buffer; returns the user-side cost."""
+        node = self.nodes[node_idx]
+        if pd not in node.page_tables:
+            node.create_domain(pd, pin_limit_bytes=self.pin_limit_bytes)
+        pt = node.pt(pd)
+        pt.mmap(va, nbytes)
+        cost = PrepCost(mmap_us=self.cost.mmap_us(nbytes))
+        if prep is BufferPrep.TOUCHED:
+            for vpn in A.pages_spanned(va, nbytes):
+                pt.touch(vpn)
+            cost.prep_us = self.cost.touch_us(nbytes)
+        elif prep is BufferPrep.PINNED:
+            pt.pin(va, nbytes)
+            cost.prep_us = self.cost.pin_us(nbytes)
+            cost.release_us = self.cost.unpin_us(nbytes)
+        if not charge:
+            return PrepCost()
+        return cost
+
+    def unmap_buffer(self, node_idx: int, pd: int, va: int, nbytes: int) -> float:
+        node = self.nodes[node_idx]
+        node.pt(pd).munmap(va, nbytes)
+        return self.cost.munmap_us(nbytes)
+
+    # ------------------------------------------------------------ transfers
+    def remote_write(self, pd: int, src_node: int, src_va: int,
+                     dst_node: int, dst_va: int, nbytes: int) -> Transfer:
+        assert (src_va % A.PAGE_SIZE) == (dst_va % A.PAGE_SIZE), \
+            "engine requires equally page-aligned src/dst (as in the thesis runs)"
+        self._tid += 1
+        t = Transfer(self._tid, pd, self.nodes[src_node], self.nodes[dst_node],
+                     src_va, dst_va, nbytes)
+        self.nodes[src_node].r5.submit(t)
+        return t
+
+    def remote_read(self, pd: int, target_node: int, target_va: int,
+                    local_node: int, local_va: int, nbytes: int) -> Transfer:
+        """Remote read = request forwarded to the target, whose R5 turns it
+        into a write back to the initiator (§1.3.2.2)."""
+        self._tid += 1
+        t = Transfer(self._tid, pd, self.nodes[target_node],
+                     self.nodes[local_node], target_va, local_va, nbytes)
+        # request packet: initiator -> target mailbox
+        req_delay = (self.cost.pckzer_to_mbox_us
+                     + (self.cost.hop_latency_us + self.cost.packet_wire_us(16)
+                        if target_node != local_node else 0.0))
+        self.loop.schedule(req_delay, self.nodes[target_node].r5.submit, t)
+        return t
+
+    def run(self, until: Optional[float] = None) -> None:
+        self.loop.run(until=until)
+
+    def run_transfer(self, t: Transfer, deadline_us: float = 5e6) -> TransferStats:
+        self.loop.run(until=self.loop.now + deadline_us)
+        if not t.complete:
+            raise RuntimeError(
+                f"transfer tid={t.tid} incomplete after {deadline_us} us: "
+                f"stats={t.stats}")
+        return t.stats

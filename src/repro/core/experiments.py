@@ -1,0 +1,82 @@
+"""Reusable experiment drivers mirroring the thesis' microbenchmarks.
+
+Each function runs one configuration of the Chapter-4 methodology:
+
+* "Real" measurements (Listing 4.2) — per-iteration timing including the
+  page-fault handling on the critical path;
+* buffers prepared per :class:`~repro.core.engine.BufferPrep`
+  (pre-touched / pinned / left faulting at source, destination, or both);
+* intra-node transfers (one FPGA), matching the thesis setup, unless
+  ``n_nodes``/``hops`` say otherwise.
+
+The simulator is deterministic, so one iteration per configuration is
+exact; ``iterations`` exists for THP/randomized variants.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core import addresses as A
+from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL, cost_model_with_timeout
+from repro.core.engine import BufferPrep, RDMAEngine
+from repro.core.node import TransferStats
+from repro.core.resolver import Strategy
+
+# the thesis' transfer-size sweep (Chapter 4)
+SIZES = (16, 64, 256, 1024, 4096, 16384, 32768, 65536)
+
+SRC_BASE = 0x10_0000_0000
+DST_BASE = 0x20_0000_0000
+
+
+@dataclasses.dataclass
+class RunResult:
+    size: int
+    latency_us: float            # transfer-only latency (Listing 4.2 style)
+    prep_us: float               # buffer prep cost, reported separately
+    stats: TransferStats
+
+
+def run_remote_write(size: int,
+                     src_prep: BufferPrep,
+                     dst_prep: BufferPrep,
+                     strategy: Strategy = Strategy.TOUCH_AHEAD,
+                     timeout_us: Optional[float] = None,
+                     cost: Optional[CostModel] = None,
+                     n_nodes: int = 1,
+                     lookahead: int = A.PAGES_PER_BLOCK,
+                     hupcf: bool = True) -> RunResult:
+    """One remote write with the given buffer preparation, to completion."""
+    if cost is None:
+        cost = (cost_model_with_timeout(timeout_us) if timeout_us is not None
+                else DEFAULT_COST_MODEL)
+    eng = RDMAEngine(n_nodes=max(1, n_nodes), strategy=strategy, cost=cost,
+                     lookahead=lookahead, hupcf=hupcf)
+    dst_node = 0 if n_nodes <= 1 else 1
+    pd = 1
+    prep_src = eng.map_buffer(0, pd, SRC_BASE, size, prep=src_prep)
+    prep_dst = eng.map_buffer(dst_node, pd, DST_BASE, size, prep=dst_prep)
+    t0 = eng.loop.now
+    t = eng.remote_write(pd, 0, SRC_BASE, dst_node, DST_BASE, size)
+    stats = eng.run_transfer(t)
+    return RunResult(size=size, latency_us=stats.t_complete - t0,
+                     prep_us=prep_src.total_us + prep_dst.total_us,
+                     stats=stats)
+
+
+def fault_sweep(where: str, strategy: Strategy,
+                timeout_us: float = A.DEFAULT_TIMEOUT_US,
+                sizes=SIZES, **kw) -> list[RunResult]:
+    """The Fig 4.2/4.3/4.4 experiments: faults at dst / src / both."""
+    src_prep = BufferPrep.FAULTING if where in ("src", "both") else BufferPrep.TOUCHED
+    dst_prep = BufferPrep.FAULTING if where in ("dst", "both") else BufferPrep.TOUCHED
+    return [run_remote_write(s, src_prep, dst_prep, strategy=strategy,
+                             timeout_us=timeout_us, **kw) for s in sizes]
+
+
+def ideal_sweep(prep: BufferPrep = BufferPrep.TOUCHED, sizes=SIZES,
+                **kw) -> list[RunResult]:
+    """Fig 4.1: no faults during the RDMA (pre-touched or pinned buffers)."""
+    return [run_remote_write(s, prep, prep, **kw) for s in sizes]

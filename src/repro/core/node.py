@@ -1,0 +1,509 @@
+"""One ExaNeSt computing node: A53s + SMMU + fault FIFO + R5 + PLDMA.
+
+Event-driven model of the full thesis mechanism:
+
+* **Send path** (§1.3.2.1, §3.2.2): the R5 segments transfers into 16 KB
+  blocks (window of 2 outstanding per transfer); the PLDMA translates source
+  pages through the local SMMU as it packetizes — a source fault *pauses*
+  the block after streaming the pages already translated; recovery is by
+  timeout only (the prototype has no explicit source-side resume).
+* **Receive path** (§3.2.3): destination pages are translated as packets
+  arrive; the first faulting page of a block NACKs the block (AXI slave
+  error), every NACKed packet is logged in the 512×128 b fault FIFO (with
+  the hardware consecutive-dedup), and the remaining packets of the failed
+  block are dropped.  The sender R5 *pauses* the transaction instead of
+  instantly retransmitting (the thesis' firmware change).
+* **Driver** (§3.2.1, §3.2.3.2): the ``arm_smmu_context_fault`` handler reads
+  FSR/FAR/FSYNR on the driver CPU, clears the fault, and schedules the
+  ``pf_send_handler`` / ``pf_rcv_tasklet`` tasklet by the WNR bit.  The
+  receive tasklet drains the FIFO, skips entries already handled (the
+  last-two-transactions cache that absorbs interleaving duplicates) and
+  resolves faults via the configured strategy; for destination faults it
+  fires the RAPF retransmit request at the initiator's mailbox.
+* **Retransmission** (§3.2.3.3): R5 retransmits on RAPF (validating seq_num
+  and the packetizer-wired PDID) or on timeout (1 ms default).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import Callable, Optional
+
+from repro.core import addresses as A
+from repro.core.addresses import (NetlinkMessage, RAPFMessage, iova_field_pack,
+                                  iova_field_unpack, pages_spanned, split_blocks)
+from repro.core.costmodel import CostModel
+from repro.core.fault import SMMU, Access, Disposition, FaultModel
+from repro.core.fault_fifo import FaultFIFO, FIFOEntry
+from repro.core.pagetable import FrameAllocator, PageTable
+from repro.core.resolver import Resolver, Strategy
+from repro.core.simulator import EventLoop, Resource
+
+
+class BlockState(enum.Enum):
+    PENDING = 0
+    IN_FLIGHT = 1
+    PAUSED_SRC = 2    # source translation fault: waiting for timeout
+    PAUSED_DST = 3    # PF-NACK received: waiting for RAPF or timeout
+    DONE = 4
+
+
+@dataclasses.dataclass
+class TransferStats:
+    t_submit: float = 0.0
+    t_complete: float = -1.0
+    timeouts: int = 0
+    rapf_retransmits: int = 0
+    retransmissions: int = 0
+    src_faults: int = 0
+    dst_faults: int = 0
+    netlink_msgs: int = 0
+    driver_us: float = 0.0       # kernel time: interrupt handler + tasklets
+    user_us: float = 0.0         # library-thread time
+    fifo_entries_handled: int = 0
+    fifo_entries_skipped: int = 0
+    segfaults_recovered: int = 0
+    major_faults: int = 0
+
+    @property
+    def latency_us(self) -> float:
+        return self.t_complete - self.t_submit
+
+
+class Block:
+    __slots__ = ("transfer", "index", "src_va", "dst_va", "nbytes", "tr_id",
+                 "seq_num", "state", "attempts", "round_id", "delivered",
+                 "nacked_round", "timeout_event", "n_pages")
+
+    def __init__(self, transfer: "Transfer", index: int, src_va: int,
+                 dst_va: int, nbytes: int):
+        self.transfer = transfer
+        self.index = index
+        self.src_va = src_va
+        self.dst_va = dst_va
+        self.nbytes = nbytes
+        self.tr_id = -1
+        self.seq_num = index & A.SEQ_NUM_MASK
+        self.state = BlockState.PENDING
+        self.attempts = 0
+        self.round_id = 0
+        self.delivered: set[int] = set()
+        self.nacked_round = -1       # round for which a PF-NACK was sent
+        self.timeout_event = None
+        self.n_pages = len(pages_spanned(dst_va, nbytes))
+
+
+class Transfer:
+    def __init__(self, tid: int, pd: int, src_node: "Node", dst_node: "Node",
+                 src_va: int, dst_va: int, nbytes: int,
+                 on_complete: Optional[Callable[["Transfer"], None]] = None):
+        self.tid = tid
+        self.pd = pd
+        self.src_node = src_node
+        self.dst_node = dst_node
+        self.src_va = src_va
+        self.dst_va = dst_va
+        self.nbytes = nbytes
+        self.on_complete = on_complete
+        self.stats = TransferStats()
+        # R5 16 KB-aligned segmentation; src/dst assumed equally page-aligned.
+        self.blocks = [Block(self, i, sva, dst_va + (sva - src_va), n)
+                       for i, (sva, n) in enumerate(split_blocks(src_va, nbytes))]
+        self.next_block = 0
+        self.done_blocks = 0
+
+    @property
+    def complete(self) -> bool:
+        return self.done_blocks == len(self.blocks)
+
+
+class Link:
+    """One direction of a (possibly loopback) network path."""
+
+    def __init__(self, loop: EventLoop, cost: CostModel, hops: int = 1):
+        self.res = Resource(loop, "link")
+        self.cost = cost
+        self.hops = hops
+        self.last_user: Optional[int] = None   # block identity for interleave
+
+    def stream_page(self, nbytes: int, block_key: int) -> tuple[float, bool]:
+        """Reserve wire time for one page worth of packets.
+
+        Returns (arrival_delay_from_now, interleaved_with_other_stream).
+        """
+        interleaved = (self.res.would_queue()
+                       and self.last_user is not None
+                       and self.last_user != block_key)
+        self.last_user = block_key
+        wire = self.cost.packet_wire_us(nbytes)
+        _, end = self.res.reserve(wire)
+        delay = (end - self.res.loop.now) + self.hops * self.cost.hop_latency_us
+        return delay, interleaved
+
+
+class Node:
+    def __init__(self, loop: EventLoop, cost: CostModel, node_id: int,
+                 resolver: Resolver, allocator: Optional[FrameAllocator] = None,
+                 hupcf: bool = True,
+                 fault_model: FaultModel = FaultModel.TERMINATE):
+        self.loop = loop
+        self.cost = cost
+        self.node_id = node_id
+        self.resolver = resolver
+        self.allocator = allocator or FrameAllocator()
+        self.page_tables: dict[int, PageTable] = {}
+        self.smmu = SMMU(node_id, interrupt_handler=self._on_smmu_interrupt)
+        self.fifo = FaultFIFO()
+        self.driver_cpu = Resource(loop, f"n{node_id}.cpu0")   # IRQs+tasklets
+        self.user_cpu = Resource(loop, f"n{node_id}.cpu2")     # library thread
+        self.hupcf = hupcf
+        self.fault_model = fault_model
+        self.r5 = R5Scheduler(self)
+        # driver last-2-transactions dedup cache (§ Fig 4.2 discussion)
+        self._handled: deque[tuple[int, int, int, int]] = deque(maxlen=2)
+        self._rcv_tasklet_pending = False
+        # engine wiring
+        self.links_to: dict[int, Link] = {}
+        self.peer: dict[int, "Node"] = {}
+        # demo/bench hook: blocks by (pd, src vpn) for source-fault attribution
+        self.netlink_log: list[NetlinkMessage] = []
+
+    # ------------------------------------------------------------- domains
+    def create_domain(self, pd: int, pin_limit_bytes: Optional[int] = None) -> PageTable:
+        pt = PageTable(pd, self.allocator, pin_limit_bytes=pin_limit_bytes)
+        self.page_tables[pd] = pt
+        self.smmu.attach_domain(pd % A.NUM_CONTEXT_BANKS, pt, hupcf=self.hupcf,
+                                fault_model=self.fault_model)
+        return pt
+
+    def pt(self, pd: int) -> PageTable:
+        return self.page_tables[pd]
+
+    # =================================================== SMMU driver (CPU0)
+    def _on_smmu_interrupt(self, bank_index: int) -> None:
+        """arm_smmu_context_fault — runs on the driver CPU."""
+        c = self.cost
+        _, end = self.driver_cpu.reserve(c.interrupt_us + c.handler_regs_us)
+        self.loop.at(end, self._handler_body, bank_index)
+
+    def _handler_body(self, bank_index: int) -> None:
+        iova, wnr, is_tf = self.smmu.read_fault_record(bank_index)
+        self.smmu.clear_fault(bank_index)
+        if not is_tf:
+            return  # permission faults: future work in the thesis
+        vpn = iova >> 12
+        c = self.cost
+        if wnr:  # destination (write) fault -> pf_rcv_tasklet
+            self._schedule_rcv_tasklet()
+        else:    # source (read) fault -> pf_send_handler
+            _, end = self.driver_cpu.reserve(c.tasklet_latency_us)
+            self.loop.at(end, self._pf_send_handler, bank_index, vpn)
+
+    # ------------------------------------------------- source-fault tasklet
+    def _pf_send_handler(self, bank_index: int, vpn: int) -> None:
+        c = self.cost
+        pt = self.page_tables.get(bank_index)
+        if pt is None:
+            return
+        block = self.r5.find_block_by_src_page(bank_index, vpn)
+        stats = block.transfer.stats if block else None
+        remaining = A.PAGES_PER_BLOCK
+        if block is not None:
+            last_vpn = A.page_index(block.src_va + block.nbytes - 1)
+            remaining = max(1, last_vpn - vpn + 1)
+        res = self.resolver.resolve(pt, vpn, is_dst=False,
+                                    block_pages_remaining=remaining)
+        _, kend = self.driver_cpu.reserve(res.kernel_us)
+        if stats:
+            stats.driver_us += c.tasklet_latency_us + res.kernel_us
+            stats.netlink_msgs += 0 if res.rapf_from_kernel else 1
+            stats.segfaults_recovered += res.segfault_recovered
+            stats.major_faults += res.major
+        if res.user_us > 0:
+            # library thread touches the page; no RAPF for source faults
+            self.loop.at(kend, self._user_thread_work, res.user_us, stats, None)
+        # §3.2.2.1: also kick the receive tasklet, "just in case"
+        self._schedule_rcv_tasklet()
+
+    # ----------------------------------------------- destination tasklet
+    def _schedule_rcv_tasklet(self) -> None:
+        if self._rcv_tasklet_pending:
+            return
+        self._rcv_tasklet_pending = True
+        _, end = self.driver_cpu.reserve(self.cost.tasklet_latency_us)
+        self.loop.at(end, self._pf_rcv_tasklet)
+
+    def _pf_rcv_tasklet(self) -> None:
+        """Drain the fault FIFO; resolve + RAPF per new entry.
+
+        The tasklet scans the FIFO to empty — with interleaved duplicate
+        entries from the two outstanding blocks, "it takes more time to
+        find a new page / set of pages to page-in during the handling"
+        (Fig 4.2 discussion): every pop costs two 64-bit AXI-lite reads on
+        the driver CPU before the entry can even be dedup-checked.
+        """
+        self._rcv_tasklet_pending = False
+        c = self.cost
+        backlog = len(self.fifo)
+        if backlog:
+            # the scan through the queued (mostly duplicate) entries is on
+            # the critical path of every resolution in this invocation
+            self.driver_cpu.reserve(2 * c.fifo_read64_us * backlog)
+        while not self.fifo.empty:
+            entry = self.fifo.pop_entry()
+            if entry is None:
+                break
+            key = entry.vpage_key()
+            src_node = self.peer.get(entry.src_id)
+            stats = None
+            if src_node is not None:
+                blk = src_node.r5.pending.get(entry.tr_id)
+                if blk is not None:
+                    stats = blk.transfer.stats
+            _, vpn27 = iova_field_unpack(entry.iova_field)
+            pt = self.page_tables.get(entry.pdid)
+            if key in self._handled or (pt is not None
+                                        and pt.is_resident(vpn27)):
+                # last-2-transactions cache (absorbs interleaving dups) or a
+                # page an earlier get_user_pages already brought in: skip.
+                _, _ = self.driver_cpu.reserve(c.driver_bookkeep_us)
+                if stats:
+                    stats.fifo_entries_skipped += 1
+                    stats.driver_us += 2 * c.fifo_read64_us + c.driver_bookkeep_us
+                continue
+            self._handled.append(key)
+            if pt is None:
+                continue
+            res = self.resolver.resolve(pt, vpn27, is_dst=True,
+                                        block_pages_remaining=A.PAGES_PER_BLOCK)
+            _, kend = self.driver_cpu.reserve(res.kernel_us + c.driver_bookkeep_us)
+            if stats:
+                stats.fifo_entries_handled += 1
+                stats.driver_us += (2 * c.fifo_read64_us + c.driver_bookkeep_us
+                                    + res.kernel_us)
+                stats.netlink_msgs += 0 if res.rapf_from_kernel else 1
+                stats.segfaults_recovered += res.segfault_recovered
+                stats.major_faults += res.major
+            rapf = RAPFMessage(wired_pdid=entry.pdid, rcved_pdid=entry.pdid,
+                               tr_id=entry.tr_id, seq_num=entry.seq_num)
+            if res.rapf_from_kernel:
+                self.loop.at(kend, self._send_rapf, entry.src_id, rapf, stats)
+            else:
+                self.netlink_log.append(NetlinkMessage(
+                    src_id=entry.src_id, tr_id=entry.tr_id,
+                    seq_num=entry.seq_num, iova_field=entry.iova_field,
+                    pdid=entry.pdid, rw=1))
+                self.loop.at(kend, self._user_thread_work, res.user_us, stats,
+                             (entry.src_id, rapf))
+
+    def _user_thread_work(self, duration: float, stats: Optional[TransferStats],
+                          rapf: Optional[tuple[int, RAPFMessage]]) -> None:
+        _, end = self.user_cpu.reserve(duration)
+        if stats:
+            stats.user_us += duration
+        if rapf is not None:
+            self.loop.at(end, self._send_rapf, rapf[0], rapf[1], stats)
+
+    def _send_rapf(self, src_node_id: int, msg: RAPFMessage,
+                   stats: Optional[TransferStats]) -> None:
+        target = self.peer.get(src_node_id)
+        if target is None:
+            return
+        delay = self.cost.pckzer_to_mbox_us
+        if target is not self:
+            delay += self.cost.hop_latency_us + self.cost.packet_wire_us(8)
+        self.loop.schedule(delay, target.r5.on_mailbox, msg, stats)
+
+    # ============================================================== receive
+    def recv_page(self, block: Block, page_idx: int, round_id: int,
+                  interleaved: bool, nbytes: int) -> None:
+        """Arrival of one page worth of packets at the destination PLDMA.
+
+        With HUPCF set (the thesis' experimental configuration) every page
+        of an in-flight block is translated independently, so a multi-page
+        block with a cold destination logs one FIFO entry *per faulty page*
+        in the first round (plus packet-level duplicates when the two
+        outstanding blocks interleave on the wire — the Fig 4.2 dampening
+        effect).  Without HUPCF the SMMU terminates even resident pages
+        while a fault is outstanding (collateral NACKs, §3.2.1).
+        """
+        if block.state is BlockState.DONE or round_id != block.round_id:
+            return  # stale packets from a superseded round
+        # two outstanding blocks streaming together -> their NACK packets
+        # interleave and defeat the FIFO's consecutive-dedup (§ Fig 4.2)
+        interleaved = interleaved or any(
+            b is not block and b.state in (BlockState.IN_FLIGHT,
+                                           BlockState.PAUSED_SRC,
+                                           BlockState.PAUSED_DST)
+            for b in block.transfer.blocks)
+        pd = block.transfer.pd
+        vpn = A.page_index(block.dst_va) + page_idx
+        res = self.smmu.translate(pd % A.NUM_CONTEXT_BANKS, vpn, Access.WRITE)
+        if res.disposition is Disposition.OK:
+            block.delivered.add(page_idx)
+            if len(block.delivered) == block.n_pages:
+                delay = self.cost.ack_us + self.cost.hop_latency_us
+                self.loop.schedule(delay, block.transfer.src_node.r5.on_ack,
+                                   block, round_id)
+            return
+        # ---- destination fault: NACK + FIFO logging --------------------
+        block.transfer.stats.dst_faults += 1
+        entry = FIFOEntry(src_id=block.transfer.src_node.node_id,
+                          tr_id=block.tr_id, seq_num=block.seq_num,
+                          pdid=pd,
+                          iova_field=iova_field_pack(0, vpn))
+        # every NACKed packet logs; consecutive same-page packets collapse
+        # in the FIFO's dedup, but wire interleaving between the two
+        # outstanding blocks breaks the "same as last pushed" check.
+        n_pushes = max(1, nbytes // A.MTU) if interleaved else 1
+        for _ in range(n_pushes):
+            pushed = self.fifo.push(entry)
+            if not interleaved and not pushed:
+                break
+            if interleaved:
+                # alternating streams: defeat the consecutive-dedup the way
+                # real interleaved packets do
+                self.fifo._last_pushed = None
+        if block.nacked_round != round_id:
+            block.nacked_round = round_id
+            delay = self.cost.nack_us + self.cost.hop_latency_us
+            self.loop.schedule(delay, block.transfer.src_node.r5.on_nack,
+                               block, round_id)
+        # the SMMU interrupt fired inside translate() if this was the first
+        # outstanding fault; MULTI faults rely on the FIFO alone (§3.2.1) —
+        # make sure a drain is queued either way.
+        self._schedule_rcv_tasklet()
+
+
+class R5Scheduler:
+    """The Cortex-R5 firmware model (thesis §1.3.2 + §3.2.3.3)."""
+
+    def __init__(self, node: Node):
+        self.node = node
+        self.loop = node.loop
+        self.cost = node.cost
+        self._tr_counter = 0
+        self.pending: dict[int, Block] = {}   # tr_id -> block
+
+    # ---------------------------------------------------------------- user
+    def submit(self, transfer: Transfer) -> None:
+        transfer.stats.t_submit = self.loop.now
+        self.loop.schedule(self.cost.dma_setup_us, self._start, transfer)
+
+    def _start(self, transfer: Transfer) -> None:
+        for _ in range(A.OUTSTANDING_BLOCKS_PER_TRANSFER):
+            self._launch_next(transfer)
+
+    def _launch_next(self, transfer: Transfer) -> None:
+        if transfer.next_block >= len(transfer.blocks):
+            return
+        block = transfer.blocks[transfer.next_block]
+        transfer.next_block += 1
+        block.tr_id = self._tr_counter & A.TR_ID_MASK
+        self._tr_counter += 1
+        self.pending[block.tr_id] = block
+        self.loop.schedule(self.cost.per_block_r5_us, self._dispatch, block, False)
+
+    # ------------------------------------------------------------ dispatch
+    def _dispatch(self, block: Block, is_retransmit: bool) -> None:
+        if block.state is BlockState.DONE:
+            return
+        node = self.node
+        transfer = block.transfer
+        block.round_id += 1
+        block.attempts += 1
+        block.delivered.clear()
+        block.state = BlockState.IN_FLIGHT
+        if is_retransmit:
+            transfer.stats.retransmissions += 1
+
+        pd = transfer.pd
+        bank = pd % A.NUM_CONTEXT_BANKS
+        src_pages = pages_spanned(block.src_va, block.nbytes)
+        # PLDMA reads/packetizes pages in order; a source fault stops the
+        # stream (pages already read remain in flight).
+        link = node.links_to[transfer.dst_node.node_id]
+        offset = 0
+        for i, vpn in enumerate(src_pages):
+            res = node.smmu.translate(bank, vpn, Access.READ)
+            if res.disposition is not Disposition.OK:
+                block.state = BlockState.PAUSED_SRC
+                transfer.stats.src_faults += 1
+                break
+            pg_start = max(block.src_va, vpn << 12)
+            pg_end = min(block.src_va + block.nbytes, (vpn + 1) << 12)
+            nbytes = pg_end - pg_start
+            delay, interleaved = link.stream_page(nbytes, id(block))
+            self.loop.schedule(delay, transfer.dst_node.recv_page, block, i,
+                               block.round_id, interleaved, nbytes)
+            offset += nbytes
+        self._arm_timeout(block)
+
+    def _arm_timeout(self, block: Block) -> None:
+        if block.timeout_event is not None:
+            block.timeout_event.cancel()
+        block.timeout_event = self.loop.schedule(
+            self.cost.timeout_us, self._on_timeout, block, block.round_id)
+
+    def _on_timeout(self, block: Block, round_id: int) -> None:
+        if block.state is BlockState.DONE or round_id != block.round_id:
+            return
+        block.transfer.stats.timeouts += 1
+        self.loop.schedule(self.cost.retransmit_setup_us, self._dispatch,
+                           block, True)
+
+    # ------------------------------------------------------------- arrivals
+    def on_ack(self, block: Block, round_id: int) -> None:
+        if block.state is BlockState.DONE or round_id != block.round_id:
+            return
+        block.state = BlockState.DONE
+        if block.timeout_event is not None:
+            block.timeout_event.cancel()
+        self.pending.pop(block.tr_id, None)
+        transfer = block.transfer
+        transfer.done_blocks += 1
+        self._launch_next(transfer)
+        if transfer.complete:
+            transfer.stats.t_complete = (self.loop.now
+                                         + self.cost.completion_poll_us)
+            if transfer.on_complete is not None:
+                transfer.on_complete(transfer)
+
+    def on_nack(self, block: Block, round_id: int) -> None:
+        # thesis firmware change: pause instead of instant retransmit
+        if block.state is BlockState.DONE or round_id != block.round_id:
+            return
+        block.state = BlockState.PAUSED_DST
+
+    def on_mailbox(self, msg: RAPFMessage, stats: Optional[TransferStats]) -> None:
+        if msg.opcode != A.OPCODE_RAPF:
+            return
+        self.loop.schedule(self.cost.mailbox_poll_us, self._rapf_body, msg,
+                           stats)
+
+    def _rapf_body(self, msg: RAPFMessage, stats) -> None:
+        block = self.pending.get(msg.tr_id)
+        if block is None or block.state is BlockState.DONE:
+            return
+        if msg.seq_num != (block.seq_num & 0xFFF):
+            return  # stale/forged: dropped, as in the firmware listing
+        if msg.wired_pdid != block.transfer.pd:
+            return  # security check: wired PDID mismatch
+        block.transfer.stats.rapf_retransmits += 1
+        if block.timeout_event is not None:
+            block.timeout_event.cancel()
+        self.loop.schedule(self.cost.retransmit_setup_us, self._dispatch,
+                           block, True)
+
+    # ----------------------------------------------------------- utilities
+    def find_block_by_src_page(self, pd: int, vpn: int) -> Optional[Block]:
+        for block in self.pending.values():
+            if block.transfer.pd != pd:
+                continue
+            first = A.page_index(block.src_va)
+            last = A.page_index(block.src_va + block.nbytes - 1)
+            if first <= vpn <= last:
+                return block
+        return None

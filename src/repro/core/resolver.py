@@ -1,0 +1,124 @@
+"""Page-fault resolution strategies (thesis §3.2.1) + beyond-paper variants.
+
+* **TOUCH_A_PAGE** — the Netlink path: the driver sends one
+  :class:`~repro.core.addresses.NetlinkMessage` per fault; a user-space
+  library thread wakes, touches the *one* faulty page (CPU-MMU minor fault
+  does the paging-in), and — for destination faults — fires the RAPF
+  retransmit request through the packetizer.
+* **TOUCH_AHEAD** — the ``get_user_pages()`` path: the driver pages in up to
+  **4 pages** (the faulty one + the rest of its 16 KB block) entirely in
+  kernel space.  Per the thesis, the RAPF *still* needs the user-space hop
+  (the packetizer is only reachable from user space in the prototype).
+* **TOUCH_AHEAD_N** *(beyond paper)* — generalized lookahead.
+* **KERNEL_RAPF** *(beyond paper — the thesis' future-work item #1)* —
+  Touch-Ahead plus a kernel-space packetizer: no user-space hop at all.
+* **STREAM** *(beyond paper)* — sequential-stream prediction: on a fault at
+  page *p* of a transfer, also page in the first page of the *next* block so
+  the following block's fault never happens on the critical path.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+from repro.core.addresses import PAGES_PER_BLOCK
+from repro.core.costmodel import CostModel
+from repro.core.pagetable import PageTable, SegmentationFault
+
+
+class Strategy(enum.Enum):
+    TOUCH_A_PAGE = "touch_a_page"
+    TOUCH_AHEAD = "touch_ahead"
+    TOUCH_AHEAD_N = "touch_ahead_n"
+    KERNEL_RAPF = "kernel_rapf"
+    STREAM = "stream"
+
+
+@dataclasses.dataclass
+class Resolution:
+    """Outcome + cost split of resolving one fault entry."""
+    pages_resolved: int
+    kernel_us: float          # time on the driver CPU (tasklet)
+    user_us: float            # time on the user CPU (library thread)
+    rapf_from_kernel: bool    # RAPF sent without the user-space hop
+    segfault_recovered: bool = False
+    major: bool = False
+
+
+@dataclasses.dataclass
+class Resolver:
+    strategy: Strategy
+    cost: CostModel
+    lookahead: int = PAGES_PER_BLOCK     # for TOUCH_AHEAD_N / STREAM
+
+    def resolve(self, pt: PageTable, vpn: int, *, is_dst: bool,
+                block_pages_remaining: int) -> Resolution:
+        """Resolve the fault at ``vpn``; page in per the strategy.
+
+        ``block_pages_remaining`` bounds Touch-Ahead to the faulty page's
+        block (the thesis touches "the one that was faulty and the next
+        three after it", i.e. to the end of the 16 KB block).
+        """
+        s = self.strategy
+        if s is Strategy.TOUCH_A_PAGE:
+            return self._touch_a_page(pt, vpn, is_dst)
+        if s is Strategy.TOUCH_AHEAD:
+            return self._touch_ahead(pt, vpn, is_dst,
+                                     min(PAGES_PER_BLOCK, block_pages_remaining),
+                                     kernel_rapf=False, stream=False)
+        if s is Strategy.TOUCH_AHEAD_N:
+            return self._touch_ahead(pt, vpn, is_dst, self.lookahead,
+                                     kernel_rapf=False, stream=False)
+        if s is Strategy.KERNEL_RAPF:
+            return self._touch_ahead(pt, vpn, is_dst,
+                                     min(PAGES_PER_BLOCK, block_pages_remaining),
+                                     kernel_rapf=True, stream=False)
+        if s is Strategy.STREAM:
+            return self._touch_ahead(pt, vpn, is_dst, self.lookahead,
+                                     kernel_rapf=True, stream=True)
+        raise ValueError(s)
+
+    # ------------------------------------------------------------------
+    def _touch_a_page(self, pt: PageTable, vpn: int, is_dst: bool) -> Resolution:
+        c = self.cost
+        kernel = c.netlink_send_us
+        user = c.wakeup_us
+        seg = False
+        major = False
+        try:
+            major, _ = pt.touch(vpn)
+            user += c.touch_page_us + (c.major_fault_extra_us if major else 0.0)
+        except SegmentationFault:
+            # The Fig-3.2 scenario: the page left the address space between
+            # the fault and the touch; the library's sig_handler absorbs it.
+            user += c.sigsegv_recover_us
+            seg = True
+        if is_dst:
+            user += c.pckzer_to_mbox_us
+        return Resolution(pages_resolved=0 if seg else 1, kernel_us=kernel,
+                          user_us=user, rapf_from_kernel=False,
+                          segfault_recovered=seg, major=major)
+
+    def _touch_ahead(self, pt: PageTable, vpn: int, is_dst: bool,
+                     lookahead: int, *, kernel_rapf: bool,
+                     stream: bool) -> Resolution:
+        c = self.cost
+        n = pt.get_user_pages(vpn, max(1, lookahead), write=True)
+        kernel = c.gup_us(max(1, n))
+        user = 0.0
+        if stream and n:
+            # predictively warm the first page of the next block
+            extra = pt.get_user_pages(vpn + n, 1, write=True)
+            if extra:
+                kernel += c.gup_per_page_us
+                n += extra
+        if is_dst:
+            if kernel_rapf:
+                kernel += c.pckzer_to_mbox_us
+            else:
+                # prototype constraint: packetizer reachable from user space
+                kernel += c.netlink_send_us
+                user += c.wakeup_us + c.pckzer_to_mbox_us
+        return Resolution(pages_resolved=n, kernel_us=kernel, user_us=user,
+                          rapf_from_kernel=kernel_rapf)

@@ -1,0 +1,92 @@
+"""Deterministic discrete-event simulation kernel.
+
+Pure virtual time (microseconds, float).  No wall-clock, no randomness
+unless a seeded RNG is explicitly passed to a component — identical inputs
+give identical traces, which the property tests rely on.
+"""
+
+from __future__ import annotations
+
+import heapq
+import itertools
+from typing import Any, Callable, Optional
+
+
+class Event:
+    __slots__ = ("time", "seq", "fn", "args", "cancelled")
+
+    def __init__(self, time: float, seq: int, fn: Callable[..., Any], args: tuple):
+        self.time = time
+        self.seq = seq
+        self.fn = fn
+        self.args = args
+        self.cancelled = False
+
+    def cancel(self) -> None:
+        self.cancelled = True
+
+    def __lt__(self, other: "Event") -> bool:
+        return (self.time, self.seq) < (other.time, other.seq)
+
+
+class EventLoop:
+    def __init__(self):
+        self.now: float = 0.0
+        self._heap: list[Event] = []
+        self._seq = itertools.count()
+        self.events_processed = 0
+
+    def schedule(self, delay: float, fn: Callable[..., Any], *args: Any) -> Event:
+        assert delay >= 0, f"negative delay {delay}"
+        ev = Event(self.now + delay, next(self._seq), fn, args)
+        heapq.heappush(self._heap, ev)
+        return ev
+
+    def at(self, time: float, fn: Callable[..., Any], *args: Any) -> Event:
+        return self.schedule(max(0.0, time - self.now), fn, *args)
+
+    def run(self, until: Optional[float] = None, max_events: int = 50_000_000) -> None:
+        while self._heap and self.events_processed < max_events:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            if until is not None and ev.time > until:
+                heapq.heappush(self._heap, ev)
+                return
+            self.now = ev.time
+            self.events_processed += 1
+            ev.fn(*ev.args)
+        if self._heap and self.events_processed >= max_events:
+            raise RuntimeError("event budget exhausted — livelock?")
+
+    @property
+    def idle(self) -> bool:
+        return not any(not e.cancelled for e in self._heap)
+
+
+class Resource:
+    """A serially-occupied resource (a CPU core, a link).
+
+    ``reserve(duration)`` books the next available slot at or after *now*
+    and returns ``(start, end)``; callers schedule their completion events
+    at ``end``.  ``busy_overlap`` reports whether the reservation had to
+    queue — the link-interleaving signal used by the PLDMA model.
+    """
+
+    def __init__(self, loop: EventLoop, name: str = ""):
+        self.loop = loop
+        self.name = name
+        self.busy_until: float = 0.0
+        self.busy_time: float = 0.0
+        self.reservations = 0
+
+    def reserve(self, duration: float) -> tuple[float, float]:
+        start = max(self.loop.now, self.busy_until)
+        end = start + duration
+        self.busy_until = end
+        self.busy_time += duration
+        self.reservations += 1
+        return start, end
+
+    def would_queue(self) -> bool:
+        return self.busy_until > self.loop.now

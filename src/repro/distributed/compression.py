@@ -1,0 +1,92 @@
+"""Gradient compression for the DP all-reduce: error-feedback int8 + top-k.
+
+Both jittable and composable with ``jax.lax.psum``: compress → all-reduce
+the compact representation → decompress, with the quantization residual
+carried host-side per step (error feedback keeps the compressed SGD
+unbiased over time — tested for convergence in tests/test_distributed.py).
+
+At 512 chips the train_4k DP all-reduce is the dominant collective for
+the dense archs; int8 cuts those bytes 2× vs bf16 (4× vs f32), which is
+one of the §Perf levers for the collective-bound cells.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class Int8Compressed(NamedTuple):
+    values: Any      # int8 pytree
+    scales: Any      # f32 per-leaf scale
+
+
+def int8_compress(grads, residual=None):
+    """Error-feedback int8 quantization.  Returns (compressed, residual)."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def q(g, r):
+        gf = g.astype(jnp.float32) + r
+        scale = jnp.max(jnp.abs(gf)) / 127.0 + 1e-12
+        qv = jnp.clip(jnp.round(gf / scale), -127, 127).astype(jnp.int8)
+        new_r = gf - qv.astype(jnp.float32) * scale
+        return qv, scale, new_r
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    qs, scales, rs = zip(*[q(g, r) for g, r in zip(flat_g, flat_r)])
+    return (Int8Compressed(jax.tree_util.tree_unflatten(treedef, list(qs)),
+                           jax.tree_util.tree_unflatten(treedef,
+                                                        list(scales))),
+            jax.tree_util.tree_unflatten(treedef, list(rs)))
+
+
+def int8_decompress(comp: Int8Compressed):
+    return jax.tree_util.tree_map(
+        lambda v, s: v.astype(jnp.float32) * s, comp.values, comp.scales)
+
+
+def topk_compress(grads, k_fraction: float = 0.01, residual=None):
+    """Error-feedback top-k sparsification: keep the largest |g| entries."""
+    if residual is None:
+        residual = jax.tree_util.tree_map(
+            lambda g: jnp.zeros(g.shape, jnp.float32), grads)
+
+    def s(g, r):
+        gf = g.astype(jnp.float32) + r
+        flat = gf.reshape(-1)
+        k = max(1, int(flat.shape[0] * k_fraction))
+        _, idx = jax.lax.top_k(jnp.abs(flat), k)
+        vals = flat[idx]
+        kept = jnp.zeros_like(flat).at[idx].set(vals)
+        return (idx.astype(jnp.int32), vals), (gf - kept.reshape(gf.shape))
+
+    flat_g, treedef = jax.tree_util.tree_flatten(grads)
+    flat_r = jax.tree_util.tree_leaves(residual)
+    comps, rs = zip(*[s(g, r) for g, r in zip(flat_g, flat_r)])
+    return (jax.tree_util.tree_unflatten(treedef, list(comps)),
+            jax.tree_util.tree_unflatten(treedef, list(rs)))
+
+
+def topk_decompress(comp, shapes_like):
+    def d(c, like):
+        idx, vals = c
+        flat = jnp.zeros((int(jnp.size(like)),), jnp.float32)
+        flat = flat.at[idx].set(vals)
+        return flat.reshape(like.shape)
+    return jax.tree_util.tree_map(d, comp, shapes_like,
+                                  is_leaf=lambda x: isinstance(x, tuple)
+                                  and len(x) == 2
+                                  and not isinstance(x[0], tuple))
+
+
+def compressed_bytes(comp) -> int:
+    """Wire bytes of a compressed representation (for §Perf accounting)."""
+    total = 0
+    for leaf in jax.tree_util.tree_leaves(comp):
+        total += leaf.size * leaf.dtype.itemsize
+    return total

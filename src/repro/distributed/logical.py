@@ -1,0 +1,90 @@
+"""Logical-axis activation sharding (MaxText-style logical axis rules).
+
+Model code names its activation dims (``constrain(x, "batch", "seq",
+"heads", "head_dim")``); the launcher binds logical names to mesh axes per
+architecture (e.g. heads→'model' when divisible, else seq→'model' for
+context parallelism).  Outside a policy context ``constrain`` is a no-op,
+so tests/examples on 1 device pay nothing.
+
+Every binding is divisibility-checked against the actual dim, so one rule
+set serves all architectures (starcoder2's 24 heads silently fall back to
+whatever the launcher's rules name next).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+_STATE = threading.local()
+
+
+def _current() -> Optional[tuple]:
+    return getattr(_STATE, "policy", None)
+
+
+@contextlib.contextmanager
+def logical_rules(mesh: Mesh, rules: dict):
+    """rules: logical-name -> mesh-axis (str) | tuple | None."""
+    prev = _current()
+    _STATE.policy = (mesh, dict(rules))
+    try:
+        yield
+    finally:
+        _STATE.policy = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def spec_for(shape: tuple, names: tuple) -> Optional[P]:
+    pol = _current()
+    if pol is None:
+        return None
+    mesh, rules = pol
+    spec = []
+    used: set = set()
+    for dim, name in zip(shape, names):
+        ax = rules.get(name)
+        parts = tuple(ax) if isinstance(ax, (tuple, list)) else (ax,)
+        if ax is not None and not (used & set(parts)) \
+                and dim % _axis_size(mesh, ax) == 0 and dim > 0:
+            spec.append(ax)
+            used.update(parts)
+        else:
+            spec.append(None)
+    return P(*spec)
+
+
+def constrain(x, *names: str):
+    """Attach a sharding constraint per the active logical rules."""
+    if _current() is None:
+        return x
+    if len(names) != x.ndim:
+        return x
+    spec = spec_for(x.shape, names)
+    if spec is None or all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, spec)
+
+
+def current_mesh() -> Optional[Mesh]:
+    pol = _current()
+    return pol[0] if pol is not None else None
+
+
+def rule(name: str):
+    pol = _current()
+    if pol is None:
+        return None
+    return pol[1].get(name)

@@ -1,0 +1,253 @@
+"""Partition rules: params / inputs / caches → NamedSharding per mesh.
+
+Strategy (DESIGN.md §3):
+
+* batch → ``('pod', 'data')``; vocab/heads/FFN-hidden → ``'model'``;
+* MoE experts → ``'model'`` when divisible (EP), else TP inside experts;
+* KV pools: pages → ``'data'`` (sequence/page parallelism — this is what
+  makes ``long_500k`` shardable at batch 1), head_dim → ``'model'``;
+* ZeRO-3 option: params *additionally* sharded over ``('data',)`` on their
+  largest divisible dim (gathered per layer by XLA at use);
+* every rule is **divisibility-checked** per dim: axes that do not divide
+  are dropped (replicated) rather than failing — small KV-head counts
+  (starcoder2 kv=2) replicate under TP16 exactly as DESIGN.md prescribes.
+
+Rules are path-regex → dim-axis preferences, resolved against the actual
+leaf shapes, so one rule table covers all ten architectures.
+"""
+
+from __future__ import annotations
+
+import re
+from typing import Any, Optional
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# (path regex, per-dim axis preference from the LAST dim backwards)
+# each entry: list over dims (aligned to the *trailing* dims of the leaf)
+# of None | axis-name | tuple of axis names.
+_RULES: list[tuple[str, list]] = [
+    # embeddings / heads
+    (r"embed$",                 ["model", None]),          # (V, d): V->model
+    (r"pos_dec$",               [None, None]),
+    (r"lm_head$",               [None, "model"]),          # (d, V)
+    # attention projections
+    (r"(wq|wq_b)$",             [None, "model"]),
+    (r"(wk|wv|wkv_a|wq_a)$",    [None, "model"]),
+    (r"(wo)$",                  ["model", None]),
+    (r"(wk_b|wv_b)$",           [None, "model"]),
+    (r"(bq|bk|bv)$",            ["model"]),
+    # MLP
+    (r"(wi|wg)$",               [None, "model"]),
+    (r"mlp/wo$",                ["model", None]),
+    (r"(bi)$",                  ["model"]),
+    (r"(bo)$",                  [None]),
+    # MoE experts: (E, d, f) — EP on E if divisible, else TP on f
+    (r"moe/(wi|wg)$",           ["model", None, "model"]),
+    (r"moe/wo$",                ["model", None, "model"]),
+    (r"router$",                [None, None]),
+    (r"shared/(wi|wg)$",        [None, "model"]),
+    (r"shared/wo$",             ["model", None]),
+    # mamba / xlstm
+    (r"in_proj$",               [None, "model"]),
+    (r"out_proj$",              ["model", None]),
+    (r"(up|down|skip|wo_gate)$", [None, "model"]),
+    (r"down$",                  ["model", None]),
+    (r"(w_if|w_gates)$",        [None, "model"]),
+    (r"(ffn_wi)$",              [None, "model"]),
+    (r"(ffn_wo)$",              ["model", None]),
+    # everything else (norms, scalars, conv, gates): replicated
+]
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit_spec(shape: tuple, prefs: list, mesh: Mesh,
+              stacked: int = 0) -> P:
+    """Align dim preferences to trailing dims; drop non-dividing axes."""
+    ndims = len(shape)
+    spec: list = [None] * ndims
+    # prefs align to the trailing len(prefs) dims
+    for i, pref in enumerate(prefs):
+        dim = ndims - len(prefs) + i
+        if dim < stacked:      # never shard the stacked-layer axis
+            continue
+        if dim < 0 or pref is None:
+            continue
+        if shape[dim] % _axis_size(mesh, pref) == 0:
+            spec[dim] = pref
+    return P(*spec)
+
+
+def _moe_rule_fixup(path: str, shape: tuple, spec: P, mesh: Mesh) -> P:
+    """Experts axis: 2-D EP over (model × data) when the expert count
+    allows one-or-more experts per chip — expert weights then never need
+    a ZeRO gather (the §Perf deepseek iteration); else 1-D EP over
+    'model'; else TP on the hidden dim."""
+    if re.search(r"moe/(wi|wg|wo)$", path) and len(shape) >= 3:
+        e_dim = len(shape) - 3
+        model = mesh.shape.get("model", 1)
+        data = mesh.shape.get("data", 1)
+        new = list(spec)
+        if shape[e_dim] % (model * data) == 0:
+            new[e_dim] = ("model", "data")   # 2-D expert parallel
+            new[e_dim + 1] = None
+            new[e_dim + 2] = None
+        elif shape[e_dim] % model == 0:
+            new[e_dim] = "model"             # expert parallel
+            new[e_dim + 1] = None
+            new[e_dim + 2] = None
+        else:
+            new[e_dim] = None                # TP inside experts
+            if re.search(r"wo$", path):
+                new[e_dim + 1] = "model" if shape[e_dim + 1] % model == 0 \
+                    else None
+                new[e_dim + 2] = None
+            else:
+                new[e_dim + 1] = None
+                new[e_dim + 2] = "model" if shape[e_dim + 2] % model == 0 \
+                    else None
+        return P(*new)
+    return spec
+
+
+def _path_str(path) -> str:
+    parts = []
+    for p in path:
+        parts.append(str(getattr(p, "key", getattr(p, "idx", p))))
+    return "/".join(parts)
+
+
+def _is_stacked(path_str: str) -> int:
+    """Leading stacked-layer axes to skip (scan-over-layers params)."""
+    if re.search(r"(dense_layers|moe_layers|tail|seg\d+|dec_layers|"
+                 r"enc_layers|mtp)", path_str):
+        return 1
+    if re.search(r"groups", path_str):
+        return 2     # (G, k, ...) double-stacked
+    return 0
+
+
+def param_shardings(params_shapes, mesh: Mesh, *,
+                    zero3: bool = False) -> Any:
+    """ShapeDtypeStruct/array pytree -> NamedSharding pytree."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(params_shapes)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        stacked = _is_stacked(ps)
+        shape = tuple(leaf.shape)
+        spec = P()
+        for pat, prefs in _RULES:
+            if re.search(pat, ps):
+                spec = _fit_spec(shape, prefs, mesh, stacked=stacked)
+                break
+        else:
+            spec = P(*([None] * len(shape)))
+        spec = _moe_rule_fixup(ps, shape, spec, mesh)
+        if zero3:
+            spec = _zero3_augment(spec, shape, mesh, stacked)
+        out.append(NamedSharding(mesh, spec))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _zero3_augment(spec: P, shape: tuple, mesh: Mesh, stacked: int) -> P:
+    """Additionally shard the largest un-sharded dim over ('data',)
+    [+ ('pod',) if present] — FSDP-style parameter sharding."""
+    axes = [a for a in ("pod", "data") if a in mesh.shape]
+    if not axes:
+        return spec
+    # don't double-use an axis already consumed (2-D EP uses 'data')
+    used = set()
+    for s in spec:
+        for a in (s if isinstance(s, (tuple, list)) else (s,)):
+            used.add(a)
+    axes = [a for a in axes if a not in used]
+    if not axes:
+        return spec
+    factor = int(np.prod([mesh.shape[a] for a in axes]))
+    new = list(spec) + [None] * (len(shape) - len(spec))
+    # pick the largest free dim that divides
+    best, best_dim = 0, -1
+    for d in range(stacked, len(shape)):
+        if new[d] is None and shape[d] % factor == 0 and shape[d] > best:
+            best, best_dim = shape[d], d
+    if best_dim >= 0:
+        new[best_dim] = tuple(axes) if len(axes) > 1 else axes[0]
+    return P(*new)
+
+
+# ------------------------------------------------------------------ inputs
+def batch_spec(mesh: Mesh) -> P:
+    axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    return P(axes if len(axes) > 1 else axes[0] if axes else None)
+
+
+def token_sharding(mesh: Mesh, *, shardable_batch: bool = True):
+    """(B, S) tokens: batch over ('pod','data') when divisible."""
+    if not shardable_batch:
+        return NamedSharding(mesh, P(None, None))
+    return NamedSharding(mesh, P(batch_spec(mesh)[0], None))
+
+
+def cache_shardings(cache_shapes, mesh: Mesh, batch: int) -> Any:
+    """Decode-cache pytree -> shardings.
+
+    Pools (no batch dim): pages -> 'data', trailing feature dim ->
+    'model' when divisible.  Batched state leaves: batch -> ('pod','data')
+    when divisible, else replicate (long_500k batch=1 path: pages carry
+    the parallelism instead — SP).
+    """
+    daxes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    dsize = int(np.prod([mesh.shape[a] for a in daxes])) if daxes else 1
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_shapes)
+    out = []
+    for path, leaf in flat:
+        ps = _path_str(path)
+        shape = tuple(leaf.shape)
+        spec = [None] * len(shape)
+        if "pool" in ps:
+            # (L, P, page, [KVH,] feat): pages over data axes; heads (or
+            # else feat) over model — matching the shard_map decode region
+            if len(shape) >= 2 and shape[1] % dsize == 0 and dsize > 1:
+                spec[1] = daxes if len(daxes) > 1 else daxes[0]
+            msz = mesh.shape.get("model", 1)
+            if len(shape) >= 5 and shape[-2] % msz == 0:
+                spec[-2] = "model"
+            elif len(shape) >= 4 and shape[-1] % msz == 0:
+                spec[-1] = "model"
+        elif "table" in ps or ps == "lengths":
+            pass   # small int arrays: replicated
+        else:
+            # batched state (L, B, ...) or (B, ...)
+            bdim = 1 if (len(shape) > 1 and shape[0] != batch
+                         and shape[1] == batch) else 0
+            if shape[bdim] == batch and batch % dsize == 0 and dsize > 1:
+                spec[bdim] = daxes if len(daxes) > 1 else daxes[0]
+            if len(shape) >= 3 and shape[-1] % mesh.shape.get("model", 1) == 0:
+                spec[-1] = "model"
+        out.append(NamedSharding(mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def opt_state_shardings(opt_shapes, param_shardings_tree, mesh: Mesh) -> Any:
+    """Optimizer moments follow their parameters; step is replicated."""
+    import repro.optim.adamw as adamw
+
+    def like(shapes, shardings):
+        return jax.tree_util.tree_map(
+            lambda s, sh: sh, shapes, shardings)
+
+    return adamw.AdamWState(
+        step=NamedSharding(mesh, P()),
+        mu=like(opt_shapes.mu, param_shardings_tree),
+        nu=like(opt_shapes.nu, param_shardings_tree),
+    )

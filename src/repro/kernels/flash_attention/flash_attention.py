@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: blocked causal flash attention (prefill/train path).
+
+Grid ``(B, H, n_q_blocks, n_kv_blocks)`` — the kv axis is innermost and
+sequential, carrying online-softmax accumulators in VMEM scratch.  Causal
+blocks entirely above the diagonal are skipped with ``pl.when`` (no MXU
+work issued), which is the 2× triangle saving; sliding-window blocks fully
+outside the window are likewise skipped.
+
+Block shapes default to (128 q × 128 kv) tiles over head_dim lanes —
+multiples of the MXU (128×128) and the (8,128) bf16 VMEM tile.  GQA is
+handled in the k/v index_map: query head h reads kv head h // group.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+            bq: int, bk: int, n_kv: int, window: int, causal: bool,
+            scale: float, seq_len: int):
+    i = pl.program_id(2)
+    j = pl.program_id(3)
+
+    @pl.when(j == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = i * bq
+    k_start = j * bk
+    # skip blocks fully above the causal diagonal / outside the window
+    needed = True
+    if causal:
+        needed = k_start <= q_start + bq - 1
+    if window > 0:
+        needed = needed & (q_start - (k_start + bk - 1) < window)
+
+    @pl.when(needed)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)     # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)     # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = k_pos < seq_len
+        if causal:
+            mask &= q_pos >= k_pos
+        if window > 0:
+            mask &= (q_pos - k_pos) < window
+        s = jnp.where(mask, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1)[:, None])
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)[:, None]
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(j == n_kv - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def flash_attention_kernel(q, k, v, *, causal: bool = True, window: int = 0,
+                           block_q: int = 128, block_k: int = 128,
+                           interpret: bool = False):
+    """q: (B, H, S, D); k, v: (B, KVH, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    pad_q = (-S) % bq
+    pad_k = (-S) % bk
+    if pad_q:
+        q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
+    if pad_k:
+        k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
+    nq = q.shape[2] // bq
+    nk = k.shape[2] // bk
+    grid = (B, H, nq, nk)
+
+    kernel = functools.partial(_kernel, bq=bq, bk=bk, n_kv=nk, window=window,
+                               causal=causal, scale=1.0 / math.sqrt(D),
+                               seq_len=S)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((bq, D), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)
+    return out[:, :, :S] if pad_q else out

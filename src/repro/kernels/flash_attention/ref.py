@@ -1,0 +1,29 @@
+"""Pure-jnp oracle for the flash-attention kernel (kernel layout)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B, H, S, D); k, v: (B, KVH, S, D) -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    KVH = k.shape[1]
+    G = H // KVH
+    qh = q.reshape(B, KVH, G, S, D).astype(jnp.float32)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qh,
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    q_pos = jnp.arange(S)[:, None]
+    k_pos = jnp.arange(S)[None, :]
+    mask = jnp.ones((S, S), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window > 0:
+        mask &= (q_pos - k_pos) < window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return out.reshape(B, H, S, D).astype(q.dtype)

@@ -1,0 +1,32 @@
+"""jit'd wrappers for page gather/scatter (flattened page payloads)."""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+
+from repro.kernels.page_pack.page_pack import page_gather, page_scatter
+
+
+def _default_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def gather_pages(pool, indices, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    flat = pool.reshape(pool.shape[0], -1)
+    out = page_gather(flat, indices, interpret=interpret)
+    return out.reshape((indices.shape[0],) + pool.shape[1:])
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",), donate_argnums=(0,))
+def scatter_pages(pool, indices, block, *, interpret: bool | None = None):
+    if interpret is None:
+        interpret = _default_interpret()
+    flat = pool.reshape(pool.shape[0], -1)
+    blk = block.reshape(block.shape[0], -1)
+    out = page_scatter(flat, indices, blk, interpret=interpret)
+    return out.reshape(pool.shape)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracles for page gather/scatter."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def page_gather_ref(pool, indices):
+    return jnp.take(pool, jnp.maximum(indices, 0), axis=0)
+
+
+def page_scatter_ref(pool, indices, block):
+    return pool.at[jnp.maximum(indices, 0)].set(block)

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: decode attention through a KV page table.
+
+This is the hardware hot spot of the thesis' technique on TPU: the page
+table (the SMMU of our adaptation) is a **scalar-prefetch** operand, and
+the per-page translation happens in the BlockSpec ``index_map`` — each grid
+step DMAs exactly one (page_tokens × head_dim) K/V tile from the HBM frame
+pool into VMEM, so non-contiguous ("virtually addressed") context reads
+never materialize a gathered copy.
+
+Grid: ``(batch, kv_heads, n_pages)`` with the page axis innermost —
+sequential on TPU, carrying the online-softmax accumulators in VMEM
+scratch.  Block shapes keep the MXU happy: the (G × page) score tile is a
+multiple of (8, 128) for bf16 at the production page size (256 tokens).
+
+Index-map translation == the SMMU walk; an unmapped page (table entry -1)
+is clamped to frame 0 and masked out of the softmax — the compiled step
+never faults, because the runtime (serving engine) resolves residency
+*before* dispatch, exactly where the thesis puts its driver.
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _kernel(page_table_ref, lengths_ref,          # scalar-prefetch operands
+            q_ref, k_ref, v_ref,                  # VMEM tiles
+            o_ref,                                # output tile
+            acc_ref, m_ref, l_ref,                # VMEM scratch
+            *, page_tokens: int, n_pages: int, window: int, scale: float):
+    b = pl.program_id(0)
+    i = pl.program_id(2)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32)            # (G, D)
+    k = k_ref[0, 0].astype(jnp.float32)            # (ps, D)
+    v = v_ref[0, 0].astype(jnp.float32)            # (ps, D)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    length = lengths_ref[b]
+    mapped = page_table_ref[b, i] >= 0
+    pos = i * page_tokens + jax.lax.broadcasted_iota(jnp.int32,
+                                                     (1, page_tokens), 1)
+    valid = (pos < length) & mapped
+    if window > 0:
+        valid &= (length - 1 - pos) < window
+    s = jnp.where(valid, s, NEG_INF)               # (G, ps) via broadcast
+
+    m_prev = m_ref[...]
+    l_prev = l_ref[...]
+    m_cur = jnp.max(s, axis=1)[:, None]            # (G, 1)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                         # (G, ps)
+    corr = jnp.exp(m_prev - m_new)                 # (G, 1)
+    l_ref[...] = l_prev * corr + jnp.sum(p, axis=1)[:, None]
+    pv = jax.lax.dot_general(p, v, (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr + pv
+    m_ref[...] = m_new
+
+    @pl.when(i == n_pages - 1)
+    def _finish():
+        out = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = out.astype(o_ref.dtype)
+
+
+def paged_attention_kernel(q, k_pool, v_pool, page_table, lengths, *,
+                           window: int = 0, interpret: bool = False):
+    """q: (B, KVH, G, D); k/v_pool: (KVH, P, ps, D); page_table: (B, NP).
+
+    Returns (B, KVH, G, D).  See ops.py for the model-layout wrapper.
+    """
+    B, KVH, G, D = q.shape
+    _, P, ps, _ = k_pool.shape
+    n_pages = page_table.shape[1]
+    scale = 1.0 / math.sqrt(D)
+
+    grid = (B, KVH, n_pages)
+
+    def q_map(b, h, i, pt, ln):
+        return (b, h, 0, 0)
+
+    def kv_map(b, h, i, pt, ln):
+        frame = jnp.maximum(pt[b, i], 0)    # clamp unmapped; masked in-kernel
+        return (h, frame, 0, 0)
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, G, D), q_map),
+            pl.BlockSpec((1, 1, ps, D), kv_map),
+            pl.BlockSpec((1, 1, ps, D), kv_map),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, D), q_map),
+        scratch_shapes=[
+            pltpu.VMEM((G, D), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+    )
+    kernel = functools.partial(_kernel, page_tokens=ps, n_pages=n_pages,
+                               window=window, scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, KVH, G, D), q.dtype),
+        interpret=interpret,
+    )(page_table, lengths, q, k_pool, v_pool)

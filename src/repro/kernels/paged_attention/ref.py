@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the paged-attention kernel (materializing gather)."""
+
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pool, v_pool, page_table, lengths, *,
+                        window: int = 0):
+    """q: (B, KVH, G, D); k/v_pool: (KVH, P, ps, D); page_table: (B, NP).
+
+    Gathers the full context per sequence (jnp.take) and runs a plain
+    masked softmax — O(B·S) memory, small-shape testing only.
+    """
+    B, KVH, G, D = q.shape
+    _, P, ps, _ = k_pool.shape
+    NP = page_table.shape[1]
+    safe = jnp.maximum(page_table, 0)                       # (B, NP)
+    k = jnp.take(k_pool, safe, axis=1)                      # (KVH, B, NP, ps, D)
+    v = jnp.take(v_pool, safe, axis=1)
+    k = k.transpose(1, 0, 2, 3, 4).reshape(B, KVH, NP * ps, D)
+    v = v.transpose(1, 0, 2, 3, 4).reshape(B, KVH, NP * ps, D)
+
+    s = jnp.einsum("bhgd,bhkd->bhgk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) / math.sqrt(D)
+    pos = jnp.arange(NP * ps)
+    valid = pos[None, :] < lengths[:, None]                 # (B, S)
+    mapped = jnp.repeat(page_table >= 0, ps, axis=1)
+    valid = valid & mapped
+    if window > 0:
+        valid = valid & ((lengths[:, None] - 1 - pos[None, :]) < window)
+    s = jnp.where(valid[:, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bhkd->bhgd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

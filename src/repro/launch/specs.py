@@ -1,0 +1,74 @@
+"""input_specs(): ShapeDtypeStruct stand-ins for every model input.
+
+Weak-type-correct, shardable, no device allocation — the dry-run lowers
+against these.  For training that is {tokens, labels} (+ stub frame
+embeddings for the [audio] arch); for decode it is the token batch plus
+the full decode-cache pytree obtained via ``jax.eval_shape`` over
+``init_decode_cache`` (still no allocation).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.shapes import Shape
+from repro.models.config import ModelConfig
+from repro.models.registry import model_for
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+@dataclasses.dataclass
+class SpecBundle:
+    kind: str                      # train | prefill | decode
+    args: tuple                    # positional arg specs for the step fn
+    cache: Any = None              # decode-cache spec pytree (decode only)
+
+
+def train_specs(cfg: ModelConfig, shape: Shape) -> SpecBundle:
+    B, S = shape.global_batch, shape.seq_len
+    args = [_sds((B, S), jnp.int32), _sds((B, S), jnp.int32)]
+    if cfg.is_encdec:
+        args.append(_sds((B, cfg.max_source_positions, cfg.d_model),
+                         jnp.bfloat16 if cfg.dtype == "bfloat16"
+                         else jnp.float32))
+    return SpecBundle("train", tuple(args))
+
+
+def prefill_specs(cfg: ModelConfig, shape: Shape) -> SpecBundle:
+    B, S = shape.global_batch, shape.seq_len
+    args = [_sds((B, S), jnp.int32)]
+    if cfg.is_encdec:
+        args.append(_sds((B, cfg.max_source_positions, cfg.d_model),
+                         jnp.bfloat16 if cfg.dtype == "bfloat16"
+                         else jnp.float32))
+    return SpecBundle("prefill", tuple(args))
+
+
+def decode_specs(cfg: ModelConfig, shape: Shape) -> SpecBundle:
+    B, S = shape.global_batch, shape.seq_len
+    model = model_for(cfg)
+    cache_spec = jax.eval_shape(
+        lambda: model.init_decode_cache(cfg, B, S))
+    tokens = _sds((B, 1), jnp.int32)
+    return SpecBundle("decode", (tokens,), cache=cache_spec)
+
+
+def input_specs(cfg: ModelConfig, shape: Shape) -> SpecBundle:
+    if shape.kind == "train":
+        return train_specs(cfg, shape)
+    if shape.kind == "prefill":
+        return prefill_specs(cfg, shape)
+    return decode_specs(cfg, shape)
+
+
+def params_specs(cfg: ModelConfig):
+    model = model_for(cfg)
+    key = jax.random.PRNGKey(0)
+    return jax.eval_shape(lambda: model.init_params(cfg, key))

@@ -1,0 +1,157 @@
+"""Paged KV-cache manager for serving: allocation, spill, fault handling.
+
+The device pools handed to the compiled decode step are fixed-size frame
+pools; this manager owns the *page tables* mapping (sequence, page-slot) →
+frame.  When the pool is exhausted, cold pages of preempted/idle sequences
+spill to the host pool; re-activating a sequence faults its pages back in
+with the thesis' Touch-Ahead (block) granularity.
+
+The compiled step never sees a fault: like the thesis' driver, residency
+is resolved on the control plane before dispatch, and the step's page
+table only ever names resident frames (unmapped tail slots are -1 and
+masked inside the kernel).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import numpy as np
+
+from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
+from repro.core.resolver import Strategy
+
+FREE = -1
+
+
+@dataclasses.dataclass
+class KVStats:
+    allocs: int = 0
+    spills: int = 0
+    fault_page_ins: int = 0
+    fault_events: int = 0
+    simulated_us: float = 0.0
+
+
+class PagedKVManager:
+    """Frame allocator + per-sequence page tables (one per layer-group)."""
+
+    def __init__(self, n_frames: int, page_tokens: int, max_pages_per_seq: int,
+                 strategy: Strategy = Strategy.TOUCH_AHEAD, lookahead: int = 4,
+                 cost: CostModel = DEFAULT_COST_MODEL):
+        self.n_frames = n_frames
+        self.page_tokens = page_tokens
+        self.max_pages = max_pages_per_seq
+        self.strategy = strategy
+        self.lookahead = lookahead
+        self.cost = cost
+        self.stats = KVStats()
+        self.free = list(range(n_frames - 1, -1, -1))
+        # seq_id -> np.array(max_pages) of frame ids / FREE
+        self.tables: dict[int, np.ndarray] = {}
+        self.lengths: dict[int, int] = {}
+        # host-spilled pages: (seq, slot) -> True (payload handled by the
+        # engine's PagedTensorStore; here we track residency control state)
+        self.spilled: dict[int, set[int]] = {}
+
+    # ------------------------------------------------------------ sequences
+    def add_sequence(self, seq_id: int) -> None:
+        self.tables[seq_id] = np.full((self.max_pages,), FREE, np.int64)
+        self.lengths[seq_id] = 0
+        self.spilled[seq_id] = set()
+        self.stats.allocs += 1
+
+    def free_sequence(self, seq_id: int) -> None:
+        for f in self.tables.pop(seq_id):
+            if f >= 0:
+                self.free.append(int(f))
+        self.lengths.pop(seq_id, None)
+        self.spilled.pop(seq_id, None)
+
+    # ------------------------------------------------------------- growing
+    def append_tokens(self, seq_id: int, n: int,
+                      spill_candidates: Optional[list[int]] = None) -> None:
+        """Extend a sequence by n tokens, allocating pages on demand."""
+        new_len = self.lengths[seq_id] + n
+        needed = -(-new_len // self.page_tokens)
+        table = self.tables[seq_id]
+        for slot in range(needed):
+            if table[slot] == FREE and slot not in self.spilled[seq_id]:
+                table[slot] = self._alloc_frame(seq_id, spill_candidates)
+        self.lengths[seq_id] = new_len
+
+    def _alloc_frame(self, for_seq: int,
+                     spill_candidates: Optional[list[int]]) -> int:
+        if self.free:
+            return self.free.pop()
+        # pool exhausted: spill the coldest page of an inactive sequence
+        victims = spill_candidates if spill_candidates else \
+            [s for s in self.tables if s != for_seq]
+        for v in victims:
+            tbl = self.tables.get(v)
+            if tbl is None:
+                continue
+            resident = np.where(tbl >= 0)[0]
+            if len(resident):
+                slot = int(resident[-1])
+                frame = int(tbl[slot])
+                tbl[slot] = FREE
+                self.spilled[v].add(slot)
+                self.stats.spills += 1
+                self.stats.simulated_us += self.cost.touch_page_us
+                return frame
+        raise MemoryError("KV pool exhausted with no spill candidates "
+                          "(all sequences active == all pages pinned)")
+
+    # --------------------------------------------------------------- faults
+    def ensure_resident(self, seq_id: int,
+                        spill_candidates: Optional[list[int]] = None) -> int:
+        """Resolve all spilled pages of a sequence before dispatch.
+
+        Returns the number of pages faulted back in.  Touch-Ahead pages in
+        ``lookahead``-page blocks (one fault event per block — the 16 KB
+        block of the thesis); Touch-A-Page pays one event per page.
+        """
+        spilled = sorted(self.spilled[seq_id])
+        if not spilled:
+            return 0
+        table = self.tables[seq_id]
+        c = self.cost
+        n_in = 0
+        if self.strategy is Strategy.TOUCH_A_PAGE:
+            for slot in spilled:
+                table[slot] = self._alloc_frame(seq_id, spill_candidates)
+                self.spilled[seq_id].discard(slot)
+                self.stats.fault_events += 1
+                self.stats.simulated_us += (c.netlink_send_us + c.wakeup_us
+                                            + c.touch_page_us)
+                n_in += 1
+        else:
+            i = 0
+            while i < len(spilled):
+                block = spilled[i:i + self.lookahead]
+                for slot in block:
+                    table[slot] = self._alloc_frame(seq_id, spill_candidates)
+                    self.spilled[seq_id].discard(slot)
+                self.stats.fault_events += 1
+                self.stats.simulated_us += c.gup_us(len(block))
+                n_in += len(block)
+                i += self.lookahead
+        self.stats.fault_page_ins += n_in
+        return n_in
+
+    # ---------------------------------------------------------------- views
+    def device_table(self, seq_ids: list[int]) -> np.ndarray:
+        """(B, max_pages) int32 page table for the compiled step."""
+        out = np.full((len(seq_ids), self.max_pages), FREE, np.int32)
+        for i, s in enumerate(seq_ids):
+            out[i] = self.tables[s]
+        return out
+
+    def batch_lengths(self, seq_ids: list[int]) -> np.ndarray:
+        return np.asarray([self.lengths[s] for s in seq_ids], np.int32)
+
+    @property
+    def frames_used(self) -> int:
+        return self.n_frames - len(self.free)

@@ -1,0 +1,217 @@
+"""Memory-efficient attention in pure JAX (the XLA fallback data plane).
+
+Three implementations, all GQA-aware, fp32 accumulation:
+
+* :func:`mha_reference` — materializes the score matrix; the oracle for
+  tests and the Pallas kernels' ``ref.py``.
+* :func:`flash_attention_xla` — double-chunked online-softmax attention
+  (scan over q chunks × scan over kv chunks).  This is what prefill_32k
+  lowers to when the Pallas kernel is disabled: peak memory is
+  O(q_chunk × kv_chunk) instead of O(S²).
+* :func:`paged_attention_xla` — decode attention that reads K/V through a
+  **page table** (the virtual-address access of the thesis, on the KV
+  cache): scan over page slots, gathering one page per step from the frame
+  pool.  Never materializes the (B, S) context.
+
+Sliding-window (SWA) masking supported everywhere — the window is what
+bounds the *resident* page set for long_500k (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+import functools
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _gqa_split(q, n_kv: int):
+    """(B, S, H, D) -> (B, S, KVH, G, D)."""
+    B, S, H, D = q.shape
+    return q.reshape(B, S, n_kv, H // n_kv, D)
+
+
+def mha_reference(q, k, v, *, causal: bool = True, window: int = 0,
+                  q_offset: int = 0, lengths=None):
+    """Materializing attention oracle.
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KVH, D); q_offset: absolute position of
+    q[0] (for decode, q_offset = context_len - Sq).  lengths: (B,) valid
+    prefix of k/v.
+    """
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    qh = _gqa_split(q, KVH).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    scores = jnp.einsum("bqhgd,bkhd->bhgqk", qh, kf) / math.sqrt(D)
+    q_pos = q_offset + jnp.arange(Sq)
+    k_pos = jnp.arange(k.shape[1])
+    mask = jnp.ones((Sq, k.shape[1]), bool)
+    if causal:
+        mask &= q_pos[:, None] >= k_pos[None, :]
+    if window > 0:
+        mask &= (q_pos[:, None] - k_pos[None, :]) < window
+    mask = mask[None, None, None]
+    if lengths is not None:
+        mask = mask & (k_pos[None, :] < lengths[:, None])[:, None, None, None]
+    scores = jnp.where(mask, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("bhgqk,bkhd->bqhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Sq, H, D).astype(q.dtype)
+
+
+def _pad_to(x, axis: int, multiple: int):
+    n = x.shape[axis]
+    pad = (-n) % multiple
+    if pad == 0:
+        return x, n
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths), n
+
+
+def flash_attention_xla(q, k, v, *, causal: bool = True, window: int = 0,
+                        q_chunk: int = 512, kv_chunk: int = 512,
+                        q_offset: int = 0):
+    """Chunked flash attention (pure lax.scan over KV, no Pallas).
+
+    q: (B, Sq, H, D); k, v: (B, Sk, KVH, D).
+
+    Structure chosen for GSPMD friendliness (see DESIGN.md §3):
+    * all q chunks are processed **in parallel** (the chunk axis folds into
+      the batch of the einsum) so sequence-sharded q — context parallelism
+      for archs whose head count does not divide the TP axis — actually
+      runs data-parallel instead of serializing through a scan;
+    * GQA expands K/V to the full head count **per KV chunk** (a (B, Ck,
+      H, D) transient), keeping every einsum a plain 4-D MHA contraction:
+      no 5-D grouped reshapes for GSPMD to re-layout, no contractions over
+      a sharded head_dim (those all-reduce a score tile per chunk pair —
+      the failure mode the first dry-run exposed).
+
+    Peak live memory per kv step: one (B × Sq_local × H × kv_chunk) f32
+    score tile.
+    """
+    B, Sq, H, D = q.shape
+    KVH = k.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    kv_chunk = min(kv_chunk, k.shape[1])
+
+    kp, Sk0 = _pad_to(k, 1, kv_chunk)
+    vp, _ = _pad_to(v, 1, kv_chunk)
+    nk = kp.shape[1] // kv_chunk
+
+    kb = kp.reshape(B, nk, kv_chunk, KVH, D).transpose(1, 0, 2, 3, 4)
+    vb = vp.reshape(B, nk, kv_chunk, KVH, D).transpose(1, 0, 2, 3, 4)
+    kv_pos = jnp.arange(kp.shape[1]).reshape(nk, kv_chunk)
+    k_valid = (jnp.arange(kp.shape[1]) < Sk0).reshape(nk, kv_chunk)
+
+    q_pos = q_offset + jnp.arange(Sq)
+    qf = q.astype(jnp.float32) * scale
+
+    def kv_step(carry, kv_inp):
+        m, l, acc = carry
+        kj, k_blk, v_blk = kv_inp                  # (B, Ck, KVH, D)
+        if G > 1:   # GQA: expand to full heads for this chunk only
+            k_blk = jnp.repeat(k_blk, G, axis=2)
+            v_blk = jnp.repeat(v_blk, G, axis=2)
+        kf = k_blk.astype(jnp.float32)
+        s = jnp.einsum("bqhd,bkhd->bhqk", qf, kf)   # (B, H, Sq, Ck)
+        k_p = kv_pos[kj]
+        mask = k_valid[kj][None, :]
+        if causal:
+            mask = mask & (q_pos[:, None] >= k_p[None, :])
+        if window > 0:
+            mask = mask & ((q_pos[:, None] - k_p[None, :]) < window)
+        s = jnp.where(mask[None, None], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhqk,bkhd->bhqd", p, v_blk.astype(jnp.float32))
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, H, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, H, Sq), jnp.float32)
+    a0 = jnp.zeros((B, H, Sq, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                  (jnp.arange(nk), kb, vb))
+    out = acc / jnp.maximum(l[..., None], 1e-30)    # (B, H, Sq, D)
+    return out.transpose(0, 2, 1, 3).astype(q.dtype)
+
+
+def paged_attention_xla(q, k_pool, v_pool, page_table, lengths, *,
+                        window: int = 0):
+    """Decode attention through a KV page table (one token per sequence).
+
+    q:          (B, H, D)
+    k/v_pool:   (P, page_tokens, KVH, D) — the shared frame pool
+    page_table: (B, max_pages) int32, -1 = unmapped (a "page fault" at the
+                runtime layer; the compiled step only ever sees resident
+                frames — the serving engine guarantees it, thesis-style)
+    lengths:    (B,) context length per sequence
+    """
+    B, H, D = q.shape
+    P, ps, KVH, _ = k_pool.shape
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    max_pages = page_table.shape[1]
+    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * scale
+
+    def page_step(carry, j):
+        m, l, acc = carry
+        idx = page_table[:, j]                       # (B,)
+        safe = jnp.maximum(idx, 0)
+        k_pg = k_pool[safe].astype(jnp.float32)       # (B, ps, KVH, D)
+        v_pg = v_pool[safe].astype(jnp.float32)
+        s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_pg)   # (B, KVH, G, ps)
+        pos = j * ps + jnp.arange(ps)                 # absolute positions
+        valid = (pos[None, :] < lengths[:, None]) & (idx >= 0)[:, None]
+        if window > 0:
+            valid = valid & ((lengths[:, None] - 1 - pos[None, :]) < window)
+        s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l_new = l * corr + p.sum(axis=-1)
+        pv = jnp.einsum("bhgk,bkhd->bhgd", p, v_pg)
+        acc_new = acc * corr[..., None] + pv
+        return (m_new, l_new, acc_new), None
+
+    m0 = jnp.full((B, KVH, G), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KVH, G), jnp.float32)
+    a0 = jnp.zeros((B, KVH, G, D), jnp.float32)
+    (m, l, acc), _ = jax.lax.scan(page_step, (m0, l0, a0),
+                                  jnp.arange(max_pages))
+    out = acc / jnp.maximum(l[..., None], 1e-30)
+    return out.reshape(B, H, D).astype(q.dtype)
+
+
+def ring_buffer_attention(q, k_ring, v_ring, cur_len, window: int):
+    """Decode attention over a sliding-window ring buffer.
+
+    q: (B, H, D); k/v_ring: (B, W, KVH, D); cur_len: (B,) tokens seen so
+    far (ring holds the last min(cur_len, W) of them, written mod W).
+    """
+    B, H, D = q.shape
+    W = k_ring.shape[1]
+    KVH = k_ring.shape[2]
+    G = H // KVH
+    scale = 1.0 / math.sqrt(D)
+    qf = q.reshape(B, KVH, G, D).astype(jnp.float32) * scale
+    s = jnp.einsum("bhgd,bkhd->bhgk", qf, k_ring.astype(jnp.float32))
+    slot = jnp.arange(W)[None, :]
+    n_valid = jnp.minimum(cur_len, W)[:, None]
+    # slot w holds position p where p % W == w and p >= cur_len - n_valid
+    valid = slot < n_valid * 0 + n_valid  # (B, W): slots 0..n_valid-1 used
+    # when cur_len > W the ring wraps, but all W slots are valid
+    valid = jnp.where(cur_len[:, None] >= W, jnp.ones_like(valid, bool), valid)
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    out = jnp.einsum("bhgk,bkhd->bhgd", p, v_ring.astype(jnp.float32))
+    return out.reshape(B, H, D).astype(q.dtype)

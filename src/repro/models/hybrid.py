@@ -1,0 +1,190 @@
+"""Zamba2-style hybrid: Mamba2 backbone + one *shared* attention block.
+
+Layout (attn_every = k): the L Mamba2 blocks are split into groups of k;
+after each full group the single shared transformer block (attention + MLP,
+one weight set reused at every application) runs.  L = 81, k = 6 gives 13
+shared-attention applications plus a 3-block tail.
+
+Decode state = per-layer Mamba2 (ssm, conv) states (tiny, pinned) + one
+paged KV pool per shared-attention *application site* (13 sites share
+weights but not caches) — the pinned-vs-paged contrast of DESIGN.md §4.
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import mamba as mamba_mod
+from repro.models.attention import (apply_attention,
+                                    apply_attention_decode_paged,
+                                    init_attention)
+from repro.models.config import ModelConfig
+from repro.models.decoder import _identity_page_table, _stack
+from repro.models.layers import (apply_mlp, apply_norm, dense_init, dtype_of,
+                                 embed_init, init_mlp, init_norm)
+
+
+def group_layout(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_groups, group_size, tail)."""
+    k = max(1, cfg.attn_every)
+    n_groups = cfg.n_layers // k
+    tail = cfg.n_layers - n_groups * k
+    return n_groups, k, tail
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.dtype)
+    n_groups, k, tail = group_layout(cfg)
+    keys = jax.random.split(key, cfg.n_layers + 4)
+    mamba_layers = [
+        {"norm": init_norm(cfg.d_model, cfg.norm),
+         "mamba": mamba_mod.init_mamba(keys[i], cfg, dtype)}
+        for i in range(cfg.n_layers)]
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[-1], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+        "lm_head": dense_init(keys[-2], cfg.d_model, cfg.vocab_size, dtype),
+        "groups": _stack([_stack(mamba_layers[g * k:(g + 1) * k])
+                          for g in range(n_groups)]),   # (G, k, ...)
+        "shared": {
+            "norm1": init_norm(cfg.d_model, cfg.norm),
+            "attn": init_attention(keys[-3], cfg, dtype),
+            "norm2": init_norm(cfg.d_model, cfg.norm),
+            "mlp": init_mlp(keys[-4], cfg.d_model, cfg.d_ff, cfg.act, dtype),
+        },
+    }
+    if tail:
+        params["tail"] = _stack(mamba_layers[n_groups * k:])
+    return params
+
+
+def _mamba_layer(lp, cfg, x, chunk):
+    h = apply_norm(lp["norm"], x, cfg.norm, cfg.norm_eps)
+    return x + mamba_mod.apply_mamba(lp["mamba"], cfg, h, chunk=chunk)
+
+
+def _shared_attn(sp, cfg, x, positions, q_chunk, kv_chunk):
+    h = apply_norm(sp["norm1"], x, cfg.norm, cfg.norm_eps)
+    x = x + apply_attention(sp["attn"], cfg, h, positions, q_chunk=q_chunk,
+                            kv_chunk=kv_chunk)
+    h = apply_norm(sp["norm2"], x, cfg.norm, cfg.norm_eps)
+    return x + apply_mlp(sp["mlp"], h, cfg.act)
+
+
+def forward(params, cfg: ModelConfig, tokens, *, q_chunk: int = 512,
+            kv_chunk: int = 512, ssm_chunk: int = 128,
+            embeddings=None, remat: bool = False):
+    x = params["embed"][tokens] if embeddings is None else embeddings
+    B, S = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    def group_body(x, glp):
+        def layer_body(x, lp):
+            return _mamba_layer(lp, cfg, x, ssm_chunk), None
+        if remat:
+            layer_body = jax.checkpoint(layer_body)
+        x, _ = jax.lax.scan(layer_body, x, glp)
+        x = _shared_attn(params["shared"], cfg, x, positions, q_chunk,
+                         kv_chunk)
+        return x, None
+
+    if remat:
+        group_body = jax.checkpoint(group_body)
+    x, _ = jax.lax.scan(group_body, x, params["groups"])
+    if "tail" in params:
+        def layer_body(x, lp):
+            return _mamba_layer(lp, cfg, x, ssm_chunk), None
+        if remat:
+            layer_body = jax.checkpoint(layer_body)
+        x, _ = jax.lax.scan(layer_body, x, params["tail"])
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x @ params["lm_head"], 0.0
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, **kw):
+    logits, aux = forward(params, cfg, tokens, **kw)
+    from repro.models.losses import masked_xent
+    return masked_xent(logits, labels, aux)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int,
+                      dtype=None) -> dict:
+    dtype = dtype or dtype_of(cfg.dtype)
+    n_groups, k, tail = group_layout(cfg)
+    ps = cfg.kv_page_tokens
+    n_pages = batch * (-(-max_len // ps))
+    st = mamba_mod.init_mamba_state(cfg, batch, dtype=dtype)
+    stacked_state = jax.tree_util.tree_map(
+        lambda x: jnp.broadcast_to(x, (cfg.n_layers,) + x.shape).copy(), st)
+    return {
+        "lengths": jnp.zeros((batch,), jnp.int32),
+        "ssm": stacked_state,                           # (L, ...) per leaf
+        # one KV pool per shared-attention application site
+        "k_pool": jnp.zeros((n_groups, n_pages, ps, cfg.n_kv_heads,
+                             cfg.head_dim), dtype),
+        "v_pool": jnp.zeros((n_groups, n_pages, ps, cfg.n_kv_heads,
+                             cfg.head_dim), dtype),
+        "page_table": _identity_page_table(batch, max_len, ps),
+    }
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    x = params["embed"][tokens]
+    n_groups, k, tail = group_layout(cfg)
+    lengths = cache["lengths"] + 1
+    new_cache = dict(cache, lengths=lengths)
+    sp = params["shared"]
+
+    group_states = jax.tree_util.tree_map(
+        lambda s: s[:n_groups * k].reshape((n_groups, k) + s.shape[1:]),
+        cache["ssm"])
+
+    def group_body(x, inp):
+        glp, gstate, kp, vp = inp
+
+        def layer_body(x, lp_st):
+            lp, st = lp_st
+            h = apply_norm(lp["norm"], x, cfg.norm, cfg.norm_eps)
+            y, st = mamba_mod.apply_mamba_decode(lp["mamba"], cfg, h, st)
+            return x + y, st
+
+        x, new_st = jax.lax.scan(layer_body, x, (glp, gstate))
+        h = apply_norm(sp["norm1"], x, cfg.norm, cfg.norm_eps)
+        attn, kp, vp = apply_attention_decode_paged(
+            sp["attn"], cfg, h, kp, vp, cache["page_table"], lengths)
+        x = x + attn
+        h = apply_norm(sp["norm2"], x, cfg.norm, cfg.norm_eps)
+        x = x + apply_mlp(sp["mlp"], h, cfg.act)
+        return x, (new_st, kp, vp)
+
+    x, (new_group_states, k_new, v_new) = jax.lax.scan(
+        group_body, x, (params["groups"], group_states,
+                        cache["k_pool"], cache["v_pool"]))
+    new_cache["k_pool"] = k_new
+    new_cache["v_pool"] = v_new
+
+    flat_states = jax.tree_util.tree_map(
+        lambda s: s.reshape((n_groups * k,) + s.shape[2:]), new_group_states)
+    if tail:
+        tail_states = jax.tree_util.tree_map(lambda s: s[n_groups * k:],
+                                             cache["ssm"])
+
+        def layer_body(x, lp_st):
+            lp, st = lp_st
+            h = apply_norm(lp["norm"], x, cfg.norm, cfg.norm_eps)
+            y, st = mamba_mod.apply_mamba_decode(lp["mamba"], cfg, h, st)
+            return x + y, st
+
+        x, new_tail = jax.lax.scan(layer_body, x, (params["tail"],
+                                                   tail_states))
+        new_cache["ssm"] = jax.tree_util.tree_map(
+            lambda a, b: jnp.concatenate([a, b], axis=0), flat_states,
+            new_tail)
+    else:
+        new_cache["ssm"] = flat_states
+
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x @ params["lm_head"], new_cache

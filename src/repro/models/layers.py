@@ -1,0 +1,116 @@
+"""Shared neural-net primitives: norms, RoPE, initializers, MLPs.
+
+Pure-function style: ``init_*`` returns a params pytree (nested dicts of
+jnp arrays), ``apply``-style functions take (params, inputs).  All matmul
+weights are stored ``(in, out)``; layers are stacked on a leading axis by
+the decoders for scan-over-layers.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.distributed.logical import constrain
+
+
+def dtype_of(name: str):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32,
+            "float16": jnp.float16}[name]
+
+
+# ---------------------------------------------------------------- initializers
+def dense_init(key, d_in: int, d_out: int, dtype, scale: float = 1.0):
+    std = scale / np.sqrt(d_in)
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32) * std).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype):
+    return (jax.random.normal(key, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ----------------------------------------------------------------------- norms
+def init_norm(d: int, kind: str = "rms"):
+    if kind == "rms":
+        return {"scale": jnp.ones((d,), jnp.float32)}
+    return {"scale": jnp.ones((d,), jnp.float32),
+            "bias": jnp.zeros((d,), jnp.float32)}
+
+
+def apply_norm(params, x, kind: str = "rms", eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    if kind == "rms":
+        var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+        y = xf * jax.lax.rsqrt(var + eps) * params["scale"]
+    else:
+        mu = jnp.mean(xf, axis=-1, keepdims=True)
+        var = jnp.var(xf, axis=-1, keepdims=True)
+        y = (xf - mu) * jax.lax.rsqrt(var + eps) * params["scale"] + params["bias"]
+    return y.astype(x.dtype)
+
+
+def rms_head_norm(scale, x, eps: float = 1e-5):
+    """Per-head RMS norm for qk_norm (Qwen3 / Chameleon)."""
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps) * scale).astype(x.dtype)
+
+
+# ------------------------------------------------------------------------ RoPE
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x, positions, theta: float = 10000.0):
+    """x: (..., seq, heads, head_dim); positions: (..., seq)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), jnp.float32)
+    angles = positions[..., :, None].astype(jnp.float32) * freqs  # (..., S, hd/2)
+    cos = jnp.cos(angles)[..., :, None, :]
+    sin = jnp.sin(angles)[..., :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ------------------------------------------------------------------------- MLP
+def init_mlp(key, d: int, f: int, act: str, dtype, bias: bool = False):
+    ks = jax.random.split(key, 3)
+    if act == "silu":   # SwiGLU
+        p = {"wi": dense_init(ks[0], d, f, dtype),
+             "wg": dense_init(ks[1], d, f, dtype),
+             "wo": dense_init(ks[2], f, d, dtype)}
+    else:               # plain GELU MLP
+        p = {"wi": dense_init(ks[0], d, f, dtype),
+             "wo": dense_init(ks[1], f, d, dtype)}
+    if bias:
+        p["bi"] = jnp.zeros((f,), dtype)
+        p["bo"] = jnp.zeros((d,), dtype)
+    return p
+
+
+def apply_mlp(p, x, act: str):
+    if act == "silu":
+        h = jax.nn.silu(x @ p["wi"]) * (x @ p["wg"])
+    else:
+        h = x @ p["wi"]
+        if "bi" in p:
+            h = h + p["bi"]
+        h = jax.nn.gelu(h)
+    h = constrain(h, "batch", "seq", "ff")
+    y = h @ p["wo"]
+    if "bo" in p:
+        y = y + p["bo"]
+    return y
+
+
+# ------------------------------------------------------- sinusoidal positions
+def sinusoid_positions(n: int, d: int):
+    pos = np.arange(n)[:, None]
+    dim = np.arange(d // 2)[None, :]
+    angle = pos / np.power(10000, 2 * dim / d)
+    out = np.concatenate([np.sin(angle), np.cos(angle)], axis=-1)
+    return jnp.asarray(out, jnp.float32)

@@ -1,0 +1,36 @@
+"""Sharded-safe masked cross-entropy.
+
+``take_along_axis(logits, labels)`` gathers on the vocab dim; under a
+vocab-sharded lm_head GSPMD resolves that by **all-gathering the logits**
+— (B, S, V) in f32, tens of GB per device at train_4k (measured in the
+§Perf log).  The iota-mask formulation keeps every op elementwise or a
+reduction over the sharded dim, which partitions cleanly:
+
+    sel = Σ_v [v == label] · logit_v          (masked reduce, psum'd)
+    lse = logsumexp_v(logits)                 (sharded reduce, psum'd)
+    nll = lse - sel
+
+Everything stays in the logits dtype until the per-token scalars.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def masked_xent(logits, labels, aux=0.0):
+    """logits: (B, S, V); labels: (B, S) int32 (-1 = masked)."""
+    V = logits.shape[-1]
+    lf = logits.astype(jnp.float32)
+    m = jax.lax.stop_gradient(jnp.max(lf, axis=-1, keepdims=True))
+    shifted = lf - m
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1)) + m[..., 0]
+    vocab_iota = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                          logits.ndim - 1)
+    onehot_mask = vocab_iota == jnp.maximum(labels, 0)[..., None]
+    sel = jnp.sum(jnp.where(onehot_mask, lf, 0.0), axis=-1)
+    nll = lse - sel
+    mask = labels >= 0
+    loss = jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1)
+    return loss + aux

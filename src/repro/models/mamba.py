@@ -1,0 +1,177 @@
+"""Mamba2 (SSD) block: chunked parallel scan for train/prefill, recurrent
+single-step for decode.
+
+State-space recurrence per head (P = head channels, N = state dim):
+    S_t = exp(dt_t·A) · S_{t-1} + (dt_t·x_t) ⊗ B_t        S: (P, N)
+    y_t = C_t · S_t + D · x_t
+
+Train/prefill uses the SSD chunked algorithm (segment-sum decays: intra-
+chunk quadratic + inter-chunk state scan) — O(S·Q) memory instead of the
+naive O(S·P·N) scan materialization, and MXU-friendly einsums.
+
+The decode state (S plus the depthwise-conv tail) is tiny and *resident*
+("pinned" in thesis terms) — the hybrid archs page only their attention KV
+while the SSM state stays pinned, a contrast DESIGN.md §4 calls out.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def mamba_dims(cfg: ModelConfig):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = d_in // cfg.ssm_head_dim
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_mamba(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, nh, P, N = mamba_dims(cfg)
+    conv_dim = d_in + 2 * N
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_in + 2 * N + nh, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                     jnp.float32) * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),       # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], d_in, d, dtype),
+    }
+
+
+def _split_proj(p, cfg: ModelConfig, x):
+    d_in, nh, P, N = mamba_dims(cfg)
+    z, xBC, dt = jnp.split(x @ p["in_proj"], [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xBC, dt
+
+
+def _causal_conv(p, xBC, w: int):
+    """Depthwise causal conv along the sequence axis."""
+    B, S, C = xBC.shape
+    pad = jnp.pad(xBC, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(pad[:, k:k + S, :] * p["conv_w"][k] for k in range(w))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _gated_norm(p, y, z, eps: float):
+    yf = (y * jax.nn.silu(z.astype(jnp.float32))).astype(jnp.float32)
+    var = jnp.mean(jnp.square(yf), axis=-1, keepdims=True)
+    return yf * jax.lax.rsqrt(var + eps) * p["norm_scale"]
+
+
+def apply_mamba(p, cfg: ModelConfig, x, *, chunk: int = 128):
+    """Chunked SSD forward.  x: (B, S, d) -> (B, S, d)."""
+    Bsz, S, d = x.shape
+    d_in, nh, P, N = mamba_dims(cfg)
+    z, xBC, dt = _split_proj(p, cfg, x)
+    xBC = _causal_conv(p, xBC, cfg.ssm_conv)
+    xs = xBC[..., :d_in].reshape(Bsz, S, nh, P)
+    Bmat = xBC[..., d_in:d_in + N]                     # (B, S, N), 1 group
+    Cmat = xBC[..., d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])   # (B,S,nh)
+    A = -jnp.exp(p["A_log"])                           # (nh,)
+    a = dt * A                                          # log-decay (B,S,nh)
+    u = dt[..., None] * xs.astype(jnp.float32)          # (B,S,nh,P)
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    if pad:
+        xs_p = jnp.pad(xs, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        u = jnp.pad(u, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        Bm = jnp.pad(Bmat, ((0, 0), (0, pad), (0, 0)))
+        Cm = jnp.pad(Cmat, ((0, 0), (0, pad), (0, 0)))
+        a_p = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+    else:
+        xs_p, Bm, Cm, a_p = xs, Bmat, Cmat, a
+    nc = (S + pad) // Q
+    u = u.reshape(Bsz, nc, Q, nh, P)
+    Bm = Bm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    Cm = Cm.reshape(Bsz, nc, Q, N).astype(jnp.float32)
+    a_c = a_p.reshape(Bsz, nc, Q, nh)
+
+    acum = jnp.cumsum(a_c, axis=2)                      # (B,nc,Q,nh)
+    # intra-chunk decays L[i,j] = exp(acum_i - acum_j) for i >= j
+    diff = acum[:, :, :, None, :] - acum[:, :, None, :, :]   # (B,nc,Q,Q,nh)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(diff), 0.0)
+    CB = jnp.einsum("bcqn,bckn->bcqk", Cm, Bm)
+    y_diag = jnp.einsum("bcqk,bcqkh,bckhp->bcqhp", CB, L, u)
+
+    # chunk-final states and the inter-chunk scan
+    decay_to_end = jnp.exp(acum[:, :, -1:, :] - acum)   # (B,nc,Q,nh)
+    S_chunk = jnp.einsum("bcqh,bcqhp,bcqn->bchpn", decay_to_end, u, Bm)
+    total_decay = jnp.exp(acum[:, :, -1, :])            # (B,nc,nh)
+
+    def scan_fn(S_prev, inp):
+        dec, S_c = inp                                  # (B,nh), (B,nh,P,N)
+        S_new = dec[..., None, None] * S_prev + S_c
+        return S_new, S_prev
+
+    S0 = jnp.zeros((Bsz, nh, P, N), jnp.float32)
+    _, S_prevs = jax.lax.scan(
+        scan_fn, S0,
+        (total_decay.transpose(1, 0, 2), S_chunk.transpose(1, 0, 2, 3, 4)))
+    S_prevs = S_prevs.transpose(1, 0, 2, 3, 4)          # (B,nc,nh,P,N)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp", Cm, jnp.exp(acum), S_prevs)
+
+    y = (y_diag + y_off).reshape(Bsz, nc * Q, nh, P)[:, :S]
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(Bsz, S, d_in)
+    y = _gated_norm(p, y, z, cfg.norm_eps)
+    return (y.astype(x.dtype)) @ p["out_proj"]
+
+
+def init_mamba_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    d_in, nh, P, N = mamba_dims(cfg)
+    conv_dim = d_in + 2 * N
+    return {"ssm": jnp.zeros((batch, nh, P, N), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dtype)}
+
+
+def apply_mamba_decode(p, cfg: ModelConfig, x, state):
+    """Single-token recurrent step.  x: (B, 1, d) -> (y, state)."""
+    Bsz = x.shape[0]
+    d_in, nh, P, N = mamba_dims(cfg)
+    z, xBC, dt = _split_proj(p, cfg, x)
+    z, xBC, dt = z[:, 0], xBC[:, 0], dt[:, 0]
+    # conv over the stored tail + current input
+    hist = jnp.concatenate([state["conv"], xBC[:, None, :]], axis=1)
+    conv_out = jnp.einsum("bwc,wc->bc", hist, p["conv_w"].astype(jnp.float32))
+    xBC_c = jax.nn.silu(conv_out + p["conv_b"].astype(jnp.float32))
+    new_conv = hist[:, 1:]
+
+    xs = xBC_c[:, :d_in].reshape(Bsz, nh, P)
+    Bm = xBC_c[:, d_in:d_in + N]
+    Cm = xBC_c[:, d_in + N:]
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    decay = jnp.exp(dt * A)                             # (B, nh)
+    u = dt[..., None] * xs                              # (B, nh, P)
+    S = state["ssm"] * decay[..., None, None] \
+        + jnp.einsum("bhp,bn->bhpn", u, Bm)
+    y = jnp.einsum("bhpn,bn->bhp", S, Cm) + p["D"][None, :, None] * xs
+    y = y.reshape(Bsz, d_in)
+    y = _gated_norm(p, y[:, None, :].reshape(Bsz, 1, d_in)[:, 0],
+                    z, cfg.norm_eps)
+    out = (y.astype(x.dtype)) @ p["out_proj"]
+    return out[:, None, :], {"ssm": S, "conv": new_conv.astype(state["conv"].dtype)}
+
+
+def mamba_reference(p, cfg: ModelConfig, x):
+    """Naive per-token recurrence — oracle for the chunked implementation."""
+    Bsz, S, d = x.shape
+    d_in, nh, P, N = mamba_dims(cfg)
+    state = init_mamba_state(cfg, Bsz, dtype=x.dtype)
+    outs = []
+    for t in range(S):
+        y, state = apply_mamba_decode(p, cfg, x[:, t:t + 1], state)
+        outs.append(y)
+    return jnp.concatenate(outs, axis=1)

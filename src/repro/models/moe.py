@@ -1,0 +1,128 @@
+"""Mixture-of-Experts layer: capacity-based dispatch (Mesh-TF style).
+
+Shardable either as EP (experts over the 'model' axis) or TP (expert FFN
+hidden over 'model'); the partition rules in distributed/sharding.py pick
+per architecture.  Top-k softmax routing + load-balancing auxiliary loss.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.logical import constrain
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init
+
+
+def init_moe(key, cfg: ModelConfig, dtype):
+    d, E, f = cfg.d_model, cfg.n_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], d, E, jnp.float32),
+        "wi": (jax.random.normal(ks[1], (E, d, f), jnp.float32)
+               / jnp.sqrt(d)).astype(dtype),
+        "wg": (jax.random.normal(ks[2], (E, d, f), jnp.float32)
+               / jnp.sqrt(d)).astype(dtype),
+        "wo": (jax.random.normal(ks[3], (E, f, d), jnp.float32)
+               / jnp.sqrt(f)).astype(dtype),
+    }
+    if cfg.n_shared_experts:
+        fs = f * cfg.n_shared_experts
+        kss = jax.random.split(ks[4], 3)
+        p["shared"] = {"wi": dense_init(kss[0], d, fs, dtype),
+                       "wg": dense_init(kss[1], d, fs, dtype),
+                       "wo": dense_init(kss[2], fs, d, dtype)}
+    return p
+
+
+def _capacity(n_tokens: int, cfg: ModelConfig) -> int:
+    c = int(n_tokens * cfg.experts_per_token * cfg.capacity_factor
+            / cfg.n_experts)
+    return max(4, -(-c // 4) * 4)
+
+
+GROUP_TOKENS = 4096     # dispatch group size (bounds the one-hot tensors)
+
+
+def apply_moe(p, cfg: ModelConfig, x, *, dropless: bool = False):
+    """x: (B, S, d) -> (y, aux_loss).
+
+    ``dropless=True`` sizes expert capacity to the worst case (every token
+    to one expert) — the serving/decode configuration, where dropping a
+    token corrupts generation.  Training uses the capacity factor (Switch
+    convention); overflowing tokens fall through the residual.
+
+    Long sequences are dispatched in groups of ``GROUP_TOKENS`` (Mesh-TF
+    convention): the (tokens × experts × capacity) one-hots stay bounded
+    regardless of sequence length — prefill_32k would otherwise build a
+    multi-TB dispatch tensor.
+    """
+    B, S, d = x.shape
+    T_all = B * S
+    if not dropless and T_all > GROUP_TOKENS:
+        g = GROUP_TOKENS
+        pad = (-T_all) % g
+        xf = x.reshape(T_all, d)
+        if pad:
+            xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        groups = xf.reshape(-1, g, d)
+
+        @jax.checkpoint
+        def one(xg):
+            y, aux = _moe_group(p, cfg, xg, dropless=False)
+            return y, aux
+
+        ys, auxs = jax.lax.map(one, groups)
+        y = ys.reshape(-1, d)[:T_all].reshape(B, S, d)
+        return y, jnp.mean(auxs)
+    y, aux = _moe_group(p, cfg, x.reshape(T_all, d), dropless=dropless)
+    return y.reshape(B, S, d), aux
+
+
+def _moe_group(p, cfg: ModelConfig, xf, *, dropless: bool):
+    """xf: (T, d) -> (y (T, d), aux)."""
+    d = xf.shape[-1]
+    E, k = cfg.n_experts, cfg.experts_per_token
+    T = xf.shape[0]
+    C = T if dropless else _capacity(T, cfg)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, sel = jax.lax.top_k(probs, k)                  # (T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(-1, keepdims=True), 1e-9)
+
+    # position-in-expert via sequential cumsum over the k routing choices
+    dispatch = jnp.zeros((T, E, C), xf.dtype)
+    combine = jnp.zeros((T, E, C), jnp.float32)
+    fill = jnp.zeros((E,), jnp.int32)
+    for choice in range(k):
+        onehot = jax.nn.one_hot(sel[:, choice], E, dtype=jnp.int32)  # (T, E)
+        pos = jnp.cumsum(onehot, axis=0) - 1 + fill[None, :]
+        fill = fill + onehot.sum(axis=0)
+        within = (pos < C) & (onehot > 0)
+        pos_c = jnp.clip(pos, 0, C - 1)
+        slot = jax.nn.one_hot(pos_c, C, dtype=xf.dtype) * within[..., None]
+        dispatch = dispatch + slot.astype(xf.dtype)
+        combine = combine + slot.astype(jnp.float32) \
+            * gate_vals[:, choice][:, None, None]
+
+    expert_in = jnp.einsum("tec,td->ecd", dispatch, xf)
+    expert_in = constrain(expert_in, "experts", "capacity", "embed")
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", expert_in, p["wi"])) \
+        * jnp.einsum("ecd,edf->ecf", expert_in, p["wg"])
+    h = constrain(h, "experts", "capacity", "moe_ff")
+    expert_out = jnp.einsum("ecf,efd->ecd", h, p["wo"])
+    expert_out = constrain(expert_out, "experts", "capacity", "embed")
+    y = jnp.einsum("tec,ecd->td", combine.astype(xf.dtype), expert_out)
+
+    # load-balancing aux loss (Switch-style)
+    density = jnp.mean(jax.nn.one_hot(sel[:, 0], E, dtype=jnp.float32), axis=0)
+    router_prob = jnp.mean(probs, axis=0)
+    aux = jnp.sum(density * router_prob) * E * cfg.router_aux_coef
+
+    if "shared" in p:
+        sp = p["shared"]
+        y = y + (jax.nn.silu(xf @ sp["wi"]) * (xf @ sp["wg"])) @ sp["wo"]
+    return y, aux

@@ -1,0 +1,244 @@
+"""xLSTM blocks: mLSTM (matrix memory, pre-up-projection) and sLSTM
+(scalar memory with recurrent gate connections, post-up-projection).
+
+Attention-free: decode carries a per-layer fixed-size state instead of a
+KV cache.  In thesis terms the whole state is the *resident set* — there
+are no pages to fault on during decode, making xLSTM the degenerate case
+for the paging technique (DESIGN.md §4): only the optimizer-state/weight
+paging applies.  The mLSTM matrix state (H heads × d_k × d_v) is still
+large enough that the serving engine block-pages *it* host↔HBM between
+requests.
+
+Recurrences (stabilized, per head):
+    mLSTM:  m_t = max(f̃ + m_{t-1}, ĩ);   C_t = e^{f̃+m_{t-1}-m_t} C_{t-1}
+            + e^{ĩ-m_t} k_t v_tᵀ;  n_t likewise;  h = Cᵀq / max(|nᵀq|, 1)
+    sLSTM:  c_t = σ(f) c_{t-1} + e^{ĩ-m_t} z_t;  gates see h_{t-1} through
+            block-diagonal recurrent weights R.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, init_norm, apply_norm
+
+
+# ================================================================== mLSTM
+def mlstm_dims(cfg: ModelConfig):
+    d_in = int(cfg.d_model * cfg.mlstm_proj_factor)
+    nh = cfg.n_heads
+    dk = d_in // nh
+    return d_in, nh, dk
+
+
+def init_mlstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    d_in, nh, dk = mlstm_dims(cfg)
+    ks = jax.random.split(key, 8)
+    return {
+        "up": dense_init(ks[0], d, 2 * d_in, dtype),
+        "wq": dense_init(ks[1], d_in, d_in, dtype),
+        "wk": dense_init(ks[2], d_in, d_in, dtype),
+        "wv": dense_init(ks[3], d_in, d_in, dtype),
+        "w_if": dense_init(ks[4], d_in, 2 * nh, jnp.float32),
+        "b_if": jnp.concatenate([jnp.zeros((nh,)), 3.0 * jnp.ones((nh,))]),
+        "wo_gate": dense_init(ks[5], d_in, d_in, dtype),
+        "skip": dense_init(ks[6], d_in, d_in, dtype),
+        "norm_scale": jnp.ones((d_in,), jnp.float32),
+        "down": dense_init(ks[7], d_in, d, dtype),
+    }
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int):
+    d_in, nh, dk = mlstm_dims(cfg)
+    return {"C": jnp.zeros((batch, nh, dk, dk), jnp.float32),
+            "n": jnp.zeros((batch, nh, dk), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def _mlstm_cell(carry, inp):
+    C, n, m = carry
+    q, k, v, i_pre, f_pre = inp            # (B,nh,dk) ×3, (B,nh) ×2
+    f_log = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(f_log + m, i_pre)
+    f_eff = jnp.exp(f_log + m - m_new)
+    i_eff = jnp.exp(i_pre - m_new)
+    C_new = f_eff[..., None, None] * C \
+        + i_eff[..., None, None] * (k[..., :, None] * v[..., None, :])
+    n_new = f_eff[..., None] * n + i_eff[..., None] * k
+    num = jnp.einsum("bhkv,bhk->bhv", C_new, q)
+    den = jnp.abs(jnp.einsum("bhk,bhk->bh", n_new, q))
+    h = num / jnp.maximum(den, 1.0)[..., None]
+    return (C_new, n_new, m_new), h
+
+
+def _mlstm_sequence(p, cfg, x_in, chunk: int = 64):
+    """x_in: (B, S, d_in) -> h: (B, S, d_in).
+
+    Per-token recurrence organized as scan-over-chunks with a checkpointed
+    chunk body: the backward pass stores only chunk-boundary (C, n, m)
+    states (S/chunk of them) and recomputes inside — without this, AD of
+    the token scan would save the matrix memory at every step
+    (S × nh × dk² floats — infeasible at 4k/32k training lengths).
+    """
+    B, S, d_in = x_in.shape
+    _, nh, dk = mlstm_dims(cfg)
+    q = (x_in @ p["wq"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    k = ((x_in @ p["wk"]) / jnp.sqrt(dk)).reshape(B, S, nh, dk).astype(jnp.float32)
+    v = (x_in @ p["wv"]).reshape(B, S, nh, dk).astype(jnp.float32)
+    gates = x_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)        # (B,S,nh)
+
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    def padt(a):
+        if pad:
+            a = jnp.pad(a, ((0, 0), (0, pad)) + ((0, 0),) * (a.ndim - 2))
+        return a
+    q, k, v = padt(q), padt(k), padt(v)
+    i_pre, f_pre = padt(i_pre), padt(f_pre)
+    nc = (S + pad) // Q
+
+    def to_chunks(a):   # (B, nc*Q, ...) -> (nc, Q, B, ...)
+        return a.reshape((B, nc, Q) + a.shape[2:]).transpose(
+            (1, 2, 0) + tuple(range(3, a.ndim + 1)))
+
+    xs = tuple(to_chunks(a) for a in (q, k, v, i_pre, f_pre))
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        def step(c, token):
+            return _mlstm_cell(c, token)
+        carry, hs = jax.lax.scan(step, carry, inp)
+        return carry, hs
+
+    st = init_mlstm_state(cfg, B)
+    _, hs = jax.lax.scan(chunk_body, (st["C"], st["n"], st["m"]), xs)
+    # (nc, Q, B, nh, dk) -> (B, S, d_in)
+    hs = hs.transpose(2, 0, 1, 3, 4).reshape(B, nc * Q, d_in)
+    return hs[:, :S]
+
+
+def apply_mlstm(p, cfg: ModelConfig, x):
+    """Pre-up-projection mLSTM block body (x already normed): (B,S,d)->..."""
+    up = x @ p["up"]
+    d_in = up.shape[-1] // 2
+    x_in, z = up[..., :d_in], up[..., d_in:]
+    h = _mlstm_sequence(p, cfg, x_in).astype(x.dtype)
+    o = jax.nn.sigmoid(x_in @ p["wo_gate"])
+    h = apply_norm({"scale": p["norm_scale"]}, h + x_in @ p["skip"], "rms",
+                   cfg.norm_eps)
+    h = h * o * jax.nn.silu(z)
+    return h @ p["down"]
+
+
+def apply_mlstm_decode(p, cfg: ModelConfig, x, state):
+    """x: (B,1,d) -> (y, state)."""
+    B = x.shape[0]
+    d_in, nh, dk = mlstm_dims(cfg)
+    up = x[:, 0] @ p["up"]
+    x_in, z = up[..., :d_in], up[..., d_in:]
+    q = (x_in @ p["wq"]).reshape(B, nh, dk).astype(jnp.float32)
+    k = ((x_in @ p["wk"]) / jnp.sqrt(dk)).reshape(B, nh, dk).astype(jnp.float32)
+    v = (x_in @ p["wv"]).reshape(B, nh, dk).astype(jnp.float32)
+    gates = x_in.astype(jnp.float32) @ p["w_if"] + p["b_if"]
+    i_pre, f_pre = jnp.split(gates, 2, axis=-1)
+    (C, n, m), h = _mlstm_cell((state["C"], state["n"], state["m"]),
+                               (q, k, v, i_pre, f_pre))
+    h = h.reshape(B, d_in).astype(x.dtype)
+    o = jax.nn.sigmoid(x_in @ p["wo_gate"])
+    h = apply_norm({"scale": p["norm_scale"]}, h + x_in @ p["skip"], "rms",
+                   cfg.norm_eps)
+    h = h * o * jax.nn.silu(z)
+    return (h @ p["down"])[:, None, :], {"C": C, "n": n, "m": m}
+
+
+# ================================================================== sLSTM
+def slstm_dims(cfg: ModelConfig):
+    nh = cfg.n_heads
+    ph = cfg.d_model // nh
+    return nh, ph
+
+
+def init_slstm(key, cfg: ModelConfig, dtype):
+    d = cfg.d_model
+    nh, ph = slstm_dims(cfg)
+    f_up = int(d * cfg.slstm_proj_factor)
+    ks = jax.random.split(key, 4)
+    return {
+        "w_gates": dense_init(ks[0], d, 4 * d, jnp.float32),
+        "r_gates": (jax.random.normal(ks[1], (4, nh, ph, ph), jnp.float32)
+                    / jnp.sqrt(ph)),
+        "b_gates": jnp.zeros((4 * d,), jnp.float32),
+        "norm_scale": jnp.ones((d,), jnp.float32),
+        "ffn_wi": dense_init(ks[2], d, f_up, dtype),
+        "ffn_wo": dense_init(ks[3], f_up, d, dtype),
+    }
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int):
+    d = cfg.d_model
+    return {"c": jnp.zeros((batch, d), jnp.float32),
+            "n": jnp.zeros((batch, d), jnp.float32),
+            "h": jnp.zeros((batch, d), jnp.float32),
+            "m": jnp.full((batch, d), -1e30, jnp.float32)}
+
+
+def _slstm_cell(p, cfg, carry, pre_t):
+    c, n, h, m = carry
+    B = c.shape[0]
+    nh, ph = slstm_dims(cfg)
+    d = c.shape[-1]
+    rec = jnp.einsum("bhp,ghpq->bghq", h.reshape(B, nh, ph),
+                     p["r_gates"]).reshape(B, 4 * d)
+    g = pre_t + rec
+    zi, ii, fi, oi = jnp.split(g, 4, axis=-1)
+    z = jnp.tanh(zi)
+    o = jax.nn.sigmoid(oi)
+    f_log = jax.nn.log_sigmoid(fi)
+    m_new = jnp.maximum(f_log + m, ii)
+    c_new = jnp.exp(f_log + m - m_new) * c + jnp.exp(ii - m_new) * z
+    n_new = jnp.exp(f_log + m - m_new) * n + jnp.exp(ii - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1e-6)
+    return (c_new, n_new, h_new, m_new), h_new
+
+
+def apply_slstm(p, cfg: ModelConfig, x, chunk: int = 64):
+    """(B, S, d) -> (B, S, d): recurrent scan + post-up FFN.
+
+    Chunk-checkpointed like the mLSTM: backward stores only chunk-boundary
+    states.
+    """
+    B, S, d = x.shape
+    pre = x.astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    st = init_slstm_state(cfg, B)
+    Q = min(chunk, S)
+    pad = (-S) % Q
+    pre_p = jnp.pad(pre, ((0, 0), (0, pad), (0, 0))) if pad else pre
+    nc = (S + pad) // Q
+    xs = pre_p.reshape(B, nc, Q, -1).transpose(1, 2, 0, 3)
+
+    @jax.checkpoint
+    def chunk_body(carry, inp):
+        def step(c, pre_t):
+            return _slstm_cell(p, cfg, c, pre_t)
+        return jax.lax.scan(step, carry, inp)
+
+    (_, _, _, _), hs = jax.lax.scan(chunk_body,
+                                    (st["c"], st["n"], st["h"], st["m"]), xs)
+    h = hs.transpose(2, 0, 1, 3).reshape(B, nc * Q, d)[:, :S]
+    h = apply_norm({"scale": p["norm_scale"]}, h, "rms", cfg.norm_eps)
+    h = h.astype(x.dtype)
+    return jax.nn.gelu(h @ p["ffn_wi"]) @ p["ffn_wo"]
+
+
+def apply_slstm_decode(p, cfg: ModelConfig, x, state):
+    pre = x[:, 0].astype(jnp.float32) @ p["w_gates"] + p["b_gates"]
+    (c, n, h, m), h_out = _slstm_cell(
+        p, cfg, (state["c"], state["n"], state["h"], state["m"]), pre)
+    y = apply_norm({"scale": p["norm_scale"]}, h_out, "rms", cfg.norm_eps)
+    y = y.astype(x.dtype)
+    y = jax.nn.gelu(y @ p["ffn_wi"]) @ p["ffn_wo"]
+    return y[:, None, :], {"c": c, "n": n, "h": h, "m": m}

@@ -1,0 +1,116 @@
+"""xLSTM LM assembly: mLSTM blocks with sLSTM blocks at ``slstm_at``.
+
+Stacked-scan over the mLSTM majority; the (few) sLSTM blocks are applied
+at their configured positions between scan segments.  Attention-free:
+decode carries fixed-size recurrent state only (DESIGN.md §4).
+"""
+
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import xlstm as cells
+from repro.models.config import ModelConfig
+from repro.models.decoder import _stack
+from repro.models.layers import (apply_norm, dense_init, dtype_of, embed_init,
+                                 init_norm)
+
+
+def segments(cfg: ModelConfig):
+    """Split layer indices into alternating (mlstm-run, slstm) segments."""
+    sl = sorted(cfg.slstm_at)
+    segs = []
+    start = 0
+    for s in sl:
+        segs.append(("m", start, s))      # mlstm layers [start, s)
+        segs.append(("s", s, s + 1))
+        start = s + 1
+    segs.append(("m", start, cfg.n_layers))
+    return [x for x in segs if x[2] > x[1]]
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dtype = dtype_of(cfg.dtype)
+    keys = jax.random.split(key, cfg.n_layers + 2)
+    params: dict[str, Any] = {
+        "embed": embed_init(keys[0], cfg.vocab_size, cfg.d_model, dtype),
+        "final_norm": init_norm(cfg.d_model, cfg.norm),
+        "lm_head": dense_init(keys[1], cfg.d_model, cfg.vocab_size, dtype),
+    }
+    for si, (kind, a, b) in enumerate(segments(cfg)):
+        if kind == "m":
+            layers = [{"norm": init_norm(cfg.d_model, cfg.norm),
+                       "cell": cells.init_mlstm(keys[2 + i], cfg, dtype)}
+                      for i in range(a, b)]
+            params[f"seg{si}"] = _stack(layers)
+        else:
+            params[f"seg{si}"] = {
+                "norm": init_norm(cfg.d_model, cfg.norm),
+                "cell": cells.init_slstm(keys[2 + a], cfg, dtype)}
+    return params
+
+
+def forward(params, cfg: ModelConfig, tokens, *, embeddings=None,
+            remat: bool = False, **_):
+    x = params["embed"][tokens] if embeddings is None else embeddings
+
+    for si, (kind, a, b) in enumerate(segments(cfg)):
+        sp = params[f"seg{si}"]
+        if kind == "m":
+            def body(x, lp):
+                h = apply_norm(lp["norm"], x, cfg.norm, cfg.norm_eps)
+                return x + cells.apply_mlstm(lp["cell"], cfg, h), None
+            if remat:
+                body = jax.checkpoint(body)
+            x, _ = jax.lax.scan(body, x, sp)
+        else:
+            h = apply_norm(sp["norm"], x, cfg.norm, cfg.norm_eps)
+            x = x + cells.apply_slstm(sp["cell"], cfg, h)
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x @ params["lm_head"], 0.0
+
+
+def loss_fn(params, cfg: ModelConfig, tokens, labels, **kw):
+    logits, aux = forward(params, cfg, tokens, **kw)
+    from repro.models.losses import masked_xent
+    return masked_xent(logits, labels, aux)
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+                      dtype=None) -> dict:
+    cache: dict[str, Any] = {"lengths": jnp.zeros((batch,), jnp.int32)}
+    for si, (kind, a, b) in enumerate(segments(cfg)):
+        if kind == "m":
+            st = cells.init_mlstm_state(cfg, batch)
+            cache[f"seg{si}"] = jax.tree_util.tree_map(
+                lambda x: jnp.broadcast_to(x, (b - a,) + x.shape).copy(), st)
+        else:
+            cache[f"seg{si}"] = cells.init_slstm_state(cfg, batch)
+    return cache
+
+
+def decode_step(params, cfg: ModelConfig, cache, tokens):
+    x = params["embed"][tokens]
+    new_cache = dict(cache, lengths=cache["lengths"] + 1)
+
+    for si, (kind, a, b) in enumerate(segments(cfg)):
+        sp = params[f"seg{si}"]
+        if kind == "m":
+            def body(x, inp):
+                lp, st = inp
+                h = apply_norm(lp["norm"], x, cfg.norm, cfg.norm_eps)
+                y, st = cells.apply_mlstm_decode(lp["cell"], cfg, h, st)
+                return x + y, st
+            x, new_st = jax.lax.scan(body, x, (sp, cache[f"seg{si}"]))
+            new_cache[f"seg{si}"] = new_st
+        else:
+            h = apply_norm(sp["norm"], x, cfg.norm, cfg.norm_eps)
+            y, st = cells.apply_slstm_decode(sp["cell"], cfg, h,
+                                             cache[f"seg{si}"])
+            x = x + y
+            new_cache[f"seg{si}"] = st
+    x = apply_norm(params["final_norm"], x, cfg.norm, cfg.norm_eps)
+    return x @ params["lm_head"], new_cache

@@ -1,0 +1,232 @@
+"""Serving engine: continuous batching over a paged, host-spillable KV pool.
+
+The thesis' runtime loop, applied to inference serving:
+
+* requests arrive with a prompt; **prefill** computes the prompt's KV and
+  packs it into pool pages (``page_pack`` semantics);
+* **decode** runs in lockstep over the active batch through the compiled
+  paged-attention step; the page table handed to XLA names only resident
+  frames — the engine (the "driver") resolves residency beforehand;
+* when the frame pool is exhausted, pages of *waiting* sequences spill to
+  host (swap-out); re-scheduling such a sequence **faults** its pages back
+  in with Touch-Ahead block granularity — accounting via the calibrated
+  cost model, data movement real.
+
+Pinning baseline: ``pin_all=True`` sizes residency for the worst case and
+refuses admission beyond it (the thesis' memory-utilization cost).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.resolver import Strategy
+from repro.memory.kv_cache import PagedKVManager
+from repro.models.config import ModelConfig
+from repro.models.registry import model_for
+from repro.serving.sampler import SamplerConfig, sample_token
+
+
+@dataclasses.dataclass
+class Request:
+    req_id: int
+    prompt: np.ndarray                  # (S,) int32
+    max_new_tokens: int = 16
+    generated: Optional[list] = None
+    done: bool = False
+
+
+@dataclasses.dataclass
+class EngineStats:
+    prefills: int = 0
+    decode_steps: int = 0
+    tokens_generated: int = 0
+    spill_events: int = 0
+    fault_page_ins: int = 0
+    simulated_fault_us: float = 0.0
+
+
+class ServingEngine:
+    """Single-host engine over one model; batch size fixed per decode step."""
+
+    def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
+                 max_len: int = 256, pool_frames: Optional[int] = None,
+                 strategy: Strategy = Strategy.TOUCH_AHEAD,
+                 pin_all: bool = False,
+                 sampler: SamplerConfig = SamplerConfig()):
+        self.cfg = cfg
+        self.params = params
+        self.model = model_for(cfg)
+        self.max_batch = max_batch
+        self.max_len = max_len
+        self.sampler = sampler
+        self.pin_all = pin_all
+        ps = cfg.kv_page_tokens
+        pages_per_seq = -(-max_len // ps)
+        n_frames = pool_frames or max_batch * pages_per_seq
+        self.kv = PagedKVManager(n_frames, ps, pages_per_seq,
+                                 strategy=strategy)
+        self.stats = EngineStats()
+        # compiled decode step: fixed (max_batch) shape; cache pools sized
+        # to the device pool (shared across the batch via page table)
+        self.cache = self.model.init_decode_cache(cfg, max_batch, max_len)
+        self._decode = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, cfg, c, t))
+        self.queue: list[Request] = []
+        self.active: list[Request] = []
+        self.req_counter = 0
+
+    # -------------------------------------------------------------- intake
+    def submit(self, prompt: np.ndarray, max_new_tokens: int = 16) -> Request:
+        self.req_counter += 1
+        r = Request(self.req_counter, np.asarray(prompt, np.int32),
+                    max_new_tokens, generated=[])
+        self.queue.append(r)
+        return r
+
+    # ------------------------------------------------------------- prefill
+    def _admit(self) -> None:
+        while self.queue and len(self.active) < self.max_batch:
+            r = self.queue.pop(0)
+            need_pages = -(-(len(r.prompt) + r.max_new_tokens)
+                           // self.kv.page_tokens)
+            if self.pin_all and self.kv.frames_used + need_pages > \
+                    self.kv.n_frames:
+                self.queue.insert(0, r)     # admission control: refuse
+                break
+            self.kv.add_sequence(r.req_id)
+            waiting = [q.req_id for q in self.queue
+                       if q.req_id in self.kv.tables]
+            self.kv.append_tokens(r.req_id, len(r.prompt),
+                                  spill_candidates=waiting)
+            self._prefill_sequence(r)
+            self.active.append(r)
+            self.stats.prefills += 1
+
+    def _prefill_sequence(self, r: Request) -> None:
+        """Token-by-token prefill through the decode step (batch slot 0).
+
+        Keeps one compiled program for the whole engine; production TPU
+        deployments add a chunked prefill program — see serving docs.
+        """
+        slot_cache = self.model.init_decode_cache(self.cfg, 1, self.max_len)
+        step = jax.jit(
+            lambda p, c, t: self.model.decode_step(p, self.cfg, c, t))
+        cache = slot_cache
+        for t in r.prompt:
+            _, cache = step(self.params, cache,
+                            jnp.asarray([[t]], jnp.int32))
+        self._seq_caches = getattr(self, "_seq_caches", {})
+        self._seq_caches[r.req_id] = cache
+
+    # -------------------------------------------------------------- decode
+    @staticmethod
+    def _path_str(path) -> str:
+        return "/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                        for p in path)
+
+    def _gather_batch_cache(self, batch: list[Request]):
+        """Merge per-sequence caches into the fixed-batch decode cache.
+
+        Convention: leaves whose path contains "pool" are frame pools
+        (batch slot i owns pages [i·per_seq, (i+1)·per_seq)); "table"
+        leaves are per-slot page tables; everything else carries the batch
+        on axis 1 ((L, B, ...) stacked states) or axis 0 (lengths).
+        """
+        caches = [self._seq_caches[r.req_id] for r in batch]
+        flat, treedef = jax.tree_util.tree_flatten_with_path(self.cache)
+        out = []
+        for path, full in flat:
+            name = self._path_str(path)
+            arr = np.array(full)
+            for i in range(len(batch)):
+                sub = caches[i]
+                for p in path:
+                    sub = sub[getattr(p, "key", getattr(p, "idx", None))]
+                part = np.asarray(sub)
+                if name == "lengths":
+                    arr[i] = part[0]
+                elif "pool" in name:
+                    per_seq = part.shape[1]
+                    arr[:, i * per_seq:(i + 1) * per_seq] = part
+                elif "table" in name:
+                    pass   # identity table already maps slot -> its range
+                else:
+                    arr[:, i] = part[:, 0]
+            out.append(jnp.asarray(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    def step_decode(self) -> int:
+        """One lockstep decode over all active sequences."""
+        self._admit()
+        if not self.active:
+            return 0
+        batch = self.active[:self.max_batch]
+        # residency: fault spilled pages back in before dispatch
+        waiting = [q.req_id for q in self.queue if q.req_id in self.kv.tables]
+        for r in batch:
+            n = self.kv.ensure_resident(r.req_id, spill_candidates=waiting)
+            self.stats.fault_page_ins += n
+        self.stats.simulated_fault_us = self.kv.stats.simulated_us
+        self.stats.spill_events = self.kv.stats.spills
+
+        tokens = np.zeros((self.max_batch, 1), np.int32)
+        for i, r in enumerate(batch):
+            last = r.generated[-1] if r.generated else r.prompt[-1]
+            tokens[i, 0] = last
+        cache = self._gather_batch_cache(batch)
+        logits, cache = self._decode(self.params, cache,
+                                     jnp.asarray(tokens))
+        self.stats.decode_steps += 1
+        key = jax.random.PRNGKey(self.stats.decode_steps)
+        next_tokens = sample_token(logits[:, 0] if logits.ndim == 3
+                                   else logits, self.sampler, key)
+        # scatter results + updated caches back per sequence
+        for i, r in enumerate(batch):
+            tok = int(next_tokens[i])
+            r.generated.append(tok)
+            self.kv.append_tokens(r.req_id, 1)
+            self.stats.tokens_generated += 1
+            seq_cache = self._seq_caches[r.req_id]
+            flat, treedef = jax.tree_util.tree_flatten_with_path(seq_cache)
+            out = []
+            for path, leaf in flat:
+                name = self._path_str(path)
+                sub = cache
+                for p in path:
+                    sub = sub[getattr(p, "key", getattr(p, "idx", None))]
+                big = np.asarray(sub)
+                if name == "lengths":
+                    out.append(leaf + 1)
+                elif "pool" in name:
+                    per_seq = np.asarray(leaf).shape[1]
+                    out.append(jnp.asarray(
+                        big[:, i * per_seq:(i + 1) * per_seq]))
+                elif "table" in name:
+                    out.append(leaf)
+                else:
+                    arr = np.array(leaf)
+                    arr[:, 0] = big[:, i]
+                    out.append(jnp.asarray(arr))
+            self._seq_caches[r.req_id] = jax.tree_util.tree_unflatten(
+                treedef, out)
+            if len(r.generated) >= r.max_new_tokens:
+                r.done = True
+        finished = [r for r in batch if r.done]
+        for r in finished:
+            self.active.remove(r)
+            self.kv.free_sequence(r.req_id)
+            self._seq_caches.pop(r.req_id, None)
+        return len(batch)
+
+    def run_until_done(self, max_steps: int = 10_000) -> None:
+        steps = 0
+        while (self.queue or self.active) and steps < max_steps:
+            if self.step_decode() == 0:
+                break
+            steps += 1

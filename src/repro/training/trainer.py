@@ -1,0 +1,137 @@
+"""Training loop: remat, microbatch accumulation, checkpoint/restart.
+
+``make_train_step`` builds the jit-able step used both by the real CPU
+training examples and by the 512-device dry-run (same code path — the
+dry-run just lowers it under the production mesh with ShapeDtypeStructs).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.registry import model_for
+from repro.optim import adamw
+from repro.optim.adamw import AdamWConfig, AdamWState
+
+
+@dataclasses.dataclass(frozen=True)
+class TrainConfig:
+    microbatches: int = 1           # gradient-accumulation factor
+    remat: bool = True              # checkpoint the layer scan
+    q_chunk: int = 512
+    kv_chunk: int = 512
+    optimizer: AdamWConfig = dataclasses.field(default_factory=AdamWConfig)
+
+
+def make_loss_fn(cfg: ModelConfig, tcfg: TrainConfig):
+    model = model_for(cfg)
+
+    def loss(params, tokens, labels, *extra):
+        kw = {"remat": tcfg.remat}
+        if cfg.family in ("dense", "moe", "mla_moe"):
+            kw.update(q_chunk=tcfg.q_chunk, kv_chunk=tcfg.kv_chunk)
+        if cfg.is_encdec and extra:
+            kw["frame_embeddings"] = extra[0]
+        return model.loss_fn(params, cfg, tokens, labels, **kw)
+
+    return loss
+
+
+def make_train_step(cfg: ModelConfig, tcfg: TrainConfig):
+    """(params, opt_state, tokens, labels) -> (params, opt_state, metrics).
+
+    tokens/labels: (global_batch, seq).  With ``microbatches = m`` the
+    batch is split on axis 0 and gradients accumulate in fp32 across an
+    inner scan — the standard memory/throughput lever.
+    """
+    loss_fn = make_loss_fn(cfg, tcfg)
+
+    def step(params, opt_state: AdamWState, tokens, labels, *extra):
+        m = tcfg.microbatches
+        if m == 1:
+            l, grads = jax.value_and_grad(loss_fn)(params, tokens, labels,
+                                                   *extra)
+        else:
+            B = tokens.shape[0]
+            split = lambda a: a.reshape(m, B // m, *a.shape[1:])
+            xs = (split(tokens), split(labels)) + tuple(
+                split(e) for e in extra)
+
+            def micro(carry, xs):
+                acc, lsum = carry
+                l, g = jax.value_and_grad(loss_fn)(params, *xs)
+                acc = jax.tree_util.tree_map(
+                    lambda a, b: a + b.astype(jnp.float32), acc, g)
+                return (acc, lsum + l), None
+
+            zeros = jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gacc, lsum), _ = jax.lax.scan(micro, (zeros, 0.0), xs)
+            grads = jax.tree_util.tree_map(lambda g: g / m, gacc)
+            l = lsum / m
+
+        params, opt_state, metrics = adamw.update(tcfg.optimizer, opt_state,
+                                                  params, grads)
+        metrics["loss"] = l
+        return params, opt_state, metrics
+
+    return step
+
+
+class Trainer:
+    """Host-side loop: data, jit step, periodic checkpoint, metrics."""
+
+    def __init__(self, cfg: ModelConfig, tcfg: TrainConfig, params,
+                 dataset, checkpoint_dir: Optional[str] = None,
+                 checkpoint_every: int = 0,
+                 checkpointer: Optional[Any] = None):
+        self.cfg = cfg
+        self.tcfg = tcfg
+        self.params = params
+        self.opt_state = adamw.init(tcfg.optimizer, params)
+        self.dataset = dataset
+        self.step_fn = jax.jit(make_train_step(cfg, tcfg))
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = checkpoint_every
+        self.checkpointer = checkpointer
+        self.step = 0
+        self.history: list[dict] = []
+
+    def restore(self) -> bool:
+        if self.checkpointer is None or self.checkpoint_dir is None:
+            return False
+        restored = self.checkpointer.restore_latest(self.checkpoint_dir)
+        if restored is None:
+            return False
+        self.params, self.opt_state, self.step = restored
+        return True
+
+    def run(self, n_steps: int, log_every: int = 10,
+            log_fn: Callable[[str], None] = print) -> list[dict]:
+        t0 = time.perf_counter()
+        for _ in range(n_steps):
+            tokens, labels = self.dataset.batch_at(self.step)
+            self.params, self.opt_state, metrics = self.step_fn(
+                self.params, self.opt_state, tokens, labels)
+            self.step += 1
+            rec = {k: float(v) for k, v in metrics.items()}
+            rec["step"] = self.step
+            self.history.append(rec)
+            if log_every and self.step % log_every == 0:
+                dt = time.perf_counter() - t0
+                log_fn(f"step {self.step:5d}  loss {rec['loss']:.4f}  "
+                       f"gnorm {rec['grad_norm']:.3f}  "
+                       f"{dt / log_every:.2f}s/step")
+                t0 = time.perf_counter()
+            if (self.checkpointer is not None and self.checkpoint_every
+                    and self.step % self.checkpoint_every == 0):
+                self.checkpointer.save(self.checkpoint_dir, self.params,
+                                       self.opt_state, self.step)
+        return self.history

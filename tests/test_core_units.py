@@ -1,0 +1,193 @@
+"""Unit tests: SMMU fault semantics, THP, COW, resolver costs, engine API."""
+
+import pytest
+
+from repro.core import addresses as A
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.core.engine import BufferPrep, RDMAEngine
+from repro.core.fault import (FSR_MULTI, FSR_TF, SMMU, Access, Disposition,
+                              FaultModel)
+from repro.core.pagetable import (FrameAllocator, PageState, PageTable,
+                                  PinLimitExceeded, SegmentationFault)
+from repro.core.resolver import Resolver, Strategy
+
+
+def make_pt(pages=16, frames=256, pin_limit=None):
+    alloc = FrameAllocator(frames)
+    pt = PageTable(1, alloc, pin_limit_bytes=pin_limit)
+    pt.mmap(0, pages * A.PAGE_SIZE)
+    return pt
+
+
+class TestSMMU:
+    def _smmu(self, hupcf=True, interrupts=None):
+        smmu = SMMU(0, interrupt_handler=(interrupts.append
+                                          if interrupts is not None else None))
+        pt = make_pt()
+        smmu.attach_domain(1, pt, hupcf=hupcf)
+        return smmu, pt
+
+    def test_translation_fault_records_registers(self):
+        ints = []
+        smmu, pt = self._smmu(interrupts=ints)
+        res = smmu.translate(1, 0x5, Access.WRITE)
+        assert res.disposition is Disposition.TERMINATED
+        assert res.fault_recorded
+        iova, wnr, is_tf = smmu.read_fault_record(1)
+        assert iova == 0x5 << 12
+        assert wnr == 1          # write -> destination fault
+        assert is_tf
+        assert ints == [1]       # CFIE raised the interrupt
+
+    def test_multi_fault_records_only_first(self):
+        ints = []
+        smmu, pt = self._smmu(interrupts=ints)
+        smmu.translate(1, 0x5, Access.WRITE)
+        smmu.translate(1, 0x7, Access.READ)   # second, while FSR != 0
+        iova, wnr, _ = smmu.read_fault_record(1)
+        assert iova == 0x5 << 12              # first fault's details kept
+        assert smmu.banks[1].fsr & FSR_MULTI
+        assert ints == [1]                    # no second interrupt
+
+    def test_hupcf_0_collateral_termination(self):
+        """§3.2.1: without HUPCF, resident pages terminate under a fault."""
+        smmu, pt = self._smmu(hupcf=False)
+        pt.touch(0x3)
+        assert smmu.translate(1, 0x3, Access.WRITE).disposition \
+            is Disposition.OK
+        smmu.translate(1, 0x9, Access.WRITE)  # open a fault
+        res = smmu.translate(1, 0x3, Access.WRITE)
+        assert res.disposition is Disposition.TERMINATED
+        assert res.collateral
+
+    def test_hupcf_1_processes_under_fault(self):
+        smmu, pt = self._smmu(hupcf=True)
+        pt.touch(0x3)
+        smmu.translate(1, 0x9, Access.WRITE)  # open a fault
+        res = smmu.translate(1, 0x3, Access.WRITE)
+        assert res.disposition is Disposition.OK
+
+    def test_tlb_invalidation_on_thp_collapse(self):
+        smmu, pt = self._smmu()
+        pt.touch(0x2)
+        assert smmu.translate(1, 0x2, Access.READ).disposition is Disposition.OK
+        assert smmu.translate(1, 0x2, Access.READ).tlb_hit
+        pt.khugepaged_collapse(0x2)           # shoots down the TLB
+        smmu.clear_fault(1)
+        res = smmu.translate(1, 0x2, Access.READ)
+        assert res.disposition is Disposition.TERMINATED  # faults again
+
+    def test_stall_mode_resume(self):
+        smmu = SMMU(0)
+        pt = make_pt()
+        smmu.attach_domain(2, pt, fault_model=FaultModel.STALL)
+        res = smmu.translate(2, 0x4, Access.WRITE)
+        assert res.disposition is Disposition.STALLED
+        pt.touch(0x4)
+        assert smmu.resume_stalled(2, retry=True) is Disposition.OK
+
+
+class TestPageTable:
+    def test_demand_paging_minor_fault(self):
+        pt = make_pt()
+        assert pt.lookup(0).state == PageState.MAPPED_NOT_RESIDENT
+        major, _ = pt.touch(0)
+        assert not major
+        assert pt.stats.minor_faults == 1
+
+    def test_swapped_page_major_fault(self):
+        pt = make_pt()
+        pt.touch(0)
+        pt.reclaim(1)
+        assert pt.lookup(0).state == PageState.SWAPPED
+        major, _ = pt.touch(0)
+        assert major
+        assert pt.stats.major_faults == 1
+
+    def test_segfault_on_unmapped(self):
+        pt = make_pt(pages=4)
+        with pytest.raises(SegmentationFault):
+            pt.touch(100)
+
+    def test_cow_break_allocates_new_frame(self):
+        pt = make_pt()
+        pt.touch(0)
+        f0 = pt.entries[0].frame
+        pt.fork_share([0])
+        pt.touch(0, write=True)
+        assert pt.entries[0].frame != f0
+        assert pt.stats.cow_breaks == 1
+
+    def test_pin_limit_enforced(self):
+        pt = make_pt(pages=16, pin_limit=4 * A.PAGE_SIZE)
+        pt.pin(0, 4 * A.PAGE_SIZE)
+        with pytest.raises(PinLimitExceeded):
+            pt.pin(8 * A.PAGE_SIZE, 4 * A.PAGE_SIZE)
+
+    def test_get_user_pages_stops_at_unmapped(self):
+        """§3.2.2.1: GUP returns only pages the application owns."""
+        pt = make_pt(pages=4)
+        n = pt.get_user_pages(2, 4)
+        assert n == 2   # pages 2,3 mapped; 4,5 are not
+
+
+class TestResolver:
+    def test_touch_ahead_resolves_block(self):
+        pt = make_pt()
+        r = Resolver(Strategy.TOUCH_AHEAD, DEFAULT_COST_MODEL)
+        res = r.resolve(pt, 0, is_dst=True, block_pages_remaining=4)
+        assert res.pages_resolved == 4
+        assert all(pt.is_resident(v) for v in range(4))
+        assert res.kernel_us > 0 and res.user_us > 0  # RAPF via user space
+
+    def test_kernel_rapf_no_user_time(self):
+        pt = make_pt()
+        r = Resolver(Strategy.KERNEL_RAPF, DEFAULT_COST_MODEL)
+        res = r.resolve(pt, 0, is_dst=True, block_pages_remaining=4)
+        assert res.user_us == 0.0
+        assert res.rapf_from_kernel
+
+    def test_touch_a_page_segfault_recovery(self):
+        """Fig 3.2: touching a page that left the address space."""
+        pt = make_pt(pages=4)
+        pt.munmap(0, A.PAGE_SIZE)
+        r = Resolver(Strategy.TOUCH_A_PAGE, DEFAULT_COST_MODEL)
+        res = r.resolve(pt, 0, is_dst=True, block_pages_remaining=4)
+        assert res.segfault_recovered
+        assert res.pages_resolved == 0
+
+
+class TestEngineAPI:
+    def test_remote_read_is_reversed_write(self):
+        """§1.3.2.2: the target's R5 converts the read into a write back."""
+        eng = RDMAEngine(n_nodes=2)
+        eng.map_buffer(1, 1, 0x1000_0000, 8192, prep=BufferPrep.TOUCHED)
+        eng.map_buffer(0, 1, 0x2000_0000, 8192, prep=BufferPrep.FAULTING)
+        t = eng.remote_read(1, target_node=1, target_va=0x1000_0000,
+                            local_node=0, local_va=0x2000_0000, nbytes=8192)
+        stats = eng.run_transfer(t)
+        assert t.complete
+        assert stats.dst_faults > 0     # local (initiator) side faulted
+        for vpn in A.pages_spanned(0x2000_0000, 8192):
+            assert eng.nodes[0].pt(1).is_resident(vpn)
+
+    def test_thp_collapse_faults_pretouched_buffer(self):
+        """The THP motivation: touched buffers still fault mid-run."""
+        eng = RDMAEngine(n_nodes=1)
+        eng.map_buffer(0, 1, 0, 16384, prep=BufferPrep.TOUCHED)
+        eng.map_buffer(0, 1, 0x2000_0000, 16384, prep=BufferPrep.TOUCHED)
+        # khugepaged invalidates the (touched!) destination region
+        eng.nodes[0].pt(1).khugepaged_collapse(A.page_index(0x2000_0000))
+        t = eng.remote_write(1, 0, 0, 0, 0x2000_0000, 16384)
+        stats = eng.run_transfer(t)
+        assert stats.dst_faults > 0
+        assert t.complete
+
+    def test_pinned_buffers_never_fault(self):
+        eng = RDMAEngine(n_nodes=1)
+        eng.map_buffer(0, 1, 0, 65536, prep=BufferPrep.PINNED)
+        eng.map_buffer(0, 1, 0x2000_0000, 65536, prep=BufferPrep.PINNED)
+        eng.nodes[0].pt(1).khugepaged_collapse(A.page_index(0x2000_0000))
+        t = eng.remote_write(1, 0, 0, 0, 0x2000_0000, 65536)
+        stats = eng.run_transfer(t)
+        assert stats.dst_faults == 0 and stats.src_faults == 0

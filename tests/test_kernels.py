@@ -1,0 +1,158 @@
+"""Per-kernel shape/dtype sweeps: pallas (interpret=True) vs ref.py oracles."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import flash_attention_ref
+from repro.kernels.page_pack.ops import gather_pages, scatter_pages
+from repro.kernels.page_pack.ref import page_gather_ref, page_scatter_ref
+from repro.kernels.paged_attention.ops import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+def _tol(dtype):
+    return dict(atol=2e-2, rtol=2e-2) if dtype == jnp.bfloat16 \
+        else dict(atol=2e-5, rtol=2e-5)
+
+
+class TestPagedAttentionKernel:
+    @pytest.mark.parametrize("B,H,KVH,D,ps,NP", [
+        (1, 4, 4, 16, 4, 2),     # MHA
+        (2, 8, 2, 32, 8, 3),     # GQA
+        (3, 8, 1, 64, 8, 4),     # MQA
+        (2, 16, 8, 128, 16, 2),  # production-like head_dim
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_matches_ref(self, B, H, KVH, D, ps, NP, dtype):
+        P = B * NP
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, D), dtype)
+        kp = jax.random.normal(ks[1], (P, ps, KVH, D), dtype)
+        vp = jax.random.normal(ks[2], (P, ps, KVH, D), dtype)
+        pt = jnp.arange(P, dtype=jnp.int32).reshape(B, NP)
+        lengths = jnp.asarray(
+            np.linspace(1, NP * ps, B).astype(np.int32))
+        out = paged_attention(q, kp, vp, pt, lengths, interpret=True)
+        ref = paged_attention_ref(
+            q.reshape(B, KVH, H // KVH, D), kp.transpose(2, 0, 1, 3),
+            vp.transpose(2, 0, 1, 3), pt, lengths).reshape(B, H, D)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+
+    def test_window_masking(self):
+        B, H, KVH, D, ps, NP = 2, 8, 2, 32, 8, 4
+        P = B * NP
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, D))
+        kp = jax.random.normal(ks[1], (P, ps, KVH, D))
+        vp = jax.random.normal(ks[2], (P, ps, KVH, D))
+        pt = jnp.arange(P, dtype=jnp.int32).reshape(B, NP)
+        lengths = jnp.array([NP * ps, NP * ps // 2], jnp.int32)
+        for w in (8, 16):
+            out = paged_attention(q, kp, vp, pt, lengths, window=w,
+                                  interpret=True)
+            ref = paged_attention_ref(
+                q.reshape(B, KVH, H // KVH, D), kp.transpose(2, 0, 1, 3),
+                vp.transpose(2, 0, 1, 3), pt, lengths,
+                window=w).reshape(B, H, D)
+            np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_unmapped_pages_masked(self):
+        """-1 page-table entries (non-resident, thesis terms) contribute 0."""
+        B, H, KVH, D, ps = 1, 4, 4, 16, 4
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, H, D))
+        kp = jax.random.normal(ks[1], (4, ps, KVH, D))
+        vp = jax.random.normal(ks[2], (4, ps, KVH, D))
+        lengths = jnp.array([8], jnp.int32)
+        a = paged_attention(q, kp, vp, jnp.array([[0, 1, -1, -1]], jnp.int32),
+                            lengths, interpret=True)
+        b = paged_attention(q, kp, vp, jnp.array([[0, 1, 2, 3]], jnp.int32),
+                            lengths, interpret=True)
+        np.testing.assert_allclose(a, b, atol=1e-6)
+
+
+class TestFlashAttentionKernel:
+    @pytest.mark.parametrize("B,S,H,KVH,D", [
+        (1, 32, 4, 4, 16),
+        (2, 48, 4, 2, 32),    # GQA + padded seq (48 % 16 != 0 w/ block 32)
+        (1, 128, 8, 1, 64),   # MQA
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+    def test_causal_matches_ref(self, B, S, H, KVH, D, dtype):
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+        k = jax.random.normal(ks[1], (B, S, KVH, D), dtype)
+        v = jax.random.normal(ks[2], (B, S, KVH, D), dtype)
+        out = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                              interpret=True)
+        ref = flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(np.asarray(out, np.float32),
+                                   np.asarray(ref, np.float32), **_tol(dtype))
+
+    @pytest.mark.parametrize("window", [8, 24])
+    def test_sliding_window(self, window):
+        B, S, H, KVH, D = 1, 64, 4, 2, 16
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, KVH, D))
+        v = jax.random.normal(ks[2], (B, S, KVH, D))
+        out = flash_attention(q, k, v, causal=True, window=window,
+                              block_q=16, block_k=16, interpret=True)
+        ref = flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=True,
+            window=window).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+    def test_non_causal(self):
+        B, S, H, D = 2, 32, 4, 16
+        ks = jax.random.split(KEY, 3)
+        q = jax.random.normal(ks[0], (B, S, H, D))
+        k = jax.random.normal(ks[1], (B, S, H, D))
+        v = jax.random.normal(ks[2], (B, S, H, D))
+        out = flash_attention(q, k, v, causal=False, block_q=16, block_k=16,
+                              interpret=True)
+        ref = flash_attention_ref(
+            q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+            v.transpose(0, 2, 1, 3), causal=False).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(out, ref, atol=2e-5, rtol=2e-5)
+
+
+class TestPagePackKernels:
+    @pytest.mark.parametrize("P,n,elems", [(8, 4, 32), (64, 16, 128),
+                                           (16, 16, 64)])
+    @pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16, jnp.int32])
+    def test_gather(self, P, n, elems, dtype):
+        if dtype == jnp.int32:
+            pool = jax.random.randint(KEY, (P, elems), 0, 100, dtype)
+        else:
+            pool = jax.random.normal(KEY, (P, elems), dtype)
+        idx = jax.random.permutation(KEY, P)[:n].astype(jnp.int32)
+        out = gather_pages(pool, idx, interpret=True)
+        np.testing.assert_array_equal(np.asarray(out),
+                                      np.asarray(page_gather_ref(pool, idx)))
+
+    def test_scatter_preserves_untouched_rows(self):
+        pool = jax.random.normal(KEY, (16, 32))
+        idx = jnp.array([2, 9, 14], jnp.int32)
+        blk = jax.random.normal(jax.random.PRNGKey(1), (3, 32))
+        ref = page_scatter_ref(pool, idx, blk)
+        out = scatter_pages(pool.copy(), idx, blk, interpret=True)
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref))
+
+    def test_gather_scatter_roundtrip(self):
+        pool = jax.random.normal(KEY, (32, 8, 16))
+        idx = jnp.array([5, 1, 30, 7], jnp.int32)
+        pages = gather_pages(pool, idx, interpret=True)
+        pool2 = scatter_pages(jnp.zeros_like(pool), idx, pages,
+                              interpret=True)
+        np.testing.assert_allclose(np.asarray(pool2[np.asarray(idx)]),
+                                   np.asarray(pool[np.asarray(idx)]))

@@ -1,0 +1,189 @@
+"""Hypothesis property tests on the system's invariants."""
+
+import hypothesis.strategies as st
+import numpy as np
+import pytest
+from hypothesis import given, settings
+
+from repro.core import addresses as A
+from repro.core.addresses import NetlinkMessage, RAPFMessage, split_blocks
+from repro.core.engine import BufferPrep, RDMAEngine
+from repro.core.fault_fifo import FaultFIFO, FIFOEntry
+from repro.core.pagetable import FrameAllocator, PageState, PageTable
+from repro.core.resolver import Strategy
+
+
+class TestAddressInvariants:
+    @given(st.integers(0, 2**38), st.integers(1, 1 << 20))
+    @settings(max_examples=200, deadline=None)
+    def test_block_segmentation_covers_exactly(self, va, nbytes):
+        """R5 segmentation: blocks tile [va, va+nbytes) exactly, 16KB-aligned."""
+        blocks = split_blocks(va, nbytes)
+        assert sum(n for _, n in blocks) == nbytes
+        cur = va
+        for bva, bn in blocks:
+            assert bva == cur
+            assert bn <= A.BLOCK_SIZE
+            # no block crosses a 16 KB boundary
+            assert (bva // A.BLOCK_SIZE) == ((bva + bn - 1) // A.BLOCK_SIZE)
+            cur += bn
+
+    @given(st.integers(0, (1 << 22) - 1), st.integers(0, (1 << 14) - 1),
+           st.integers(0, (1 << 14) - 1), st.integers(0, (1 << 32) - 1),
+           st.integers(0, (1 << 16) - 1), st.integers(0, 1))
+    @settings(max_examples=200, deadline=None)
+    def test_netlink_roundtrip(self, src, tr, seq, iova, pdid, rw):
+        """Table 3.1 message encoding is lossless through the hex wire."""
+        msg = NetlinkMessage(src, tr, seq, iova, pdid, rw)
+        assert NetlinkMessage.decode_hex(msg.encode_hex()) == msg
+
+    @given(st.integers(0, (1 << 16) - 1), st.integers(0, (1 << 14) - 1),
+           st.integers(0, (1 << 12) - 1))
+    @settings(max_examples=100, deadline=None)
+    def test_rapf_roundtrip(self, pdid, tr, seq):
+        msg = RAPFMessage(wired_pdid=pdid, rcved_pdid=pdid, tr_id=tr,
+                          seq_num=seq)
+        w0, w1 = msg.encode_words()
+        dec = RAPFMessage.decode_words(w0, w1)
+        assert (dec.wired_pdid, dec.tr_id, dec.seq_num) == (pdid, tr, seq)
+        assert dec.opcode == A.OPCODE_RAPF
+
+    @given(st.integers(0, (1 << 22) - 1), st.integers(0, (1 << 14) - 1),
+           st.integers(0, (1 << 14) - 1), st.integers(0, (1 << 16) - 1),
+           st.integers(0, (1 << 32) - 1))
+    @settings(max_examples=150, deadline=None)
+    def test_fifo_entry_bit_layout_roundtrip(self, src, tr, seq, pdid, iova):
+        """Table 3.2: 128-bit FIFO entry packing is lossless."""
+        e = FIFOEntry(src_id=src, tr_id=tr, seq_num=seq, pdid=pdid,
+                      iova_field=iova)
+        w = e.pack_words()
+        for word in w:
+            assert 0 <= word < (1 << 32)
+        d = FIFOEntry.unpack_words(*w)
+        assert (d.src_id, d.tr_id, d.seq_num, d.pdid, d.iova_field) == \
+            (src, tr, seq, pdid, iova)
+
+
+class TestFIFOInvariants:
+    @given(st.lists(st.tuples(st.integers(0, 3), st.integers(0, 7)),
+                    min_size=1, max_size=200))
+    @settings(max_examples=100, deadline=None)
+    def test_dedup_only_drops_consecutive_duplicates(self, pushes):
+        """Every entry differing from its predecessor is preserved (up to
+        capacity); consecutive duplicates are absorbed."""
+        fifo = FaultFIFO(depth=512)
+        expected = []
+        last = None
+        for tr, page in pushes:
+            e = FIFOEntry(src_id=0, tr_id=tr, seq_num=0, pdid=1,
+                          iova_field=page)
+            if last is not None and last == (tr, page):
+                assert not fifo.push(e)
+            else:
+                assert fifo.push(e)
+                expected.append((tr, page))
+            last = (tr, page)
+        got = []
+        while not fifo.empty:
+            e = fifo.pop_entry()
+            got.append((e.tr_id, e.iova_field))
+        assert got == expected
+
+    def test_two_read_pop_fsm_safe_order(self):
+        fifo = FaultFIFO()
+        e = FIFOEntry(src_id=1, tr_id=2, seq_num=3, pdid=4, iova_field=5)
+        fifo.push(e)
+        # reading the high half first must NOT pop
+        fifo.read64(1)
+        assert len(fifo) == 1
+        fifo.read64(0)
+        fifo.read64(1)
+        assert len(fifo) == 0
+
+
+class TestPageTableInvariants:
+    @given(st.lists(st.sampled_from(["touch", "reclaim", "thp", "pin",
+                                     "unpin"]), min_size=1, max_size=60),
+           st.integers(0, 2**32 - 1))
+    @settings(max_examples=60, deadline=None)
+    def test_frame_accounting_consistent(self, ops, seed):
+        """Frames used == resident pages; no frame double-owned."""
+        rng = np.random.default_rng(seed)
+        alloc = FrameAllocator(total_frames=128)
+        pt = PageTable(1, alloc)
+        pt.mmap(0, 64 * A.PAGE_SIZE)
+        for op in ops:
+            vpn = int(rng.integers(0, 64))
+            try:
+                if op == "touch":
+                    pt.touch(vpn)
+                elif op == "reclaim":
+                    pt.reclaim(int(rng.integers(1, 8)))
+                elif op == "thp":
+                    pt.khugepaged_collapse(vpn)
+                elif op == "pin":
+                    pt.pin(vpn * A.PAGE_SIZE, A.PAGE_SIZE)
+                elif op == "unpin":
+                    pt.unpin(vpn * A.PAGE_SIZE, A.PAGE_SIZE)
+            except Exception:
+                raise
+            resident = sum(1 for e in pt.entries.values()
+                           if e.state == PageState.RESIDENT)
+            assert alloc.used == resident
+            frames = [e.frame for e in pt.entries.values()
+                      if e.state == PageState.RESIDENT]
+            assert len(frames) == len(set(frames)), "double-owned frame"
+            pinned = sum(1 for e in pt.entries.values() if e.pinned)
+            assert pinned == pt.pinned_pages
+
+    def test_pinned_pages_survive_thp_and_reclaim(self):
+        alloc = FrameAllocator(256)
+        pt = PageTable(1, alloc)
+        pt.mmap(0, 32 * A.PAGE_SIZE)
+        pt.pin(0, 4 * A.PAGE_SIZE)
+        for v in range(4, 32):
+            pt.touch(v)
+        pt.khugepaged_collapse(0)
+        pt.reclaim(100)
+        for v in range(4):
+            assert pt.is_resident(v), "pinned page evicted"
+
+
+@pytest.mark.parametrize("strategy", [Strategy.TOUCH_A_PAGE,
+                                      Strategy.TOUCH_AHEAD,
+                                      Strategy.KERNEL_RAPF])
+class TestTransferLiveness:
+    """Every transfer completes, whatever the fault pattern: the timeout is
+    a guaranteed backstop (the thesis' resilience argument)."""
+
+    @given(size=st.sampled_from([16, 256, 4096, 16384, 40960, 65536]),
+           src_faults=st.booleans(), dst_faults=st.booleans())
+    @settings(max_examples=25, deadline=None)
+    def test_transfer_always_completes(self, strategy, size, src_faults,
+                                       dst_faults):
+        eng = RDMAEngine(n_nodes=1, strategy=strategy)
+        pd = 1
+        sp = BufferPrep.FAULTING if src_faults else BufferPrep.TOUCHED
+        dp = BufferPrep.FAULTING if dst_faults else BufferPrep.TOUCHED
+        eng.map_buffer(0, pd, 0x10_0000_0000, size, prep=sp)
+        eng.map_buffer(0, pd, 0x20_0000_0000, size, prep=dp)
+        t = eng.remote_write(pd, 0, 0x10_0000_0000, 0, 0x20_0000_0000, size)
+        stats = eng.run_transfer(t)
+        assert t.complete
+        assert stats.latency_us > 0
+        # destination pages all resident after completion
+        pt = eng.nodes[0].pt(pd)
+        for vpn in A.pages_spanned(0x20_0000_0000, size):
+            assert pt.is_resident(vpn)
+
+    @given(size=st.sampled_from([4096, 16384, 65536]))
+    @settings(max_examples=10, deadline=None)
+    def test_no_faults_no_retransmissions(self, strategy, size):
+        eng = RDMAEngine(n_nodes=1, strategy=strategy)
+        eng.map_buffer(0, 1, 0, size, prep=BufferPrep.TOUCHED)
+        eng.map_buffer(0, 1, 0x20_0000_0000, size, prep=BufferPrep.TOUCHED)
+        t = eng.remote_write(1, 0, 0, 0, 0x20_0000_0000, size)
+        stats = eng.run_transfer(t)
+        assert stats.timeouts == 0
+        assert stats.retransmissions == 0
+        assert stats.dst_faults == 0 and stats.src_faults == 0
