@@ -5,7 +5,7 @@ from __future__ import annotations
 
 from benchmarks.common import check, emit
 from repro.core.costmodel import DEFAULT_COST_MODEL
-from repro.core.engine import BufferPrep
+from repro.api import BufferPrep
 from repro.core.experiments import SIZES, run_remote_write
 
 

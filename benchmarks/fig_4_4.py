@@ -5,7 +5,7 @@ so src+dst needs FEWER timeouts than src alone (Fig 4.6)."""
 from __future__ import annotations
 
 from benchmarks.common import check, emit
-from repro.core.engine import BufferPrep
+from repro.api import BufferPrep
 from repro.core.experiments import SIZES, run_remote_write
 from repro.core.resolver import Strategy
 

@@ -4,7 +4,7 @@ explicit-retransmit advantage), across the size sweep."""
 from __future__ import annotations
 
 from benchmarks.common import check, emit
-from repro.core.engine import BufferPrep
+from repro.api import BufferPrep
 from repro.core.experiments import SIZES, run_remote_write
 from repro.core.resolver import Strategy
 

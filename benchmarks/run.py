@@ -11,7 +11,7 @@ import sys
 
 from benchmarks import (fig_2_3_firehose, fig_4_1, fig_4_2, fig_4_3, fig_4_4,
                         fig_4_6, fig_4_7, table_4_1, thp_study,
-                        timeout_sweep)
+                        timeout_sweep, verbs_async)
 from benchmarks.common import summary
 
 MODULES = (
@@ -25,6 +25,8 @@ MODULES = (
     ("Timeout sweep + beyond-paper resolvers", timeout_sweep),
     ("THP study (§3.1.2.3 motivation)", thp_study),
     ("Fig 2.3 (Firehose working-set cliff)", fig_2_3_firehose),
+    ("Verbs API (async burst, batched CQ polling, multi-tenant)",
+     verbs_async),
 )
 
 

@@ -13,31 +13,34 @@ from __future__ import annotations
 
 from benchmarks.common import check, emit
 from repro.core import addresses as A
-from repro.core.costmodel import DEFAULT_COST_MODEL
-from repro.core.engine import BufferPrep, RDMAEngine
-from repro.core.resolver import Strategy
+from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                       Strategy)
 
 SIZE = 65536
 SRC, DST, PD = 0x10_0000_0000, 0x20_0000_0000, 1
 
 
 def run(strategy: Strategy, pinned: bool, iters: int = 8):
-    eng = RDMAEngine(n_nodes=1, strategy=strategy)
+    fabric = Fabric.build(FabricConfig(
+        n_nodes=1, default_policy=FaultPolicy(strategy=strategy)))
+    dom = fabric.open_domain(PD)
     prep = BufferPrep.PINNED if pinned else BufferPrep.TOUCHED
-    c1 = eng.map_buffer(0, PD, SRC, SIZE, prep=prep)
-    c2 = eng.map_buffer(0, PD, DST, SIZE, prep=prep)
-    pt = eng.nodes[0].pt(PD)
-    total = prep_cost = c1.total_us + c2.total_us
+    src = dom.register_memory(0, SRC, SIZE, prep=prep)
+    dst = dom.register_memory(0, DST, SIZE, prep=prep)
+    cq = fabric.create_cq(depth=4)
+    pt = fabric.nodes[0].pt(PD)
+    total = src.prep_cost.total_us + dst.prep_cost.total_us
     faults = 0
     for i in range(iters):
         # khugepaged scans between iterations: collapses both regions
         pt.khugepaged_collapse(A.page_index(SRC))
         pt.khugepaged_collapse(A.page_index(DST))
-        t0 = eng.loop.now
-        t = eng.remote_write(PD, 0, SRC, 0, DST, SIZE)
-        st = eng.run_transfer(t)
-        total += st.t_complete - t0
-        faults += st.src_faults + st.dst_faults
+        t0 = fabric.now
+        wr = dom.post_write(src, dst, cq=cq)
+        wc = wr.result()
+        cq.poll()
+        total += wc.t_complete - t0
+        faults += wr.stats.src_faults + wr.stats.dst_faults
     return total / iters, faults
 
 

@@ -6,7 +6,7 @@ from __future__ import annotations
 
 from benchmarks.common import check, emit
 from repro.core.addresses import TIMEOUT_SWEEP_US
-from repro.core.engine import BufferPrep
+from repro.api import BufferPrep
 from repro.core.experiments import run_remote_write
 from repro.core.resolver import Strategy
 

@@ -1,31 +1,37 @@
-"""Quickstart: the paper's mechanism in six steps.
+"""Quickstart: the paper's mechanism through the verbs API, in seven steps.
 
     PYTHONPATH=src python examples/quickstart.py
 
-1. Build a two-node virtual-address RDMA fabric.
-2. mmap buffers WITHOUT pinning (demand paging on).
-3. Issue a remote write whose destination pages are not resident.
+1. Build a two-node virtual-address RDMA fabric (``Fabric.build``).
+2. Open a protection domain (PDID) with a fault policy; register memory
+   WITHOUT pinning (demand paging on).
+3. Post an asynchronous remote write whose destination pages are not
+   resident — ``post_write`` returns a WorkRequest future immediately.
 4. Watch the mechanism: NACK -> fault FIFO -> driver tasklet ->
-   Touch-Ahead page-in -> RAPF -> retransmission -> completion.
+   Touch-Ahead page-in -> RAPF -> retransmission -> completion on the CQ.
 5. Compare against the pinning baseline.
-6. Same idea on the ML data plane: a paged KV pool with a spilled page.
+6. Multi-tenancy: a second domain on the SAME fabric resolving its faults
+   with a different policy (Kernel-RAPF — no user-space hop).
+7. Same idea on the ML data plane: a paged KV pool with a spilled page.
 """
 
-import numpy as np
-
-from repro.core import BufferPrep, RDMAEngine, Strategy
-from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                       Strategy)
 from repro.memory.kv_cache import PagedKVManager
 
-SRC, DST, SIZE, PD = 0x10_0000_0000, 0x20_0000_0000, 65536, 1
+SRC, DST, SIZE = 0x10_0000_0000, 0x20_0000_0000, 65536
 
-print("== 1-4: remote write with destination faults (Touch-Ahead) ==")
-eng = RDMAEngine(n_nodes=2, strategy=Strategy.TOUCH_AHEAD)
-eng.map_buffer(0, PD, SRC, SIZE, prep=BufferPrep.TOUCHED)
-eng.map_buffer(1, PD, DST, SIZE, prep=BufferPrep.FAULTING)   # not pinned!
-t = eng.remote_write(PD, 0, SRC, 1, DST, SIZE)
-st = eng.run_transfer(t)
-print(f"  64KB write completed in {st.latency_us:.1f} us")
+print("== 1-4: async remote write with destination faults (Touch-Ahead) ==")
+fabric = Fabric.build(FabricConfig(n_nodes=2))
+tenant = fabric.open_domain(1, policy=FaultPolicy(Strategy.TOUCH_AHEAD))
+src = tenant.register_memory(0, SRC, SIZE, prep=BufferPrep.TOUCHED)
+dst = tenant.register_memory(1, DST, SIZE)                   # not pinned!
+cq = fabric.create_cq(depth=16)
+wr = tenant.post_write(src, dst, cq=cq)       # returns before completion
+print(f"  posted wr_id={wr.wr_id}; done yet? {wr.done}")
+(wc,) = cq.wait(1)
+st = wc.stats
+print(f"  64KB write completed in {wc.latency_us:.1f} us")
 print(f"  faults at dst: {st.dst_faults}, FIFO entries handled: "
       f"{st.fifo_entries_handled} (skipped dups: {st.fifo_entries_skipped})")
 print(f"  explicit RAPF retransmissions: {st.rapf_retransmits}, "
@@ -34,18 +40,31 @@ print(f"  driver time {st.driver_us:.1f} us, library-thread time "
       f"{st.user_us:.1f} us")
 
 print("\n== 5: the pinning alternative ==")
-eng2 = RDMAEngine(n_nodes=2)
-c1 = eng2.map_buffer(0, PD, SRC, SIZE, prep=BufferPrep.PINNED)
-c2 = eng2.map_buffer(1, PD, DST, SIZE, prep=BufferPrep.PINNED)
-t2 = eng2.remote_write(PD, 0, SRC, 1, DST, SIZE)
-st2 = eng2.run_transfer(t2)
-print(f"  pinned transfer: {st2.latency_us:.1f} us + pin/unpin overhead "
-      f"{c1.total_us + c2.total_us:.1f} us on the critical path")
-print(f"  (and the memory stays locked — the thesis' utilization argument)")
+fabric2 = Fabric.build(FabricConfig(n_nodes=2))
+dom2 = fabric2.open_domain(1)
+p_src = dom2.register_memory(0, SRC, SIZE, prep=BufferPrep.PINNED)
+p_dst = dom2.register_memory(1, DST, SIZE, prep=BufferPrep.PINNED)
+cq2 = fabric2.create_cq()
+dom2.post_write(p_src, p_dst, cq=cq2)
+(wc2,) = cq2.wait(1)
+print(f"  pinned transfer: {wc2.latency_us:.1f} us + pin/unpin overhead "
+      f"{p_src.prep_cost.total_us + p_dst.prep_cost.total_us:.1f} us "
+      f"on the critical path")
+print("  (and the memory stays locked — the thesis' utilization argument)")
 
-print("\n== 6: the same mechanism on a paged KV cache ==")
+print("\n== 6: second tenant, same fabric, different fault policy ==")
+tenant_b = fabric.open_domain(2, policy=FaultPolicy(Strategy.KERNEL_RAPF))
+src_b = tenant_b.register_memory(0, SRC, SIZE, prep=BufferPrep.TOUCHED)
+dst_b = tenant_b.register_memory(1, 0x30_0000_0000, SIZE)
+wr_b = tenant_b.post_write(src_b, dst_b, cq=cq)
+wc_b = wr_b.result()
+print(f"  tenant A (TOUCH_AHEAD):  user-thread time {st.user_us:.1f} us")
+print(f"  tenant B (KERNEL_RAPF):  user-thread time "
+      f"{wc_b.stats.user_us:.1f} us (RAPF sent from kernel space)")
+
+print("\n== 7: the same mechanism on a paged KV cache ==")
 kv = PagedKVManager(n_frames=8, page_tokens=256, max_pages_per_seq=8,
-                    strategy=Strategy.TOUCH_AHEAD)
+                    policy=FaultPolicy(Strategy.TOUCH_AHEAD))
 kv.add_sequence(1)
 kv.append_tokens(1, 2048)          # fills the pool
 kv.add_sequence(2)

@@ -3,7 +3,7 @@
     PYTHONPATH=src python examples/rdma_fault_demo.py
 """
 
-from repro.core.engine import BufferPrep
+from repro.api import BufferPrep
 from repro.core.experiments import run_remote_write
 from repro.core.resolver import Strategy
 

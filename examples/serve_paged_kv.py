@@ -8,8 +8,8 @@ re-activation faults pages back in Touch-Ahead style.
 import jax
 import numpy as np
 
+from repro.api import FaultPolicy, Strategy
 from repro.configs import get_config
-from repro.core.resolver import Strategy
 from repro.models.config import reduced
 from repro.models.registry import model_for
 from repro.serving.engine import ServingEngine
@@ -22,7 +22,7 @@ params = model.init_params(cfg, jax.random.PRNGKey(0))
 for strategy in (Strategy.TOUCH_A_PAGE, Strategy.TOUCH_AHEAD):
     eng = ServingEngine(cfg, params, max_batch=2, max_len=96,
                         pool_frames=5,           # undersized on purpose
-                        strategy=strategy,
+                        policy=FaultPolicy(strategy=strategy),
                         sampler=SamplerConfig(temperature=0.0))
     rng = np.random.default_rng(0)
     reqs = [eng.submit(rng.integers(0, cfg.vocab_size, size=20),

@@ -1,0 +1,69 @@
+"""Verbs-style asynchronous API for virtual-address RDMA with page faults.
+
+This package is the public face of the reproduction: real-RDMA verbs
+semantics (builder, memory registration, asynchronous work requests,
+completion queues) over the simulated ExaNeSt fabric, with the thesis'
+page-fault handling underneath instead of the usual pinning ceremony.
+
+Thesis concept -> API name
+==========================
+
+===============================  ========================================
+Thesis / prototype concept        API construct
+===============================  ========================================
+PDID (protection-domain ID,       ``ProtectionDomain`` — ``Fabric.
+SMMU context bank, §1.3.1.4)      open_domain(pd)``; one tenant, one
+                                  SMMU context bank per node.
+Fault-resolution strategy         ``FaultPolicy`` — per-domain (or
+(Touch-A-Page / Touch-Ahead /     per-node / fabric-default) strategy +
+Kernel-RAPF, §3.2.1)              lookahead + pin budget; threaded into
+                                  ``Node.resolver_for(pd)``.
+mmap + touch/pin preparation      ``ProtectionDomain.register_memory()``
+(the thesis' three comparisons)   -> ``MemoryRegion`` with ``BufferPrep``
+                                  state and ``PrepCost`` accounting.
+PLDMA descriptor submission       ``post_write()`` / ``post_read()`` ->
+(§1.3.2.1)                        ``WorkRequest`` future.
+PLDMA status register polling     ``CompletionQueue.poll(max_entries)``
+(completion_poll_us)              and ``cq.wait(n, deadline_us)``.
+RAPF (Retransmit After Page       internal: fault FIFO -> driver tasklet
+Fault, §3.2.3.3) + fault FIFO     -> resolver -> mailbox; surfaced in
+(§3.2.3.1)                        ``WorkCompletion.stats``
+                                  (``rapf_retransmits``,
+                                  ``fifo_entries_handled``, ...).
+R5 retransmission timeout         ``FabricConfig.cost.timeout_us``.
+===============================  ========================================
+
+Quick tour::
+
+    from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                           Strategy)
+
+    fabric = Fabric.build(FabricConfig(n_nodes=2))
+    tenant_a = fabric.open_domain(1, policy=FaultPolicy(Strategy.TOUCH_AHEAD))
+    tenant_b = fabric.open_domain(2, policy=FaultPolicy(Strategy.KERNEL_RAPF))
+
+    src = tenant_a.register_memory(0, 0x10_0000_0000, 65536,
+                                   prep=BufferPrep.TOUCHED)
+    dst = tenant_a.register_memory(1, 0x20_0000_0000, 65536)  # faulting!
+
+    cq = fabric.create_cq(depth=64)
+    wr = tenant_a.post_write(src, dst, cq=cq)       # returns immediately
+    for wc in cq.wait(1):
+        print(wc.latency_us, wc.stats.dst_faults, wc.stats.rapf_retransmits)
+"""
+
+from repro.api.completion import (CompletionQueue, CQStats, WCStatus,
+                                  WorkCompletion, WorkQueueFull, WorkRequest,
+                                  WROpcode)
+from repro.api.config import FabricConfig
+from repro.api.fabric import Fabric, ProtectionDomain
+from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
+from repro.api.policy import DEFAULT_POLICY, FaultPolicy
+from repro.core.resolver import Strategy
+
+__all__ = [
+    "BufferPrep", "CompletionQueue", "CQStats", "DEFAULT_POLICY", "Fabric",
+    "FabricConfig", "FaultPolicy", "MemoryRegion", "PrepCost",
+    "ProtectionDomain", "RegionError", "Strategy", "WCStatus",
+    "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
+]

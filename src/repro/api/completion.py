@@ -1,0 +1,207 @@
+"""Asynchronous completion delivery: work requests and completion queues.
+
+Verbs semantics over the simulated fabric:
+
+* ``post_write()`` / ``post_read()`` return immediately with a
+  :class:`WorkRequest` future — nothing blocks on the page-fault handling
+  happening inside the fabric.
+* When a transfer's last block is ACKed, a :class:`WorkCompletion` is
+  delivered to the :class:`CompletionQueue` the request was posted
+  against.  Callers either ``cq.poll(max_entries)`` (non-blocking batch
+  drain, the CQ-polling hot loop of real RDMA apps) or
+  ``cq.wait(n, deadline_us)`` (advance simulated time until ``n``
+  completions are available or the deadline passes).
+* Each CQ caps its **outstanding** work requests; posting beyond the cap
+  raises :class:`WorkQueueFull` — backpressure, instead of the unbounded
+  submission the old engine allowed.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.api.fabric import Fabric
+    from repro.core.node import Transfer, TransferStats
+
+
+# livelock backstop for the wait loops, mirroring EventLoop.run()'s budget
+MAX_WAIT_EVENTS = 50_000_000
+
+
+def _advance_until(loop, done, deadline_us: float, max_events: int) -> bool:
+    """Step the event loop until ``done()`` holds.
+
+    Returns False if the loop drained or the (virtual-time) deadline passed
+    first; raises if the event budget trips (zero-delay livelock).
+    """
+    deadline = loop.now + deadline_us
+    steps = 0
+    while not done():
+        t_next = loop.peek_time()
+        if t_next is None or t_next > deadline:
+            return False
+        loop.step()
+        steps += 1
+        if steps >= max_events:
+            raise RuntimeError("event budget exhausted — livelock?")
+    return True
+
+
+class WorkQueueFull(RuntimeError):
+    """Posting would exceed the CQ's outstanding-work-request cap."""
+
+
+class WROpcode(enum.Enum):
+    WRITE = "write"
+    READ = "read"
+
+
+class WCStatus(enum.Enum):
+    SUCCESS = "success"
+
+
+@dataclasses.dataclass(frozen=True)
+class WorkCompletion:
+    """One CQ entry: the terminal record of a work request."""
+    wr_id: int
+    opcode: WROpcode
+    status: WCStatus
+    pd: int
+    nbytes: int
+    t_posted: float
+    t_complete: float
+    stats: "TransferStats"
+
+    @property
+    def latency_us(self) -> float:
+        return self.t_complete - self.t_posted
+
+
+class WorkRequest:
+    """Future handed back by ``post_write()`` / ``post_read()``."""
+
+    __slots__ = ("wr_id", "opcode", "cq", "transfer", "t_posted",
+                 "completion")
+
+    def __init__(self, wr_id: int, opcode: WROpcode, cq: "CompletionQueue",
+                 transfer: "Transfer", t_posted: float):
+        self.wr_id = wr_id
+        self.opcode = opcode
+        self.cq = cq
+        self.transfer = transfer
+        self.t_posted = t_posted
+        self.completion: Optional[WorkCompletion] = None
+
+    @property
+    def done(self) -> bool:
+        return self.completion is not None
+
+    @property
+    def stats(self) -> "TransferStats":
+        """Live per-transfer statistics (valid during and after flight)."""
+        return self.transfer.stats
+
+    def result(self, deadline_us: float = 5e6,
+               max_events: int = MAX_WAIT_EVENTS) -> WorkCompletion:
+        """Advance simulated time until THIS request completes.
+
+        The completion stays queued on the CQ for ``poll()``/``wait()`` —
+        ``result()`` only waits for it, mirroring how a verbs app can watch
+        one WR while a poller thread drains the CQ.
+        """
+        if not _advance_until(self.cq.fabric.loop,
+                              lambda: self.completion is not None,
+                              deadline_us, max_events):
+            raise TimeoutError(
+                f"wr_id={self.wr_id} incomplete after {deadline_us} us: "
+                f"stats={self.transfer.stats}")
+        return self.completion
+
+
+@dataclasses.dataclass
+class CQStats:
+    posted: int = 0
+    completed: int = 0
+    polls: int = 0
+    empty_polls: int = 0
+    max_queued: int = 0
+    rejected_posts: int = 0      # WorkQueueFull backpressure events
+
+
+class CompletionQueue:
+    """Bounded queue of :class:`WorkCompletion` entries.
+
+    ``max_outstanding`` (default: ``depth``) bounds in-flight work
+    requests so the CQ can never overflow: completions occupy at most the
+    slots the poster was granted.
+    """
+
+    def __init__(self, fabric: "Fabric", depth: int = 256,
+                 max_outstanding: Optional[int] = None):
+        if max_outstanding is None:
+            max_outstanding = depth
+        if max_outstanding > depth:
+            raise ValueError(
+                f"max_outstanding={max_outstanding} > depth={depth} could "
+                f"overflow the CQ")
+        self.fabric = fabric
+        self.depth = depth
+        self.max_outstanding = max_outstanding
+        self.outstanding = 0
+        self.stats = CQStats()
+        self._entries: deque[WorkCompletion] = deque()
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    # ------------------------------------------------------------- posting
+    def on_post(self) -> None:
+        """Reserve an outstanding slot (called by the posting verbs)."""
+        if self.outstanding >= self.max_outstanding:
+            self.stats.rejected_posts += 1
+            raise WorkQueueFull(
+                f"{self.outstanding} work requests outstanding "
+                f"(cap {self.max_outstanding}); poll the CQ first")
+        self.outstanding += 1
+        self.stats.posted += 1
+
+    def deliver(self, wc: WorkCompletion) -> None:
+        """Completion arrival (called by the fabric at ACK time).
+
+        The outstanding slot is NOT freed here: a queued completion still
+        occupies its CQ slot until the application drains it, which is what
+        keeps ``len(cq) <= max_outstanding <= depth`` an invariant.
+        """
+        self._entries.append(wc)
+        self.stats.completed += 1
+        self.stats.max_queued = max(self.stats.max_queued,
+                                    len(self._entries))
+
+    # ------------------------------------------------------------ draining
+    def poll(self, max_entries: int = 16) -> list[WorkCompletion]:
+        """Non-blocking batch drain of up to ``max_entries`` completions."""
+        self.stats.polls += 1
+        if not self._entries:
+            self.stats.empty_polls += 1
+            return []
+        out = []
+        while self._entries and len(out) < max_entries:
+            out.append(self._entries.popleft())
+            self.outstanding -= 1           # drained entry frees its slot
+        return out
+
+    def wait(self, n: int = 1, deadline_us: float = 5e6,
+             max_events: int = MAX_WAIT_EVENTS) -> list[WorkCompletion]:
+        """Advance simulated time until ``n`` completions are queued (or the
+        deadline passes), then drain and return up to ``n`` of them.
+
+        May return fewer than ``n`` entries if the deadline expires first —
+        callers check ``len()``, as with a timed verbs CQ wait.
+        """
+        _advance_until(self.fabric.loop, lambda: len(self._entries) >= n,
+                       deadline_us, max_events)
+        return self.poll(max_entries=n)

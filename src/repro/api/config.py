@@ -1,0 +1,53 @@
+"""Declarative fabric configuration (replaces the ``RDMAEngine`` kwargs blob).
+
+A :class:`FabricConfig` fully describes a simulated ExaNeSt fabric:
+topology (nodes, hops), hardware behaviour (HUPCF, fault model, frame
+pool), the calibrated cost model, and fault-handling policy at three
+scopes — fabric-wide default, per node, and (via
+:meth:`~repro.api.fabric.Fabric.open_domain`) per protection domain.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
+from repro.core.fault import FaultModel
+from repro.api.policy import FaultPolicy
+
+
+@dataclasses.dataclass
+class FabricConfig:
+    """Everything needed to build a :class:`~repro.api.fabric.Fabric`.
+
+    * ``n_nodes`` / ``hops`` — topology: full-duplex links between every
+      pair of nodes, ``hops`` network hops apart (loopback is one hop).
+    * ``cost`` — the calibrated :class:`~repro.core.costmodel.CostModel`
+      (``None`` = thesis defaults).
+    * ``hupcf`` — SMMU Hit-Under-Previous-Context-Fault: translate
+      resident pages while a fault is outstanding (§3.2.1).
+    * ``fault_model`` — TERMINATE (the prototype) or STALL.
+    * ``frames_per_node`` — physical frame pool per node.
+    * ``default_policy`` — fabric-wide fault policy; per-node overrides in
+      ``node_policies`` (node index -> policy); per-domain overrides are
+      given to ``Fabric.open_domain``.
+    """
+
+    n_nodes: int = 2
+    hops: int = 1
+    cost: Optional[CostModel] = None
+    hupcf: bool = True
+    fault_model: FaultModel = FaultModel.TERMINATE
+    frames_per_node: int = 1 << 20
+    default_policy: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
+    node_policies: dict = dataclasses.field(default_factory=dict)
+
+    def __post_init__(self) -> None:
+        if self.n_nodes < 1:
+            raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.cost is None:
+            self.cost = DEFAULT_COST_MODEL
+
+    def policy_for_node(self, node_idx: int) -> FaultPolicy:
+        return self.node_policies.get(node_idx, self.default_policy)

@@ -1,0 +1,275 @@
+"""The fabric builder and protection-domain verbs.
+
+``Fabric.build(FabricConfig(...))`` replaces the 9-kwarg ``RDMAEngine``
+constructor: it instantiates the event loop, the nodes (A53s + SMMU +
+fault FIFO + R5 + PLDMA), and full-duplex links between every pair, then
+hands out :class:`ProtectionDomain` handles.  Each domain carries its own
+:class:`~repro.api.policy.FaultPolicy`, so two tenants of one fabric can
+resolve faults with different strategies — the multi-tenant scenario the
+single global resolver of the seed engine could not express.
+
+Data-path verbs live on the domain: ``register_memory`` returns
+:class:`~repro.api.memory.MemoryRegion` handles; ``post_write`` /
+``post_read`` are asynchronous and deliver completions to a
+:class:`~repro.api.completion.CompletionQueue`.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.core import addresses as A
+from repro.core.node import Link, Node, Transfer
+from repro.core.pagetable import FrameAllocator
+from repro.core.simulator import EventLoop
+from repro.api.completion import (CompletionQueue, WCStatus, WorkCompletion,
+                                  WorkRequest, WROpcode)
+from repro.api.config import FabricConfig
+from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
+from repro.api.policy import FaultPolicy
+
+
+class ProtectionDomain:
+    """One tenant: a PDID spanning its nodes, with its own fault policy."""
+
+    def __init__(self, fabric: "Fabric", pd: int, policy: FaultPolicy,
+                 node_policies: Optional[dict] = None):
+        self.fabric = fabric
+        self.pd = pd
+        self.policy = policy
+        # node index -> the policy actually governing this domain there
+        # (per-node FabricConfig overrides when no domain policy was given)
+        self._node_policies = node_policies or {}
+
+    def policy_for(self, node_idx: int) -> FaultPolicy:
+        """The effective fault policy of this domain on ``node_idx``."""
+        return self._node_policies.get(node_idx, self.policy)
+
+    @property
+    def nodes(self) -> list[int]:
+        """Node indices this domain is open on."""
+        return sorted(self._node_policies)
+
+    # ------------------------------------------------------------- memory
+    def register_memory(self, node_idx: int, va: int, nbytes: int,
+                        prep: BufferPrep = BufferPrep.FAULTING,
+                        charge: bool = True) -> MemoryRegion:
+        """mmap (+ touch/pin per ``prep``) a buffer on ``node_idx``.
+
+        Returns a :class:`MemoryRegion` owning the prep state and the
+        user-side cost accounting (``charge=False`` zeroes the accounting
+        for warm-up registrations, as in the thesis' methodology).
+        """
+        fabric = self.fabric
+        if node_idx not in self._node_policies:
+            raise RegionError(
+                f"domain pd={self.pd} is not open on node {node_idx} "
+                f"(open on {self.nodes}); pass it in open_domain(nodes=...)")
+        node = fabric.nodes[node_idx]
+        pt = node.pt(self.pd)
+        pt.mmap(va, nbytes)
+        cost = PrepCost(mmap_us=fabric.cost.mmap_us(nbytes))
+        if prep is BufferPrep.TOUCHED:
+            for vpn in A.pages_spanned(va, nbytes):
+                pt.touch(vpn)
+            cost.prep_us = fabric.cost.touch_us(nbytes)
+        elif prep is BufferPrep.PINNED:
+            pt.pin(va, nbytes)
+            cost.prep_us = fabric.cost.pin_us(nbytes)
+            cost.release_us = fabric.cost.unpin_us(nbytes)
+        if not charge:
+            cost = PrepCost()
+        fabric._rkey_counter += 1
+        return MemoryRegion(self, node_idx, va, nbytes, prep, cost,
+                            rkey=fabric._rkey_counter)
+
+    # -------------------------------------------------------------- verbs
+    def post_write(self, src: MemoryRegion, dst: MemoryRegion,
+                   cq: CompletionQueue, nbytes: Optional[int] = None,
+                   src_offset: int = 0, dst_offset: int = 0,
+                   wr_id: Optional[int] = None) -> WorkRequest:
+        """Asynchronous remote write ``src -> dst``; completion on ``cq``."""
+        self._check_regions(src, dst)
+        nbytes = nbytes if nbytes is not None else min(src.length, dst.length)
+        src_va = src.addr + src_offset
+        dst_va = dst.addr + dst_offset
+        if not src.contains(src_va, nbytes) or not dst.contains(dst_va, nbytes):
+            raise RegionError("work request outside its memory regions")
+        assert (src_va % A.PAGE_SIZE) == (dst_va % A.PAGE_SIZE), \
+            "fabric requires equally page-aligned src/dst (as in the thesis runs)"
+        fabric = self.fabric
+        cq.on_post()
+        wr_id = wr_id if wr_id is not None else fabric._next_wr_id()
+        t = fabric._start_write(self.pd, src.node_id, src_va,
+                                dst.node_id, dst_va, nbytes)
+        return fabric._track(wr_id, WROpcode.WRITE, cq, t)
+
+    def post_read(self, target: MemoryRegion, local: MemoryRegion,
+                  cq: CompletionQueue, nbytes: Optional[int] = None,
+                  target_offset: int = 0, local_offset: int = 0,
+                  wr_id: Optional[int] = None) -> WorkRequest:
+        """Asynchronous remote read: request forwarded to the target node,
+        whose R5 turns it into a write back to the initiator (§1.3.2.2)."""
+        self._check_regions(target, local)
+        nbytes = nbytes if nbytes is not None else min(target.length,
+                                                      local.length)
+        target_va = target.addr + target_offset
+        local_va = local.addr + local_offset
+        if not target.contains(target_va, nbytes) or \
+                not local.contains(local_va, nbytes):
+            raise RegionError("work request outside its memory regions")
+        assert (target_va % A.PAGE_SIZE) == (local_va % A.PAGE_SIZE), \
+            "fabric requires equally page-aligned target/local (as in the thesis runs)"
+        fabric = self.fabric
+        cq.on_post()
+        wr_id = wr_id if wr_id is not None else fabric._next_wr_id()
+        t = fabric._start_read(self.pd, target.node_id, target_va,
+                               local.node_id, local_va, nbytes)
+        return fabric._track(wr_id, WROpcode.READ, cq, t)
+
+    def _check_regions(self, *regions: MemoryRegion) -> None:
+        for mr in regions:
+            if not mr.registered:
+                raise RegionError(f"region rkey={mr.rkey} is deregistered")
+            if mr.domain is not self:
+                raise RegionError(
+                    f"region rkey={mr.rkey} belongs to pd={mr.pd}, "
+                    f"not pd={self.pd}")
+
+
+class Fabric:
+    """A built simulated fabric: nodes, links, domains, CQs."""
+
+    def __init__(self, config: FabricConfig):
+        self.config = config
+        self.cost = config.cost
+        self.loop = EventLoop()
+        self.nodes: list[Node] = []
+        for i in range(config.n_nodes):
+            policy = config.policy_for_node(i)
+            node = Node(self.loop, self.cost, i,
+                        policy.make_resolver(self.cost),
+                        allocator=FrameAllocator(config.frames_per_node),
+                        hupcf=config.hupcf, fault_model=config.fault_model)
+            self.nodes.append(node)
+        # full-duplex links between every pair (and loopback), one hop each
+        for a in self.nodes:
+            for b in self.nodes:
+                a.links_to[b.node_id] = Link(
+                    self.loop, self.cost,
+                    hops=config.hops if a is not b else 1)
+                a.peer[b.node_id] = b
+        self.domains: dict[int, ProtectionDomain] = {}
+        self._tid = 0
+        self._wr_counter = 0
+        self._rkey_counter = 0
+
+    @classmethod
+    def build(cls, config: Optional[FabricConfig] = None, **overrides) -> "Fabric":
+        """Builder entry point: ``Fabric.build(FabricConfig(...))`` or
+        ``Fabric.build(n_nodes=4, default_policy=...)``."""
+        if config is None:
+            config = FabricConfig(**overrides)
+        elif overrides:
+            raise TypeError("pass either a FabricConfig or keyword "
+                            "overrides, not both")
+        return cls(config)
+
+    # ------------------------------------------------------------- domains
+    def open_domain(self, pd: int,
+                    policy: Optional[FaultPolicy] = None,
+                    nodes: Optional[list[int]] = None) -> ProtectionDomain:
+        """Create protection domain ``pd`` on ``nodes`` (default: all).
+
+        ``policy`` overrides the per-node / fabric-default fault policy for
+        THIS domain: its resolver is threaded into each node's fault
+        handlers via ``Node.resolver_for(pd)``.
+        """
+        if pd in self.domains:
+            raise ValueError(f"domain pd={pd} already open")
+        node_idxs = list(nodes) if nodes is not None \
+            else list(range(len(self.nodes)))
+        # Each domain owns one SMMU context bank (pd % NUM_CONTEXT_BANKS).
+        # A second pd landing on an in-use bank would silently overwrite the
+        # bank's page table — cross-tenant corruption — so reject it here.
+        bank = pd % A.NUM_CONTEXT_BANKS
+        for i in node_idxs:
+            clash = [q for q in self.nodes[i].page_tables
+                     if q % A.NUM_CONTEXT_BANKS == bank]
+            if clash:
+                raise ValueError(
+                    f"pd={pd} maps to SMMU context bank {bank}, already "
+                    f"claimed by domain pd={clash[0]} on node {i} "
+                    f"(bank = pd % {A.NUM_CONTEXT_BANKS})")
+        effective = {i: policy or self.config.policy_for_node(i)
+                     for i in node_idxs}
+        for i in node_idxs:
+            resolver = (policy.make_resolver(self.cost)
+                        if policy is not None else None)
+            self.nodes[i].create_domain(
+                pd, pin_limit_bytes=effective[i].pin_limit_bytes,
+                resolver=resolver)
+        dom = ProtectionDomain(self, pd,
+                               policy or self.config.default_policy,
+                               node_policies=effective)
+        self.domains[pd] = dom
+        return dom
+
+    def domain(self, pd: int) -> Optional[ProtectionDomain]:
+        return self.domains.get(pd)
+
+    # ----------------------------------------------------------------- CQs
+    def create_cq(self, depth: int = 256,
+                  max_outstanding: Optional[int] = None) -> CompletionQueue:
+        return CompletionQueue(self, depth=depth,
+                               max_outstanding=max_outstanding)
+
+    # ------------------------------------------------------------ progress
+    @property
+    def now(self) -> float:
+        return self.loop.now
+
+    def progress(self, until: Optional[float] = None) -> None:
+        """Run the event loop (to ``until``, or until drained)."""
+        self.loop.run(until=until)
+
+    # --------------------------------------------------- transfer internals
+    def _next_wr_id(self) -> int:
+        self._wr_counter += 1
+        return self._wr_counter
+
+    def _start_write(self, pd: int, src_node: int, src_va: int,
+                     dst_node: int, dst_va: int, nbytes: int) -> Transfer:
+        self._tid += 1
+        t = Transfer(self._tid, pd, self.nodes[src_node],
+                     self.nodes[dst_node], src_va, dst_va, nbytes)
+        self.nodes[src_node].r5.submit(t)
+        return t
+
+    def _start_read(self, pd: int, target_node: int, target_va: int,
+                    local_node: int, local_va: int, nbytes: int) -> Transfer:
+        self._tid += 1
+        t = Transfer(self._tid, pd, self.nodes[target_node],
+                     self.nodes[local_node], target_va, local_va, nbytes)
+        # request packet: initiator -> target mailbox
+        req_delay = (self.cost.pckzer_to_mbox_us
+                     + (self.cost.hop_latency_us + self.cost.packet_wire_us(16)
+                        if target_node != local_node else 0.0))
+        self.loop.schedule(req_delay, self.nodes[target_node].r5.submit, t)
+        return t
+
+    def _track(self, wr_id: int, opcode: WROpcode, cq: CompletionQueue,
+               transfer: Transfer) -> WorkRequest:
+        wr = WorkRequest(wr_id, opcode, cq, transfer, t_posted=self.loop.now)
+
+        def _on_complete(t: Transfer) -> None:
+            wc = WorkCompletion(wr_id=wr.wr_id, opcode=wr.opcode,
+                                status=WCStatus.SUCCESS, pd=t.pd,
+                                nbytes=t.nbytes, t_posted=wr.t_posted,
+                                t_complete=t.stats.t_complete,
+                                stats=t.stats)
+            wr.completion = wc
+            cq.deliver(wc)
+
+        transfer.on_complete = _on_complete
+        return wr

@@ -1,0 +1,44 @@
+"""Per-tenant fault-handling policy (the verbs API's "QoS knob").
+
+The seed engine wired ONE global :class:`~repro.core.resolver.Resolver`
+into every node, so all tenants of a fabric shared one fault-resolution
+strategy.  A :class:`FaultPolicy` is the declarative replacement: it names
+a strategy, its lookahead, and the domain's pinnable-memory budget, and is
+attached *per protection domain* (or per node, or fabric-wide as the
+default) when the fabric is built.  ``Node.resolver_for(pd)`` selects the
+right resolver at fault-handling time.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+from repro.core.addresses import PAGES_PER_BLOCK
+from repro.core.costmodel import CostModel
+from repro.core.resolver import Resolver, Strategy
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPolicy:
+    """How one protection domain's page faults are resolved.
+
+    * ``strategy`` — the thesis resolution strategy (Touch-A-Page,
+      Touch-Ahead, ...; see :class:`~repro.core.resolver.Strategy`).
+    * ``lookahead`` — pages paged in per fault event for the
+      ``TOUCH_AHEAD_N`` / ``STREAM`` strategies.
+    * ``pin_limit_bytes`` — the domain's pinnable-memory budget M (the
+      Firehose constraint); ``None`` = unlimited.
+    """
+
+    strategy: Strategy = Strategy.TOUCH_AHEAD
+    lookahead: int = PAGES_PER_BLOCK
+    pin_limit_bytes: Optional[int] = None
+
+    def make_resolver(self, cost: CostModel) -> Resolver:
+        """Instantiate the resolver this policy describes."""
+        return Resolver(strategy=self.strategy, cost=cost,
+                        lookahead=self.lookahead)
+
+
+DEFAULT_POLICY = FaultPolicy()

@@ -1,5 +1,9 @@
 """Core: the paper's contribution — page-fault handling for virtual-address
-RDMA — as a composable library (see DESIGN.md §2 for the TPU adaptation)."""
+RDMA — as a composable library (see DESIGN.md §2 for the TPU adaptation).
+
+The public, verbs-style API lives in :mod:`repro.api` (``Fabric`` /
+``ProtectionDomain`` / ``MemoryRegion`` / ``CompletionQueue``); the
+``RDMAEngine`` re-exported here is a deprecated shim over it."""
 
 from repro.core.addresses import (BLOCK_SIZE, MTU, PAGE_SIZE, PAGES_PER_BLOCK,
                                   NetlinkMessage, RAPFMessage)

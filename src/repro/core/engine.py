@@ -1,48 +1,38 @@
-"""User-level RDMA engine API over the simulated ExaNeSt fabric.
+"""DEPRECATED synchronous engine — thin shim over :mod:`repro.api`.
 
-This is the "page fault library" + PLDMA user API of the thesis, exposed the
-way an application would use it: map buffers, optionally prepare them
-(pin / touch / leave faulting), then issue remote writes/reads and collect
-per-transfer statistics.  `benchmarks/` and the property tests drive
-everything through this class.
+``RDMAEngine`` was the original flat, synchronous API: a 9-kwarg
+constructor, one global fault-resolution strategy, raw ``(pd, va,
+nbytes)`` triples, and blocking ``run_transfer``.  It is kept only so the
+seed tests and any out-of-tree callers keep working; everything it does is
+delegated to the verbs-style API:
+
+* ``RDMAEngine(...)``          -> ``Fabric.build(FabricConfig(...))``
+* ``map_buffer(...)``          -> ``domain.register_memory(...)``
+* ``remote_write/read(...)``   -> ``domain.post_write/post_read(...)``
+* ``run_transfer(t)``          -> ``cq.wait(...)`` / ``wr.result(...)``
+
+New code should import from :mod:`repro.api` directly.
 """
 
 from __future__ import annotations
 
-import dataclasses
-import enum
+import warnings
 from typing import Optional
 
 from repro.core import addresses as A
-from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
+from repro.core.costmodel import CostModel
 from repro.core.fault import FaultModel
-from repro.core.node import Link, Node, Transfer, TransferStats
-from repro.core.pagetable import FrameAllocator
-from repro.core.resolver import Resolver, Strategy
-from repro.core.simulator import EventLoop
+from repro.core.node import Transfer, TransferStats
+from repro.core.resolver import Strategy
+# Canonical homes are repro.api.memory; re-exported here for the old names.
+from repro.api.memory import BufferPrep, PrepCost
 
-
-class BufferPrep(enum.Enum):
-    """How a buffer is prepared before the RDMA (the thesis' comparisons)."""
-    FAULTING = "faulting"        # mmap'ed only: every page faults on access
-    TOUCHED = "touched"          # pre-touched: resident, unpinned
-    PINNED = "pinned"            # pinned (and therefore resident)
-
-
-@dataclasses.dataclass
-class PrepCost:
-    """User-side microseconds spent preparing / releasing one buffer."""
-    mmap_us: float = 0.0
-    prep_us: float = 0.0         # touch or pin
-    release_us: float = 0.0      # unpin (pin case)
-    munmap_us: float = 0.0
-
-    @property
-    def total_us(self) -> float:
-        return self.mmap_us + self.prep_us + self.release_us + self.munmap_us
+__all__ = ["BufferPrep", "PrepCost", "RDMAEngine"]
 
 
 class RDMAEngine:
+    """Deprecated: use :class:`repro.api.Fabric` (see module docstring)."""
+
     def __init__(self, n_nodes: int = 2,
                  strategy: Strategy = Strategy.TOUCH_AHEAD,
                  cost: Optional[CostModel] = None,
@@ -52,51 +42,38 @@ class RDMAEngine:
                  pin_limit_bytes: Optional[int] = None,
                  lookahead: int = A.PAGES_PER_BLOCK,
                  hops: int = 1):
-        self.loop = EventLoop()
-        self.cost = cost or DEFAULT_COST_MODEL
-        self.resolver = Resolver(strategy=strategy, cost=self.cost,
-                                 lookahead=lookahead)
+        warnings.warn(
+            "RDMAEngine is deprecated; build a repro.api.Fabric with a "
+            "FabricConfig and use the verbs API (register_memory / "
+            "post_write / CompletionQueue)", DeprecationWarning, stacklevel=2)
+        from repro.api.config import FabricConfig
+        from repro.api.fabric import Fabric
+        from repro.api.policy import FaultPolicy
+        policy = FaultPolicy(strategy=strategy, lookahead=lookahead,
+                             pin_limit_bytes=pin_limit_bytes)
+        self.fabric = Fabric.build(FabricConfig(
+            n_nodes=n_nodes, hops=hops, cost=cost, hupcf=hupcf,
+            fault_model=fault_model, frames_per_node=frames_per_node,
+            default_policy=policy))
+        # compatibility attributes the seed tests/benchmarks reach for
+        self.loop = self.fabric.loop
+        self.cost = self.fabric.cost
+        self.nodes = self.fabric.nodes
+        self.resolver = self.fabric.nodes[0].resolver
         self.pin_limit_bytes = pin_limit_bytes
-        self.nodes: list[Node] = []
-        for i in range(n_nodes):
-            node = Node(self.loop, self.cost, i, self.resolver,
-                        allocator=FrameAllocator(frames_per_node),
-                        hupcf=hupcf, fault_model=fault_model)
-            self.nodes.append(node)
-        # full-duplex links between every pair (and loopback), one hop each
-        for a in self.nodes:
-            for b in self.nodes:
-                a.links_to[b.node_id] = Link(self.loop, self.cost,
-                                             hops=hops if a is not b else 1)
-                a.peer[b.node_id] = b
-        self._tid = 0
 
     # ------------------------------------------------------------- buffers
     def map_buffer(self, node_idx: int, pd: int, va: int, nbytes: int,
                    prep: BufferPrep = BufferPrep.FAULTING,
                    charge: bool = True) -> PrepCost:
         """mmap (+ touch/pin) a buffer; returns the user-side cost."""
-        node = self.nodes[node_idx]
-        if pd not in node.page_tables:
-            node.create_domain(pd, pin_limit_bytes=self.pin_limit_bytes)
-        pt = node.pt(pd)
-        pt.mmap(va, nbytes)
-        cost = PrepCost(mmap_us=self.cost.mmap_us(nbytes))
-        if prep is BufferPrep.TOUCHED:
-            for vpn in A.pages_spanned(va, nbytes):
-                pt.touch(vpn)
-            cost.prep_us = self.cost.touch_us(nbytes)
-        elif prep is BufferPrep.PINNED:
-            pt.pin(va, nbytes)
-            cost.prep_us = self.cost.pin_us(nbytes)
-            cost.release_us = self.cost.unpin_us(nbytes)
-        if not charge:
-            return PrepCost()
-        return cost
+        dom = self.fabric.domain(pd) or self.fabric.open_domain(pd)
+        mr = dom.register_memory(node_idx, va, nbytes, prep=prep,
+                                 charge=charge)
+        return mr.prep_cost
 
     def unmap_buffer(self, node_idx: int, pd: int, va: int, nbytes: int) -> float:
-        node = self.nodes[node_idx]
-        node.pt(pd).munmap(va, nbytes)
+        self.nodes[node_idx].pt(pd).munmap(va, nbytes)
         return self.cost.munmap_us(nbytes)
 
     # ------------------------------------------------------------ transfers
@@ -104,25 +81,15 @@ class RDMAEngine:
                      dst_node: int, dst_va: int, nbytes: int) -> Transfer:
         assert (src_va % A.PAGE_SIZE) == (dst_va % A.PAGE_SIZE), \
             "engine requires equally page-aligned src/dst (as in the thesis runs)"
-        self._tid += 1
-        t = Transfer(self._tid, pd, self.nodes[src_node], self.nodes[dst_node],
-                     src_va, dst_va, nbytes)
-        self.nodes[src_node].r5.submit(t)
-        return t
+        return self.fabric._start_write(pd, src_node, src_va,
+                                        dst_node, dst_va, nbytes)
 
     def remote_read(self, pd: int, target_node: int, target_va: int,
                     local_node: int, local_va: int, nbytes: int) -> Transfer:
         """Remote read = request forwarded to the target, whose R5 turns it
         into a write back to the initiator (§1.3.2.2)."""
-        self._tid += 1
-        t = Transfer(self._tid, pd, self.nodes[target_node],
-                     self.nodes[local_node], target_va, local_va, nbytes)
-        # request packet: initiator -> target mailbox
-        req_delay = (self.cost.pckzer_to_mbox_us
-                     + (self.cost.hop_latency_us + self.cost.packet_wire_us(16)
-                        if target_node != local_node else 0.0))
-        self.loop.schedule(req_delay, self.nodes[target_node].r5.submit, t)
-        return t
+        return self.fabric._start_read(pd, target_node, target_va,
+                                       local_node, local_va, nbytes)
 
     def run(self, until: Optional[float] = None) -> None:
         self.loop.run(until=until)

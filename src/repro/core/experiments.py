@@ -20,9 +20,9 @@ from typing import Optional
 
 from repro.core import addresses as A
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL, cost_model_with_timeout
-from repro.core.engine import BufferPrep, RDMAEngine
 from repro.core.node import TransferStats
 from repro.core.resolver import Strategy
+from repro.api import BufferPrep, Fabric, FabricConfig, FaultPolicy
 
 # the thesis' transfer-size sweep (Chapter 4)
 SIZES = (16, 64, 256, 1024, 4096, 16384, 32768, 65536)
@@ -52,18 +52,21 @@ def run_remote_write(size: int,
     if cost is None:
         cost = (cost_model_with_timeout(timeout_us) if timeout_us is not None
                 else DEFAULT_COST_MODEL)
-    eng = RDMAEngine(n_nodes=max(1, n_nodes), strategy=strategy, cost=cost,
-                     lookahead=lookahead, hupcf=hupcf)
+    fabric = Fabric.build(FabricConfig(
+        n_nodes=max(1, n_nodes), cost=cost, hupcf=hupcf,
+        default_policy=FaultPolicy(strategy=strategy, lookahead=lookahead)))
     dst_node = 0 if n_nodes <= 1 else 1
-    pd = 1
-    prep_src = eng.map_buffer(0, pd, SRC_BASE, size, prep=src_prep)
-    prep_dst = eng.map_buffer(dst_node, pd, DST_BASE, size, prep=dst_prep)
-    t0 = eng.loop.now
-    t = eng.remote_write(pd, 0, SRC_BASE, dst_node, DST_BASE, size)
-    stats = eng.run_transfer(t)
-    return RunResult(size=size, latency_us=stats.t_complete - t0,
-                     prep_us=prep_src.total_us + prep_dst.total_us,
-                     stats=stats)
+    dom = fabric.open_domain(1)
+    src = dom.register_memory(0, SRC_BASE, size, prep=src_prep)
+    dst = dom.register_memory(dst_node, DST_BASE, size, prep=dst_prep)
+    cq = fabric.create_cq(depth=4)
+    t0 = fabric.now
+    wr = dom.post_write(src, dst, cq=cq)
+    wc = wr.result()
+    fabric.progress()           # drain trailing driver/library-thread work
+    return RunResult(size=size, latency_us=wc.t_complete - t0,
+                     prep_us=src.prep_cost.total_us + dst.prep_cost.total_us,
+                     stats=wr.stats)
 
 
 def fault_sweep(where: str, strategy: Strategy,

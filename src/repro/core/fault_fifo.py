@@ -116,6 +116,16 @@ class FaultFIFO:
         self.stats.max_occupancy = max(self.stats.max_occupancy, len(self._q))
         return True
 
+    def break_dedup(self) -> None:
+        """Forget the last-pushed entry, as an interleaved packet stream does.
+
+        The hardware dedup only compares against the *immediately preceding*
+        slave error; when two blocks' NACK packets interleave on the wire,
+        the comparison never matches (§ Fig 4.2).  The PLDMA model calls
+        this between pushes to reproduce that effect.
+        """
+        self._last_pushed = None
+
     # ---------------------------------------------------- two-read-pop FSM
     def read64(self, half: int) -> int:
         """AXI-lite 64-bit read.  ``half``: 0 = low, 1 = high (pops).

@@ -151,7 +151,8 @@ class Node:
         self.loop = loop
         self.cost = cost
         self.node_id = node_id
-        self.resolver = resolver
+        self.resolver = resolver                 # node-default policy
+        self.domain_resolvers: dict[int, Resolver] = {}   # per-PDID override
         self.allocator = allocator or FrameAllocator()
         self.page_tables: dict[int, PageTable] = {}
         self.smmu = SMMU(node_id, interrupt_handler=self._on_smmu_interrupt)
@@ -171,15 +172,39 @@ class Node:
         self.netlink_log: list[NetlinkMessage] = []
 
     # ------------------------------------------------------------- domains
-    def create_domain(self, pd: int, pin_limit_bytes: Optional[int] = None) -> PageTable:
+    def create_domain(self, pd: int, pin_limit_bytes: Optional[int] = None,
+                      resolver: Optional[Resolver] = None) -> PageTable:
+        """Create protection domain ``pd``, optionally with its own fault
+        resolver (per-domain :class:`~repro.api.policy.FaultPolicy`)."""
         pt = PageTable(pd, self.allocator, pin_limit_bytes=pin_limit_bytes)
         self.page_tables[pd] = pt
+        if resolver is not None:
+            self.domain_resolvers[pd] = resolver
         self.smmu.attach_domain(pd % A.NUM_CONTEXT_BANKS, pt, hupcf=self.hupcf,
                                 fault_model=self.fault_model)
         return pt
 
     def pt(self, pd: int) -> PageTable:
         return self.page_tables[pd]
+
+    def resolver_for(self, pd: int) -> Resolver:
+        """The fault resolver governing domain ``pd`` (policy > default)."""
+        return self.domain_resolvers.get(pd, self.resolver)
+
+    def pd_for_bank(self, bank_index: int) -> Optional[int]:
+        """The PDID owning an SMMU context bank on this node.
+
+        Fault records carry only the bank index (pd % NUM_CONTEXT_BANKS);
+        domain state (page tables, resolvers, pending blocks) is keyed by
+        the full PDID, so pds >= NUM_CONTEXT_BANKS need this reverse map.
+        The fabric rejects two pds sharing a bank, keeping it unique.
+        """
+        if bank_index in self.page_tables:
+            return bank_index
+        for pd in self.page_tables:
+            if pd % A.NUM_CONTEXT_BANKS == bank_index:
+                return pd
+        return None
 
     # =================================================== SMMU driver (CPU0)
     def _on_smmu_interrupt(self, bank_index: int) -> None:
@@ -204,17 +229,18 @@ class Node:
     # ------------------------------------------------- source-fault tasklet
     def _pf_send_handler(self, bank_index: int, vpn: int) -> None:
         c = self.cost
-        pt = self.page_tables.get(bank_index)
+        pd = self.pd_for_bank(bank_index)
+        pt = self.page_tables.get(pd)
         if pt is None:
             return
-        block = self.r5.find_block_by_src_page(bank_index, vpn)
+        block = self.r5.find_block_by_src_page(pd, vpn)
         stats = block.transfer.stats if block else None
         remaining = A.PAGES_PER_BLOCK
         if block is not None:
             last_vpn = A.page_index(block.src_va + block.nbytes - 1)
             remaining = max(1, last_vpn - vpn + 1)
-        res = self.resolver.resolve(pt, vpn, is_dst=False,
-                                    block_pages_remaining=remaining)
+        res = self.resolver_for(pd).resolve(
+            pt, vpn, is_dst=False, block_pages_remaining=remaining)
         _, kend = self.driver_cpu.reserve(res.kernel_us)
         if stats:
             stats.driver_us += c.tasklet_latency_us + res.kernel_us
@@ -276,8 +302,9 @@ class Node:
             self._handled.append(key)
             if pt is None:
                 continue
-            res = self.resolver.resolve(pt, vpn27, is_dst=True,
-                                        block_pages_remaining=A.PAGES_PER_BLOCK)
+            res = self.resolver_for(entry.pdid).resolve(
+                pt, vpn27, is_dst=True,
+                block_pages_remaining=A.PAGES_PER_BLOCK)
             _, kend = self.driver_cpu.reserve(res.kernel_us + c.driver_bookkeep_us)
             if stats:
                 stats.fifo_entries_handled += 1
@@ -365,7 +392,7 @@ class Node:
             if interleaved:
                 # alternating streams: defeat the consecutive-dedup the way
                 # real interleaved packets do
-                self.fifo._last_pushed = None
+                self.fifo.break_dedup()
         if block.nacked_round != round_id:
             block.nacked_round = round_id
             delay = self.cost.nack_us + self.cost.hop_latency_us
@@ -425,7 +452,6 @@ class R5Scheduler:
         # PLDMA reads/packetizes pages in order; a source fault stops the
         # stream (pages already read remain in flight).
         link = node.links_to[transfer.dst_node.node_id]
-        offset = 0
         for i, vpn in enumerate(src_pages):
             res = node.smmu.translate(bank, vpn, Access.READ)
             if res.disposition is not Disposition.OK:
@@ -438,7 +464,6 @@ class R5Scheduler:
             delay, interleaved = link.stream_page(nbytes, id(block))
             self.loop.schedule(delay, transfer.dst_node.recv_page, block, i,
                                block.round_id, interleaved, nbytes)
-            offset += nbytes
         self._arm_timeout(block)
 
     def _arm_timeout(self, block: Block) -> None:

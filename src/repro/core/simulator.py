@@ -59,6 +59,28 @@ class EventLoop:
         if self._heap and self.events_processed >= max_events:
             raise RuntimeError("event budget exhausted — livelock?")
 
+    def peek_time(self) -> Optional[float]:
+        """Time of the next live event, or None if the loop is drained."""
+        while self._heap and self._heap[0].cancelled:
+            heapq.heappop(self._heap)
+        return self._heap[0].time if self._heap else None
+
+    def step(self) -> bool:
+        """Execute exactly one live event.  Returns False if none remain.
+
+        Lets completion-queue ``wait()`` stop the clock at the instant a
+        completion is delivered instead of free-running to a deadline.
+        """
+        while self._heap:
+            ev = heapq.heappop(self._heap)
+            if ev.cancelled:
+                continue
+            self.now = ev.time
+            self.events_processed += 1
+            ev.fn(*ev.args)
+            return True
+        return False
+
     @property
     def idle(self) -> bool:
         return not any(not e.cancelled for e in self._heap)

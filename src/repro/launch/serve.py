@@ -13,8 +13,8 @@ import argparse
 import jax
 import numpy as np
 
+from repro.api import FaultPolicy, Strategy
 from repro.configs import ARCH_IDS, get_config
-from repro.core.resolver import Strategy
 from repro.models.config import reduced
 from repro.models.registry import model_for
 from repro.serving.engine import ServingEngine
@@ -32,6 +32,8 @@ def main() -> None:
                     help="undersize to force spills (0 = exact fit)")
     ap.add_argument("--strategy", default="touch_ahead",
                     choices=[s.value for s in Strategy])
+    ap.add_argument("--lookahead", type=int, default=4,
+                    help="pages per fault event (TOUCH_AHEAD_N / STREAM)")
     ap.add_argument("--pin-all", action="store_true",
                     help="pinning baseline: admission-controlled residency")
     ap.add_argument("--temperature", type=float, default=0.8)
@@ -40,10 +42,12 @@ def main() -> None:
     cfg = reduced(get_config(args.arch))
     model = model_for(cfg)
     params = model.init_params(cfg, jax.random.PRNGKey(0))
+    policy = FaultPolicy(strategy=Strategy(args.strategy),
+                         lookahead=args.lookahead)
     eng = ServingEngine(
         cfg, params, max_batch=args.max_batch, max_len=args.max_len,
         pool_frames=args.pool_frames or None,
-        strategy=Strategy(args.strategy), pin_all=args.pin_all,
+        policy=policy, pin_all=args.pin_all,
         sampler=SamplerConfig(temperature=args.temperature))
 
     rng = np.random.default_rng(0)

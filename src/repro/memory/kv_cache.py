@@ -21,6 +21,7 @@ import numpy as np
 
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.resolver import Strategy
+from repro.api.policy import FaultPolicy
 
 FREE = -1
 
@@ -39,12 +40,17 @@ class PagedKVManager:
 
     def __init__(self, n_frames: int, page_tokens: int, max_pages_per_seq: int,
                  strategy: Strategy = Strategy.TOUCH_AHEAD, lookahead: int = 4,
-                 cost: CostModel = DEFAULT_COST_MODEL):
+                 cost: CostModel = DEFAULT_COST_MODEL,
+                 policy: Optional[FaultPolicy] = None):
         self.n_frames = n_frames
         self.page_tokens = page_tokens
         self.max_pages = max_pages_per_seq
-        self.strategy = strategy
-        self.lookahead = lookahead
+        # a FaultPolicy (the verbs-API per-tenant knob) wins over the legacy
+        # strategy/lookahead pair
+        self.policy = policy or FaultPolicy(strategy=strategy,
+                                            lookahead=lookahead)
+        self.strategy = self.policy.strategy
+        self.lookahead = self.policy.lookahead
         self.cost = cost
         self.stats = KVStats()
         self.free = list(range(n_frames - 1, -1, -1))

@@ -25,6 +25,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.policy import FaultPolicy
 from repro.core.resolver import Strategy
 from repro.memory.kv_cache import PagedKVManager
 from repro.models.config import ModelConfig
@@ -57,6 +58,7 @@ class ServingEngine:
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, pool_frames: Optional[int] = None,
                  strategy: Strategy = Strategy.TOUCH_AHEAD,
+                 policy: Optional[FaultPolicy] = None,
                  pin_all: bool = False,
                  sampler: SamplerConfig = SamplerConfig()):
         self.cfg = cfg
@@ -66,11 +68,14 @@ class ServingEngine:
         self.max_len = max_len
         self.sampler = sampler
         self.pin_all = pin_all
+        # this engine is one tenant of the KV fabric: its FaultPolicy decides
+        # how spilled pages fault back in (legacy ``strategy`` still honoured)
+        self.policy = policy or FaultPolicy(strategy=strategy)
         ps = cfg.kv_page_tokens
         pages_per_seq = -(-max_len // ps)
         n_frames = pool_frames or max_batch * pages_per_seq
         self.kv = PagedKVManager(n_frames, ps, pages_per_seq,
-                                 strategy=strategy)
+                                 policy=self.policy)
         self.stats = EngineStats()
         # compiled decode step: fixed (max_batch) shape; cache pools sized
         # to the device pool (shared across the batch via page table)

@@ -22,6 +22,10 @@ from repro.distributed.fault_tolerance import (HeartbeatMonitor,
 from repro.optim import adamw
 from repro.optim.adamw import AdamWConfig
 
+# full model/kernel/device sweeps: minutes of work, deselected in the
+# CI fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 def small_params(key=0):
     k = jax.random.PRNGKey(key)

@@ -12,6 +12,10 @@ from repro.kernels.page_pack.ref import page_gather_ref, page_scatter_ref
 from repro.kernels.paged_attention.ops import paged_attention
 from repro.kernels.paged_attention.ref import paged_attention_ref
 
+# full model/kernel/device sweeps: minutes of work, deselected in the
+# CI fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(0)
 
 

@@ -13,6 +13,10 @@ from repro.models.attention_ops import (flash_attention_xla, mha_reference,
 from repro.models.config import ModelConfig, reduced
 from repro.models.registry import model_for
 
+# full model/kernel/device sweeps: minutes of work, deselected in the
+# CI fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 KEY = jax.random.PRNGKey(42)
 
 

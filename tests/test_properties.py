@@ -1,8 +1,13 @@
 """Hypothesis property tests on the system's invariants."""
 
-import hypothesis.strategies as st
 import numpy as np
 import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+import hypothesis.strategies as st
 from hypothesis import given, settings
 
 from repro.core import addresses as A

@@ -21,6 +21,10 @@ from repro.optim.adamw import AdamWConfig
 from repro.serving.engine import ServingEngine
 from repro.training.trainer import TrainConfig, Trainer
 
+# full model/kernel/device sweeps: minutes of work, deselected in the
+# CI fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 
 class TestPagedTensorStore:
     def test_fault_and_touch_ahead(self):

@@ -10,6 +10,12 @@ import os
 import subprocess
 import sys
 
+import pytest
+
+# full model/kernel/device sweeps: minutes of work, deselected in the
+# CI fast tier (pytest -m "not slow")
+pytestmark = pytest.mark.slow
+
 SCRIPT = r"""
 import os
 os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
