@@ -1,11 +1,15 @@
-"""Shared benchmark plumbing: CSV emit + claim checks."""
+"""Shared benchmark plumbing: CSV emit + claim checks + JSON results."""
 
 from __future__ import annotations
 
+import json
+
 CHECKS: list[tuple[str, bool, str]] = []
+RESULTS: dict[str, float] = {}
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    RESULTS[name] = us_per_call
     print(f"{name},{us_per_call:.3f},{derived}")
 
 
@@ -18,3 +22,11 @@ def summary() -> int:
     fails = [c for c in CHECKS if not c[1]]
     print(f"# {len(CHECKS) - len(fails)}/{len(CHECKS)} claim checks passed")
     return len(fails)
+
+
+def write_json(path: str) -> None:
+    """Machine-readable ``{name: us_per_call}`` (the BENCH_*.json
+    perf-trajectory seed)."""
+    with open(path, "w") as f:
+        json.dump(RESULTS, f, indent=2, sort_keys=True)
+        f.write("\n")

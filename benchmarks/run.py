@@ -1,18 +1,21 @@
 """Benchmark entry point: one function per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run`` prints every table as
-``name,us_per_call,derived`` CSV plus claim checks (DESIGN.md §1 C1-C9),
-exiting non-zero if any claim check fails.
+``PYTHONPATH=src python -m benchmarks.run [--json PATH]`` prints every
+table as ``name,us_per_call,derived`` CSV plus claim checks (DESIGN.md §1
+C1-C9), exiting non-zero if any claim check fails.  ``--json PATH``
+additionally writes machine-readable ``{name: us_per_call}`` results
+(the BENCH_*.json perf trajectory).
 """
 
 from __future__ import annotations
 
+import argparse
 import sys
 
 from benchmarks import (fig_2_3_firehose, fig_4_1, fig_4_2, fig_4_3, fig_4_4,
                         fig_4_6, fig_4_7, table_4_1, thp_study,
-                        timeout_sweep, verbs_async)
-from benchmarks.common import summary
+                        timeout_sweep, verbs_async, vmem_remote)
+from benchmarks.common import summary, write_json
 
 MODULES = (
     ("Table 4.1 (OS-call overheads)", table_4_1),
@@ -27,15 +30,23 @@ MODULES = (
     ("Fig 2.3 (Firehose working-set cliff)", fig_2_3_firehose),
     ("Verbs API (async burst, batched CQ polling, multi-tenant)",
      verbs_async),
+    ("vmem over the fabric (remote KV/tensor page-ins)", vmem_remote),
 )
 
 
 def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write {name: us_per_call} results as JSON")
+    args = ap.parse_args()
     for title, mod in MODULES:
         print(f"\n### {title}")
         mod.main()
     print()
     fails = summary()
+    if args.json:
+        write_json(args.json)
+        print(f"# wrote JSON results to {args.json}")
     if fails:
         sys.exit(1)
 

@@ -31,6 +31,18 @@ Fault, §3.2.3.3) + fault FIFO     -> resolver -> mailbox; surfaced in
                                   (``rapf_retransmits``,
                                   ``fifo_entries_handled``, ...).
 R5 retransmission timeout         ``FabricConfig.cost.timeout_us``.
+One mechanism for every memory    ``repro.vmem`` — ``AddressSpace`` +
+consumer (the thesis' claim:      ``Pager`` (fault → resolve → map) over
+faults handled, pinning           pluggable ``FramePool`` backends;
+avoided, §2 motivation)           per-tenant ``FaultPolicy`` threading.
+Remote paging over the fabric     ``repro.vmem.RemoteFramePool`` — every
+(virtual-address RDMA as a        page-in is a ``post_read`` completing
+paging backend)                   on a CQ; ``PagingStats`` surfaces
+                                  ``rapf_retransmits`` / fault counts.
+Pinning limit M / Firehose        ``FaultPolicy.pin_limit_bytes``,
+working-set cliff (§2.3)          enforced by ``Pager.pin`` and by
+                                  pin-aware eviction
+                                  (``repro.vmem.PinAwareLRU``).
 ===============================  ========================================
 
 Quick tour::

@@ -1,10 +1,14 @@
 """Paged KV-cache manager for serving: allocation, spill, fault handling.
 
-The device pools handed to the compiled decode step are fixed-size frame
-pools; this manager owns the *page tables* mapping (sequence, page-slot) →
-frame.  When the pool is exhausted, cold pages of preempted/idle sequences
-spill to the host pool; re-activating a sequence faults its pages back in
-with the thesis' Touch-Ahead (block) granularity.
+Each sequence is one :class:`~repro.vmem.pager.AddressSpace` tenant over
+a shared control-plane :class:`~repro.vmem.frames.FrameIdPool` — the
+multi-tenant scenario of the ``repro.vmem`` pager.  The device pools
+handed to the compiled decode step are fixed-size frame pools; this
+manager owns the *page tables* mapping (sequence, page-slot) → frame.
+When the pool is exhausted, cold pages of preempted/idle sequences spill
+(cross-tenant eviction); re-activating a sequence faults its pages back
+in at the granularity of the tenant's
+:class:`~repro.api.policy.FaultPolicy` (Touch-Ahead blocks by default).
 
 The compiled step never sees a fault: like the thesis' driver, residency
 is resolved on the control plane before dispatch, and the step's page
@@ -14,66 +18,86 @@ masked inside the kernel).
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
 import numpy as np
 
+from repro.api.policy import FaultPolicy
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.resolver import Strategy
-from repro.api.policy import FaultPolicy
+from repro.vmem import (FrameIdPool, FramePool, NON_RESIDENT, Pager,
+                        PagingStats, coerce_policy)
 
 FREE = -1
 
-
-@dataclasses.dataclass
-class KVStats:
-    allocs: int = 0
-    spills: int = 0
-    fault_page_ins: int = 0
-    fault_events: int = 0
-    simulated_us: float = 0.0
+# unified telemetry: the old name stays importable
+KVStats = PagingStats
 
 
 class PagedKVManager:
     """Frame allocator + per-sequence page tables (one per layer-group)."""
 
     def __init__(self, n_frames: int, page_tokens: int, max_pages_per_seq: int,
-                 strategy: Strategy = Strategy.TOUCH_AHEAD, lookahead: int = 4,
+                 strategy: Optional[Strategy] = None,
+                 lookahead: Optional[int] = None,
                  cost: CostModel = DEFAULT_COST_MODEL,
-                 policy: Optional[FaultPolicy] = None):
+                 policy: Optional[FaultPolicy] = None,
+                 pool: Optional[FramePool] = None,
+                 pager: Optional[Pager] = None):
         self.n_frames = n_frames
         self.page_tokens = page_tokens
         self.max_pages = max_pages_per_seq
-        # a FaultPolicy (the verbs-API per-tenant knob) wins over the legacy
-        # strategy/lookahead pair
-        self.policy = policy or FaultPolicy(strategy=strategy,
-                                            lookahead=lookahead)
+        # only pin a per-sequence policy when the caller asked for one;
+        # otherwise an injected pager's own policy must govern
+        explicit = (policy is not None or strategy is not None
+                    or lookahead is not None)
+        coerced = coerce_policy("PagedKVManager", policy, strategy,
+                                lookahead)
+        self.cost = cost
+        if pager is None:
+            pager = Pager(pool or FrameIdPool(n_frames), policy=coerced,
+                          cost=cost)
+        self.pager = pager
+        self._space_policy = coerced if explicit else None
+        self.policy = coerced if explicit else pager.policy
         self.strategy = self.policy.strategy
         self.lookahead = self.policy.lookahead
-        self.cost = cost
-        self.stats = KVStats()
-        self.free = list(range(n_frames - 1, -1, -1))
-        # seq_id -> np.array(max_pages) of frame ids / FREE
-        self.tables: dict[int, np.ndarray] = {}
+        self.stats = self.pager.stats
+        # seq_id -> its address space (one tenant per sequence)
+        self.seq_spaces: dict[int, "object"] = {}
         self.lengths: dict[int, int] = {}
-        # host-spilled pages: (seq, slot) -> True (payload handled by the
-        # engine's PagedTensorStore; here we track residency control state)
-        self.spilled: dict[int, set[int]] = {}
+
+    # ---------------------------------------------------- compat views
+    @property
+    def tables(self) -> dict[int, np.ndarray]:
+        """seq_id -> np.array(max_pages) of frame ids / FREE."""
+        return {s: sp.page_table for s, sp in self.seq_spaces.items()}
+
+    @property
+    def spilled(self) -> dict[int, set[int]]:
+        """seq_id -> slots evicted to host, awaiting fault-back-in."""
+        return {s: set(map(int, np.where(sp.swapped)[0]))
+                for s, sp in self.seq_spaces.items()}
+
+    def _victims(self, for_seq: int,
+                 spill_candidates: Optional[list[int]]) -> list:
+        """Candidate spaces to spill from (never the requesting seq)."""
+        if spill_candidates:
+            return [self.seq_spaces[s] for s in spill_candidates
+                    if s in self.seq_spaces]
+        return [sp for s, sp in self.seq_spaces.items() if s != for_seq]
 
     # ------------------------------------------------------------ sequences
     def add_sequence(self, seq_id: int) -> None:
-        self.tables[seq_id] = np.full((self.max_pages,), FREE, np.int64)
+        self.seq_spaces[seq_id] = self.pager.create_space(
+            self.max_pages, name=f"seq{seq_id}", policy=self._space_policy)
         self.lengths[seq_id] = 0
-        self.spilled[seq_id] = set()
-        self.stats.allocs += 1
 
     def free_sequence(self, seq_id: int) -> None:
-        for f in self.tables.pop(seq_id):
-            if f >= 0:
-                self.free.append(int(f))
+        space = self.seq_spaces.pop(seq_id, None)
+        if space is not None:
+            self.pager.destroy_space(space)
         self.lengths.pop(seq_id, None)
-        self.spilled.pop(seq_id, None)
 
     # ------------------------------------------------------------- growing
     def append_tokens(self, seq_id: int, n: int,
@@ -81,34 +105,13 @@ class PagedKVManager:
         """Extend a sequence by n tokens, allocating pages on demand."""
         new_len = self.lengths[seq_id] + n
         needed = -(-new_len // self.page_tokens)
-        table = self.tables[seq_id]
+        space = self.seq_spaces[seq_id]
+        victims = self._victims(seq_id, spill_candidates)
         for slot in range(needed):
-            if table[slot] == FREE and slot not in self.spilled[seq_id]:
-                table[slot] = self._alloc_frame(seq_id, spill_candidates)
+            if space.page_table[slot] == NON_RESIDENT \
+                    and not space.swapped[slot]:
+                self.pager.map_fresh(space, slot, victims=victims)
         self.lengths[seq_id] = new_len
-
-    def _alloc_frame(self, for_seq: int,
-                     spill_candidates: Optional[list[int]]) -> int:
-        if self.free:
-            return self.free.pop()
-        # pool exhausted: spill the coldest page of an inactive sequence
-        victims = spill_candidates if spill_candidates else \
-            [s for s in self.tables if s != for_seq]
-        for v in victims:
-            tbl = self.tables.get(v)
-            if tbl is None:
-                continue
-            resident = np.where(tbl >= 0)[0]
-            if len(resident):
-                slot = int(resident[-1])
-                frame = int(tbl[slot])
-                tbl[slot] = FREE
-                self.spilled[v].add(slot)
-                self.stats.spills += 1
-                self.stats.simulated_us += self.cost.touch_page_us
-                return frame
-        raise MemoryError("KV pool exhausted with no spill candidates "
-                          "(all sequences active == all pages pinned)")
 
     # --------------------------------------------------------------- faults
     def ensure_resident(self, seq_id: int,
@@ -119,40 +122,19 @@ class PagedKVManager:
         ``lookahead``-page blocks (one fault event per block — the 16 KB
         block of the thesis); Touch-A-Page pays one event per page.
         """
-        spilled = sorted(self.spilled[seq_id])
-        if not spilled:
+        space = self.seq_spaces[seq_id]
+        spilled = np.where(space.swapped)[0]
+        if not len(spilled):
             return 0
-        table = self.tables[seq_id]
-        c = self.cost
-        n_in = 0
-        if self.strategy is Strategy.TOUCH_A_PAGE:
-            for slot in spilled:
-                table[slot] = self._alloc_frame(seq_id, spill_candidates)
-                self.spilled[seq_id].discard(slot)
-                self.stats.fault_events += 1
-                self.stats.simulated_us += (c.netlink_send_us + c.wakeup_us
-                                            + c.touch_page_us)
-                n_in += 1
-        else:
-            i = 0
-            while i < len(spilled):
-                block = spilled[i:i + self.lookahead]
-                for slot in block:
-                    table[slot] = self._alloc_frame(seq_id, spill_candidates)
-                    self.spilled[seq_id].discard(slot)
-                self.stats.fault_events += 1
-                self.stats.simulated_us += c.gup_us(len(block))
-                n_in += len(block)
-                i += self.lookahead
-        self.stats.fault_page_ins += n_in
-        return n_in
+        return self.pager.resolve_batch(
+            space, spilled, victims=self._victims(seq_id, spill_candidates))
 
     # ---------------------------------------------------------------- views
     def device_table(self, seq_ids: list[int]) -> np.ndarray:
         """(B, max_pages) int32 page table for the compiled step."""
         out = np.full((len(seq_ids), self.max_pages), FREE, np.int32)
         for i, s in enumerate(seq_ids):
-            out[i] = self.tables[s]
+            out[i] = self.seq_spaces[s].page_table
         return out
 
     def batch_lengths(self, seq_ids: list[int]) -> np.ndarray:
@@ -160,4 +142,8 @@ class PagedKVManager:
 
     @property
     def frames_used(self) -> int:
-        return self.n_frames - len(self.free)
+        return self.pager.pool.frames_used
+
+    @property
+    def free(self) -> list[int]:
+        return self.pager.pool.free

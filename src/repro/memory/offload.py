@@ -1,11 +1,14 @@
 """Optimizer-state offload with Touch-Ahead prefetch (the thesis' technique
 applied to training memory).
 
-Adam moments live host-side as **pages**; each update iterates the
-parameter leaves block-wise: while block *i* updates on device, block
-*i+1* is already being paged in (double-buffered Touch-Ahead — the
-``get_user_pages`` lookahead generalized to the training loop).  The
-device working set is two blocks instead of 2× the model size.
+Adam moments live host-side as **pages** of one block each; the ``mu``
+and ``nu`` buffers are two :class:`~repro.vmem.pager.AddressSpace`
+tenants over one shared :class:`~repro.vmem.frames.DeviceFramePool` of
+four block-frames (two per buffer — the double buffer).  Each update
+iterates the parameter leaves block-wise: while block *i* updates on
+device, block *i+1* is already paged in by the pager's block prefetch
+(the ``get_user_pages`` lookahead generalized to the training loop), so
+the device working set is two blocks instead of 2× the model size.
 
 On this CPU container the "device" copies are real jnp arrays and the
 timing is accounted with the calibrated cost model; on TPU the same
@@ -14,26 +17,22 @@ structure maps to ``jax.device_put`` with donation + async dispatch.
 
 from __future__ import annotations
 
-import dataclasses
-from typing import Any
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.policy import FaultPolicy
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.resolver import Strategy
 from repro.optim.adamw import AdamWConfig
+from repro.vmem import (DeviceFramePool, Pager, PagingStats, coerce_policy)
 
+# unified telemetry: the old name stays importable
+OffloadStats = PagingStats
 
-@dataclasses.dataclass
-class OffloadStats:
-    blocks_streamed: int = 0
-    fault_events: int = 0
-    prefetch_overlapped: int = 0
-    bytes_in: int = 0
-    bytes_out: int = 0
-    simulated_us: float = 0.0
+_DEFAULT = FaultPolicy(strategy=Strategy.TOUCH_AHEAD)
 
 
 class PagedAdamW:
@@ -41,29 +40,54 @@ class PagedAdamW:
 
     def __init__(self, cfg: AdamWConfig, params, *,
                  block_elems: int = 1 << 20,
-                 strategy: Strategy = Strategy.TOUCH_AHEAD,
-                 cost: CostModel = DEFAULT_COST_MODEL):
+                 strategy: Optional[Strategy] = None,
+                 cost: CostModel = DEFAULT_COST_MODEL,
+                 policy: Optional[FaultPolicy] = None):
         self.cfg = cfg
         self.block_elems = block_elems
-        self.strategy = strategy
+        self.policy = coerce_policy("PagedAdamW", policy, strategy,
+                                    default=_DEFAULT)
+        self.strategy = self.policy.strategy
         self.cost = cost
-        self.stats = OffloadStats()
         self.step = 0
         leaves, self.treedef = jax.tree_util.tree_flatten(params)
         self.shapes = [l.shape for l in leaves]
         self.dtypes = [l.dtype for l in leaves]
         self.sizes = [int(np.prod(s)) for s in self.shapes]
         total = sum(self.sizes)
-        # host-resident moment pages (one flat buffer each)
-        self.mu_host = np.zeros((total,), np.float32)
-        self.nu_host = np.zeros((total,), np.float32)
+        self.total = total
         self.offsets = np.cumsum([0] + self.sizes)
+        n_blocks = max(1, -(-total // block_elems))
+        # the vmem pager: one page per block, double-buffered per moment
+        # buffer (fault brings the block + the next one, pool holds 4)
+        stream = (self.policy.strategy is not Strategy.TOUCH_A_PAGE)
+        inner = FaultPolicy(
+            strategy=Strategy.TOUCH_AHEAD_N if stream
+            else Strategy.TOUCH_A_PAGE,
+            lookahead=2 if stream else 1)
+        self.pager = Pager(DeviceFramePool(4, block_elems, jnp.float32),
+                           policy=inner, cost=cost,
+                           page_bytes=max(1, block_elems * 4))
+        self.mu_space = self.pager.create_space(n_blocks, name="mu")
+        self.nu_space = self.pager.create_space(n_blocks, name="nu")
+        self.stats = self.pager.stats
+        # host-resident moment pages, exposed flat (views of the backing)
+        self.mu_host = self.mu_space.backing.reshape(-1)[:total]
+        self.nu_host = self.nu_space.backing.reshape(-1)[:total]
 
     # ---------------------------------------------------------------- core
     def _blocks(self):
-        total = len(self.mu_host)
-        for start in range(0, total, self.block_elems):
-            yield start, min(total, start + self.block_elems)
+        for start in range(0, self.total, self.block_elems):
+            yield start, min(self.total, start + self.block_elems)
+
+    def _page(self, space, bi: int, width: int) -> jnp.ndarray:
+        hits = self.pager.stats.prefetch_hits
+        page = self.pager.access(space, [bi])[0][:width]
+        if self.pager.stats.prefetch_hits > hits:
+            # the block was already in flight while its predecessor
+            # computed: the double-buffered overlap
+            self.stats.prefetch_overlapped += 1
+        return page
 
     def update(self, params, grads):
         """Block-streamed AdamW; returns new params."""
@@ -81,25 +105,10 @@ class PagedAdamW:
         lr = cfg.schedule(jnp.asarray(step)) if cfg.schedule else cfg.lr
 
         out = np.asarray(flat_p).copy()
-        blocks = list(self._blocks())
-        c = self.cost
-        # double-buffered stream: "prefetch" block i+1 while computing i
-        for bi, (a, b) in enumerate(blocks):
-            mu = jnp.asarray(self.mu_host[a:b])          # page-in (real copy)
-            nu = jnp.asarray(self.nu_host[a:b])
+        for bi, (a, b) in enumerate(self._blocks()):
+            mu = self._page(self.mu_space, bi, b - a)   # page-in (real copy)
+            nu = self._page(self.nu_space, bi, b - a)
             self.stats.bytes_in += (b - a) * 8
-            if self.strategy is Strategy.TOUCH_A_PAGE:
-                # one fault event per 4 KB page of the block
-                pages = max(1, (b - a) * 4 // 4096)
-                self.stats.fault_events += pages
-                self.stats.simulated_us += pages * (
-                    c.netlink_send_us + c.wakeup_us + c.touch_page_us)
-            else:
-                self.stats.fault_events += 1
-                pages = max(1, (b - a) * 4 // 4096)
-                self.stats.simulated_us += c.gup_us(min(pages, 4))
-                if bi + 1 < len(blocks):
-                    self.stats.prefetch_overlapped += 1
 
             g = flat_g[a:b]
             p = flat_p[a:b]
@@ -109,8 +118,9 @@ class PagedAdamW:
             v_hat = nu_new / b2c
             delta = m_hat / (jnp.sqrt(v_hat) + cfg.eps) + cfg.weight_decay * p
             out[a:b] = np.asarray(p - lr * delta)
-            self.mu_host[a:b] = np.asarray(mu_new)       # write-back
-            self.nu_host[a:b] = np.asarray(nu_new)
+            self.mu_space.write(bi, np.asarray(mu_new),  # write-through
+                                allow_partial=True)
+            self.nu_space.write(bi, np.asarray(nu_new), allow_partial=True)
             self.stats.bytes_out += (b - a) * 8
             self.stats.blocks_streamed += 1
 
@@ -124,5 +134,6 @@ class PagedAdamW:
         return jax.tree_util.tree_unflatten(treedef, news)
 
     def device_bytes_resident(self) -> int:
-        """Peak device bytes for moments: two blocks (double buffer)."""
+        """Peak device bytes for moments: two blocks per buffer (the
+        shared 4-frame f32 pool = 2 × block_elems × 8)."""
         return 2 * self.block_elems * 8

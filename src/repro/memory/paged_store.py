@@ -1,202 +1,132 @@
-"""Demand-paged tensor storage: the thesis' mechanism as a JAX data plane.
+"""Demand-paged tensor storage: one tenant of the ``repro.vmem`` pager.
 
-A :class:`PagedTensorStore` owns a **device frame pool** (jnp array) and a
-**host pool** (numpy).  Tensors are stored as fixed-size pages; a page is
-either *resident* (has a device frame) or *non-resident* (host only).
-Accessing a non-resident page is a **page fault**, resolved by the same
-policies the thesis evaluates:
-
-* ``TOUCH_A_PAGE``  — page in exactly the faulted page;
-* ``TOUCH_AHEAD``   — page in the faulted page + the rest of its block
-  (the ``get_user_pages`` optimization, default lookahead 4);
-* ``STREAM``        — beyond-paper: sequential-stream prediction pages the
-  next block in ahead of the fault.
+A :class:`PagedTensorStore` is a thin compatibility wrapper over one
+:class:`~repro.vmem.pager.AddressSpace` on a
+:class:`~repro.vmem.frames.DeviceFramePool` (jnp frames, numpy backing).
+Accessing a non-resident page is a **page fault**, resolved by the
+tenant's :class:`~repro.api.policy.FaultPolicy` — Touch-A-Page,
+Touch-Ahead (the ``get_user_pages`` block, default lookahead 4), or the
+beyond-paper STREAM predictor — with eviction, prefetch, pinning and
+telemetry all provided by the shared subsystem.
 
 Timing is accounted with the calibrated :class:`CostModel` (simulated
 microseconds, reported in benchmarks) while the data movement itself is
-real (host numpy ↔ device jnp copies), so correctness and the paper's
-latency relationships are both testable.  Pinning (the baseline the thesis
-argues against) is supported per page and enforced by eviction.
+real (host numpy ↔ device jnp copies).  Pass ``pool=`` to share frames
+with other tenants, or a :class:`~repro.vmem.remote.RemoteFramePool` to
+page in over the verbs fabric.
 """
 
 from __future__ import annotations
 
-import dataclasses
 from typing import Optional
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.policy import FaultPolicy
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.resolver import Strategy
+from repro.vmem import (DeviceFramePool, FramePool, NON_RESIDENT, Pager,
+                        PagingStats, coerce_policy)
 
-NON_RESIDENT = -1
-
-
-@dataclasses.dataclass
-class StoreStats:
-    faults: int = 0
-    pages_in: int = 0
-    pages_out: int = 0
-    evictions: int = 0
-    prefetch_hits: int = 0      # accesses that found a prefetched page
-    pin_violations: int = 0
-    simulated_us: float = 0.0   # calibrated cost-model time
-
-    def reset(self):
-        for f in dataclasses.fields(self):
-            setattr(self, f.name, getattr(StoreStats, f.name, 0)
-                    if f.default is dataclasses.MISSING else f.default)
+# unified telemetry: the old name stays importable
+StoreStats = PagingStats
 
 
 class PagedTensorStore:
-    """One tenant's paged storage over a shared device frame pool."""
+    """One tenant's paged storage over a (shareable) device frame pool."""
 
     def __init__(self, page_elems: int, n_device_frames: int,
                  n_host_pages: int, dtype=jnp.float32,
-                 strategy: Strategy = Strategy.TOUCH_AHEAD,
-                 lookahead: int = 4,
-                 cost: CostModel = DEFAULT_COST_MODEL):
+                 strategy: Optional[Strategy] = None,
+                 lookahead: Optional[int] = None,
+                 cost: CostModel = DEFAULT_COST_MODEL,
+                 policy: Optional[FaultPolicy] = None,
+                 pool: Optional[FramePool] = None,
+                 pager: Optional[Pager] = None):
         self.page_elems = page_elems
         self.dtype = dtype
-        self.strategy = strategy
-        self.lookahead = max(1, lookahead)
+        # only pin a per-space policy when the caller actually asked for
+        # one; otherwise an injected pager's own policy must govern
+        explicit = (policy is not None or strategy is not None
+                    or lookahead is not None)
+        policy = coerce_policy("PagedTensorStore", policy, strategy,
+                               lookahead)
         self.cost = cost
-        self.stats = StoreStats()
-        # device pool
-        self.frames = jnp.zeros((n_device_frames, page_elems), dtype)
-        self.free_frames = list(range(n_device_frames - 1, -1, -1))
-        self.frame_owner: dict[int, int] = {}      # frame -> vpage
-        # host pool (the "swap"/backing store)
-        self.host = np.zeros((n_host_pages, page_elems),
-                             jax.dtypes.canonicalize_dtype(dtype))
-        # virtual page table: vpage -> frame (or NON_RESIDENT)
-        self.page_table = np.full((n_host_pages,), NON_RESIDENT, np.int64)
-        self.pinned = np.zeros((n_host_pages,), bool)
-        self.prefetched = np.zeros((n_host_pages,), bool)
-        self._clock = 0
-        self._last_used = np.zeros((n_host_pages,), np.int64)
+        if pager is None:
+            pool = pool or DeviceFramePool(n_device_frames, page_elems,
+                                           dtype)
+            pager = Pager(pool, policy=policy, cost=cost)
+        self.pager = pager
+        self.pool = pager.pool
+        self.space = self.pager.create_space(
+            n_host_pages, name="store",
+            policy=policy if explicit else None)
+        self.policy = self.pager.policy_of(self.space)
+        self.strategy = self.policy.strategy
+        self.lookahead = max(1, self.policy.lookahead)
+        self.stats = self.space.stats
+
+    # ---------------------------------------------------- compat views
+    @property
+    def page_table(self) -> np.ndarray:
+        return self.space.page_table
+
+    @property
+    def pinned(self) -> np.ndarray:
+        return self.space.pinned
+
+    @property
+    def prefetched(self) -> np.ndarray:
+        return self.space.prefetched
+
+    @property
+    def host(self) -> np.ndarray:
+        return self.space.backing
+
+    @property
+    def frames(self) -> jnp.ndarray:
+        return self.pool.data
+
+    @frames.setter
+    def frames(self, value) -> None:
+        self.pool.data = value
+
+    @property
+    def free_frames(self) -> list[int]:
+        return self.pool.free
 
     # ------------------------------------------------------------- writes
     def write_host(self, vpage: int, data: np.ndarray) -> None:
         """Populate a page's backing store (host)."""
-        self.host[vpage] = np.asarray(data,
-                                      self.host.dtype).reshape(self.page_elems)
-        if self.page_table[vpage] != NON_RESIDENT:
-            # keep device copy coherent
-            f = int(self.page_table[vpage])
-            self.frames = self.frames.at[f].set(
-                jnp.asarray(self.host[vpage], self.dtype))
+        self.space.write(vpage, data)
 
     def write_back(self, vpage: int) -> None:
         """Device -> host writeback for a resident page."""
-        f = self.page_table[vpage]
-        if f != NON_RESIDENT:
-            self.host[vpage] = np.asarray(self.frames[int(f)])
+        self.space.write_back(vpage)
 
     # ----------------------------------------------------------- residency
     def is_resident(self, vpage: int) -> bool:
-        return self.page_table[vpage] != NON_RESIDENT
+        return self.space.is_resident(vpage)
 
     def resident_pages(self) -> int:
-        return int((self.page_table != NON_RESIDENT).sum())
+        return self.space.resident_pages()
 
     def pin(self, vpages) -> None:
-        for v in np.atleast_1d(vpages):
-            self._page_in(int(v))
-            self.pinned[v] = True
-        self.stats.simulated_us += self.cost.pin_us(
-            len(np.atleast_1d(vpages)) * 4096)
+        self.space.pin(vpages)
 
     def unpin(self, vpages) -> None:
-        for v in np.atleast_1d(vpages):
-            self.pinned[v] = False
-        self.stats.simulated_us += self.cost.unpin_us(
-            len(np.atleast_1d(vpages)) * 4096)
-
-    # --------------------------------------------------------------- fault
-    def _evict_one(self) -> int:
-        """LRU-evict an unpinned resident page; returns the freed frame."""
-        resident = np.where((self.page_table != NON_RESIDENT)
-                            & ~self.pinned)[0]
-        if len(resident) == 0:
-            self.stats.pin_violations += 1
-            raise MemoryError("device pool exhausted and all pages pinned "
-                              "(the thesis' pinning-limit failure mode)")
-        victim = int(resident[np.argmin(self._last_used[resident])])
-        f = int(self.page_table[victim])
-        self.write_back(victim)
-        self.page_table[victim] = NON_RESIDENT
-        self.frame_owner.pop(f, None)
-        self.stats.evictions += 1
-        self.stats.pages_out += 1
-        return f
-
-    def _page_in(self, vpage: int) -> int:
-        if self.page_table[vpage] != NON_RESIDENT:
-            return int(self.page_table[vpage])
-        if not self.free_frames:
-            self.free_frames.append(self._evict_one())
-        f = self.free_frames.pop()
-        self.frames = self.frames.at[f].set(
-            jnp.asarray(self.host[vpage], self.dtype))
-        self.page_table[vpage] = f
-        self.frame_owner[f] = vpage
-        self.stats.pages_in += 1
-        return f
-
-    def _resolve_fault(self, vpage: int) -> None:
-        """Apply the configured resolution strategy at a fault."""
-        self.stats.faults += 1
-        c = self.cost
-        if self.strategy is Strategy.TOUCH_A_PAGE:
-            self._page_in(vpage)
-            self.stats.simulated_us += (c.netlink_send_us + c.wakeup_us
-                                        + c.touch_page_us)
-        else:
-            # touch-ahead: the faulted page + the rest of its block
-            n = 0
-            block_end = min(len(self.page_table),
-                            vpage + self.lookahead)
-            for v in range(vpage, block_end):
-                if self.page_table[v] == NON_RESIDENT:
-                    self._page_in(v)
-                    if v != vpage:
-                        self.prefetched[v] = True
-                    n += 1
-            self.stats.simulated_us += c.gup_us(max(1, n))
-            if self.strategy is Strategy.STREAM:
-                nxt = block_end
-                if nxt < len(self.page_table) \
-                        and self.page_table[nxt] == NON_RESIDENT:
-                    self._page_in(nxt)
-                    self.prefetched[nxt] = True
-                    self.stats.simulated_us += c.gup_per_page_us
+        self.space.unpin(vpages)
 
     # --------------------------------------------------------------- reads
     def access(self, vpages) -> jnp.ndarray:
         """Read pages (faulting in non-resident ones). Returns (n, elems)."""
-        vpages = np.atleast_1d(np.asarray(vpages, np.int64))
-        self._clock += 1
-        for v in vpages:
-            v = int(v)
-            if self.page_table[v] == NON_RESIDENT:
-                self._resolve_fault(v)
-            elif self.prefetched[v]:
-                self.stats.prefetch_hits += 1
-                self.prefetched[v] = False
-            self._last_used[v] = self._clock
-        frames = jnp.asarray(self.page_table[vpages], jnp.int32)
-        return jnp.take(self.frames, frames, axis=0)
+        return self.space.access(vpages)
 
     def frame_ids(self, vpages) -> np.ndarray:
         """Resident frame ids for compiled-kernel page tables (must be
         resolved first — the engine calls access() or ensure_resident())."""
-        return self.page_table[np.atleast_1d(vpages)]
+        return self.space.frame_ids(vpages)
 
     def ensure_resident(self, vpages) -> None:
-        for v in np.atleast_1d(vpages):
-            if self.page_table[int(v)] == NON_RESIDENT:
-                self._resolve_fault(int(v))
-            self._last_used[int(v)] = self._clock
+        self.space.ensure_resident(vpages)

@@ -28,6 +28,7 @@ import numpy as np
 from repro.api.policy import FaultPolicy
 from repro.core.resolver import Strategy
 from repro.memory.kv_cache import PagedKVManager
+from repro.vmem import coerce_policy
 from repro.models.config import ModelConfig
 from repro.models.registry import model_for
 from repro.serving.sampler import SamplerConfig, sample_token
@@ -57,7 +58,7 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, *, max_batch: int = 4,
                  max_len: int = 256, pool_frames: Optional[int] = None,
-                 strategy: Strategy = Strategy.TOUCH_AHEAD,
+                 strategy: Optional[Strategy] = None,
                  policy: Optional[FaultPolicy] = None,
                  pin_all: bool = False,
                  sampler: SamplerConfig = SamplerConfig()):
@@ -69,14 +70,17 @@ class ServingEngine:
         self.sampler = sampler
         self.pin_all = pin_all
         # this engine is one tenant of the KV fabric: its FaultPolicy decides
-        # how spilled pages fault back in (legacy ``strategy`` still honoured)
-        self.policy = policy or FaultPolicy(strategy=strategy)
+        # how spilled pages fault back in (legacy ``strategy`` deprecated)
+        self.policy = coerce_policy("ServingEngine", policy, strategy)
         ps = cfg.kv_page_tokens
         pages_per_seq = -(-max_len // ps)
         n_frames = pool_frames or max_batch * pages_per_seq
         self.kv = PagedKVManager(n_frames, ps, pages_per_seq,
                                  policy=self.policy)
         self.stats = EngineStats()
+        # accumulation cursors into the shared vmem PagingStats
+        self._kv_us_seen = 0.0
+        self._kv_spills_seen = 0
         # compiled decode step: fixed (max_batch) shape; cache pools sized
         # to the device pool (shared across the batch via page table)
         self.cache = self.model.init_decode_cache(cfg, max_batch, max_len)
@@ -106,7 +110,7 @@ class ServingEngine:
                 break
             self.kv.add_sequence(r.req_id)
             waiting = [q.req_id for q in self.queue
-                       if q.req_id in self.kv.tables]
+                       if q.req_id in self.kv.seq_spaces]
             self.kv.append_tokens(r.req_id, len(r.prompt),
                                   spill_candidates=waiting)
             self._prefill_sequence(r)
@@ -173,12 +177,23 @@ class ServingEngine:
             return 0
         batch = self.active[:self.max_batch]
         # residency: fault spilled pages back in before dispatch
-        waiting = [q.req_id for q in self.queue if q.req_id in self.kv.tables]
+        waiting = [q.req_id for q in self.queue
+                   if q.req_id in self.kv.seq_spaces]
         for r in batch:
             n = self.kv.ensure_resident(r.req_id, spill_candidates=waiting)
             self.stats.fault_page_ins += n
-        self.stats.simulated_fault_us = self.kv.stats.simulated_us
-        self.stats.spill_events = self.kv.stats.spills
+        # accumulate deltas from the shared PagingStats (the pager keeps
+        # the source of truth; EngineStats no longer aliases it); a
+        # negative delta means someone reset() the shared stats — the
+        # post-reset total IS the delta then
+        kv = self.kv.stats
+        d_us = kv.simulated_us - self._kv_us_seen
+        self.stats.simulated_fault_us += d_us if d_us >= 0 \
+            else kv.simulated_us
+        self._kv_us_seen = kv.simulated_us
+        d_sp = kv.spills - self._kv_spills_seen
+        self.stats.spill_events += d_sp if d_sp >= 0 else kv.spills
+        self._kv_spills_seen = kv.spills
 
         tokens = np.zeros((self.max_batch, 1), np.int32)
         for i, r in enumerate(batch):

@@ -1,0 +1,58 @@
+"""``repro.vmem`` — the unified demand-paging subsystem.
+
+The thesis' core claim is that page faults can be *handled*, not
+avoided, so one mechanism can serve every memory consumer without
+pinning ceremony.  This package is that mechanism as an API:
+
+* :class:`AddressSpace` + :class:`Pager` — fault → resolve → map, with
+  per-tenant :class:`~repro.api.policy.FaultPolicy` threading;
+* :class:`FramePool` backends — :class:`DeviceFramePool` (jnp),
+  :class:`HostFramePool` (numpy), :class:`FrameIdPool` (control-plane
+  only) and :class:`RemoteFramePool` (page-ins over the verbs fabric:
+  ``post_read`` + CQ completions, RAPF stats surfaced);
+* pluggable eviction (:class:`LRUEviction`, :class:`ClockEviction`,
+  :class:`PinAwareLRU`) and prefetch predictors (:class:`NoPrefetch`,
+  :class:`TouchAheadPrefetch`, :class:`StreamPrefetch`);
+* one :class:`PagingStats` telemetry record for everything.
+
+``repro.memory.paged_store.PagedTensorStore``,
+``repro.memory.kv_cache.PagedKVManager``,
+``repro.memory.offload.PagedAdamW`` and
+``repro.serving.engine.ServingEngine`` are thin wrappers over this one
+pager — serving KV spill/fault-back-in and optimizer-state streaming are
+scenarios of the same subsystem.
+
+Quick tour::
+
+    from repro.vmem import DeviceFramePool, Pager
+    from repro.api import FaultPolicy, Strategy
+
+    pool = DeviceFramePool(n_frames=64, page_elems=1024)
+    pager = Pager(pool, policy=FaultPolicy(Strategy.TOUCH_AHEAD))
+    a = pager.create_space(256, name="tenant-a")
+    b = pager.create_space(256, name="tenant-b",
+                           policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+    a.write(0, data)            # backing image
+    x = a.access([0, 1, 2])     # faults + prefetch, per a's policy
+    print(pager.stats.faults, a.stats.simulated_us)
+"""
+
+from repro.vmem.compat import coerce_policy
+from repro.vmem.eviction import (ClockEviction, EvictionPolicy, LRUEviction,
+                                 PinAwareLRU)
+from repro.vmem.frames import (DeviceFramePool, FrameIdPool, FramePool,
+                               HostFramePool, PageInReceipt)
+from repro.vmem.pager import NON_RESIDENT, AddressSpace, Pager
+from repro.vmem.prefetch import (NoPrefetch, PrefetchPredictor,
+                                 StreamPrefetch, TouchAheadPrefetch,
+                                 predictor_for)
+from repro.vmem.remote import RemoteFramePool
+from repro.vmem.stats import PagingStats
+
+__all__ = [
+    "AddressSpace", "ClockEviction", "DeviceFramePool", "EvictionPolicy",
+    "FrameIdPool", "FramePool", "HostFramePool", "LRUEviction",
+    "NON_RESIDENT", "NoPrefetch", "PageInReceipt", "Pager", "PagingStats",
+    "PinAwareLRU", "PrefetchPredictor", "RemoteFramePool", "StreamPrefetch",
+    "TouchAheadPrefetch", "coerce_policy", "predictor_for",
+]

@@ -1,0 +1,124 @@
+"""Frame pools: where resident pages live.
+
+A :class:`FramePool` is a fixed set of page frames shared by one or more
+:class:`~repro.vmem.pager.AddressSpace` tenants.  Backends differ in where
+the frame payload lives and how a page-in arrives:
+
+* :class:`DeviceFramePool` — frames are rows of a device ``jnp`` array
+  (the JAX data plane; copies are real);
+* :class:`HostFramePool` — frames are rows of a host ``numpy`` array
+  (a second-tier pool, e.g. host swap in front of remote memory);
+* :class:`FrameIdPool` — control-plane only: frames are just ids (the KV
+  manager's case, where payload lives in the compiled step's cache pools);
+* :class:`~repro.vmem.remote.RemoteFramePool` — decorates any of the
+  above so page-ins travel over the verbs fabric (``post_read`` + CQ).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass
+class PageInReceipt:
+    """What one backend page-in cost (returned by ``page_in``)."""
+    us: float = 0.0
+    remote_reads: int = 0
+    rapf_retransmits: int = 0
+    dst_faults: int = 0
+    bytes_in: int = 0
+
+
+class FramePool:
+    """Base pool: allocation bookkeeping + the payload/transport hooks."""
+
+    def __init__(self, n_frames: int, page_elems: int):
+        self.n_frames = n_frames
+        self.page_elems = page_elems
+        self.free: list[int] = list(range(n_frames - 1, -1, -1))
+        # every address space mapped over this pool, across ALL pagers —
+        # the default eviction-candidate set, so consumers sharing a pool
+        # (pool=...) contend correctly even with separate Pager instances
+        self.spaces: list = []
+
+    # ------------------------------------------------------------ lifetime
+    def alloc(self) -> Optional[int]:
+        """Pop a free frame, or None if the pool is exhausted."""
+        return self.free.pop() if self.free else None
+
+    def release(self, frame: int) -> None:
+        self.free.append(frame)
+
+    @property
+    def frames_used(self) -> int:
+        return self.n_frames - len(self.free)
+
+    # ---------------------------------------------------------- data plane
+    def load(self, frame: int, data: np.ndarray) -> None:
+        """Copy page payload into ``frame`` (no-op for id-only pools)."""
+
+    def store(self, frame: int) -> Optional[np.ndarray]:
+        """Read a frame's payload back out (writeback); None if id-only."""
+        return None
+
+    def gather(self, frames: np.ndarray) -> jnp.ndarray:
+        """Gather frame rows for an access; (n, page_elems)."""
+        raise NotImplementedError(f"{type(self).__name__} holds no payload")
+
+    # ------------------------------------------------------------ transport
+    def page_in(self, space, vpage: int, n_pages: int) -> PageInReceipt:
+        """Transport cost of paging ``n_pages`` starting at ``vpage``.
+
+        Local pools are free (the resolver strategy already accounts the
+        fault-handling time); the remote backend posts a verbs read here.
+        """
+        return PageInReceipt()
+
+
+class DeviceFramePool(FramePool):
+    """Device (jnp) frame pool — the compiled kernels' working set."""
+
+    def __init__(self, n_frames: int, page_elems: int, dtype=jnp.float32):
+        super().__init__(n_frames, page_elems)
+        self.dtype = dtype
+        self.data = jnp.zeros((n_frames, page_elems), dtype)
+
+    def load(self, frame: int, data: np.ndarray) -> None:
+        self.data = self.data.at[frame].set(jnp.asarray(data, self.dtype))
+
+    def store(self, frame: int) -> np.ndarray:
+        return np.asarray(self.data[frame])
+
+    def gather(self, frames: np.ndarray) -> jnp.ndarray:
+        return jnp.take(self.data, jnp.asarray(frames, jnp.int32), axis=0)
+
+
+class HostFramePool(FramePool):
+    """Host (numpy) frame pool — a spill tier or CPU-side working set."""
+
+    def __init__(self, n_frames: int, page_elems: int, dtype=np.float32):
+        super().__init__(n_frames, page_elems)
+        self.dtype = jax.dtypes.canonicalize_dtype(dtype)
+        self.data = np.zeros((n_frames, page_elems), self.dtype)
+
+    def load(self, frame: int, data: np.ndarray) -> None:
+        self.data[frame] = np.asarray(data, self.dtype).reshape(-1)
+
+    def store(self, frame: int) -> np.ndarray:
+        return self.data[frame].copy()
+
+    def gather(self, frames: np.ndarray) -> jnp.ndarray:
+        return jnp.asarray(self.data[np.asarray(frames, np.int64)])
+
+
+class FrameIdPool(FramePool):
+    """Control-plane pool: frames are ids only (payload lives elsewhere,
+    e.g. in the serving engine's compiled-step cache pools)."""
+
+    def __init__(self, n_frames: int):
+        super().__init__(n_frames, page_elems=0)

@@ -1,0 +1,119 @@
+"""Fabric-backed frame pool: page-ins travel over the verbs API.
+
+:class:`RemoteFramePool` decorates a local :class:`FramePool` so that
+every pager page-in posts an asynchronous ``ProtectionDomain.post_read``
+against a remote node's memory and waits for its completion on a real
+:class:`~repro.api.completion.CompletionQueue` — the first time the
+fabric simulation and the JAX data plane meet.  The local landing region
+is registered ``FAULTING`` (the thesis' whole point: no pinning
+ceremony), so cold page-ins take destination faults whose RAPF
+retransmits surface in :class:`~repro.vmem.stats.PagingStats`
+(``rapf_retransmits``, ``remote_dst_faults``) and whose
+:class:`WorkCompletion`s stay observable on the CQ.
+
+This is the building block for multi-node paged serving: a KV pager
+whose backing tier is another node's memory instead of local host RAM.
+"""
+
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+from repro.api.completion import CompletionQueue, WorkCompletion
+from repro.api.config import FabricConfig
+from repro.api.fabric import Fabric, ProtectionDomain
+from repro.api.memory import BufferPrep, MemoryRegion
+from repro.api.policy import FaultPolicy
+from repro.core import addresses as A
+from repro.vmem.frames import DeviceFramePool, FramePool, PageInReceipt
+
+
+class RemoteFramePool(FramePool):
+    """Decorator: a local pool whose page-ins are remote verbs reads."""
+
+    def __init__(self, local: FramePool, domain: ProtectionDomain,
+                 remote_mr: MemoryRegion, local_mr: MemoryRegion,
+                 cq: CompletionQueue, page_bytes: int = A.PAGE_SIZE):
+        super().__init__(local.n_frames, local.page_elems)
+        self.local = local
+        self.free = local.free              # share allocation state
+        self.domain = domain
+        self.remote_mr = remote_mr
+        self.local_mr = local_mr
+        self.cq = cq
+        self.page_bytes = page_bytes
+        self.completions: list[WorkCompletion] = []
+        n_pages = min(remote_mr.length, local_mr.length) // page_bytes
+        if n_pages < 1:
+            raise ValueError("memory regions smaller than one page")
+        self.n_backing_pages = n_pages
+
+    # payload delegates to the local pool -------------------------------
+    @property
+    def dtype(self):
+        return getattr(self.local, "dtype", None)
+
+    @property
+    def data(self):
+        return getattr(self.local, "data", None)
+
+    @data.setter
+    def data(self, value):
+        self.local.data = value
+
+    def load(self, frame, data):
+        self.local.load(frame, data)
+
+    def store(self, frame):
+        return self.local.store(frame)
+
+    def gather(self, frames) -> jnp.ndarray:
+        return self.local.gather(frames)
+
+    # transport ----------------------------------------------------------
+    def page_in(self, space, vpage: int, n_pages: int) -> PageInReceipt:
+        if vpage + n_pages > self.n_backing_pages:
+            raise ValueError(
+                f"page-in [{vpage}, {vpage + n_pages}) beyond the remote "
+                f"region ({self.n_backing_pages} pages)")
+        off = vpage * self.page_bytes
+        nbytes = n_pages * self.page_bytes
+        if self.cq.outstanding >= self.cq.max_outstanding:
+            # keep the posting verbs unblocked; history stays in
+            # ``completions`` for callers that drained nothing themselves
+            self.completions.extend(self.cq.poll(self.cq.max_outstanding))
+        wr = self.domain.post_read(self.remote_mr, self.local_mr,
+                                   cq=self.cq, nbytes=nbytes,
+                                   target_offset=off, local_offset=off)
+        wc = wr.result()
+        return PageInReceipt(us=wc.latency_us, remote_reads=1,
+                             rapf_retransmits=wc.stats.rapf_retransmits,
+                             dst_faults=wc.stats.dst_faults,
+                             bytes_in=nbytes)
+
+    # convenience builder ------------------------------------------------
+    @classmethod
+    def build(cls, *, n_frames: int, page_elems: int, n_pages: int,
+              fabric: Optional[Fabric] = None, pd: int = 1,
+              policy: Optional[FaultPolicy] = None,
+              local: Optional[FramePool] = None,
+              page_bytes: int = A.PAGE_SIZE,
+              local_node: int = 0, remote_node: int = 1,
+              local_base: int = 0x10_0000_0000,
+              remote_base: int = 0x20_0000_0000,
+              cq_depth: int = 256, dtype=jnp.float32) -> "RemoteFramePool":
+        """Wire a two-node fabric scenario: remote backing (pre-touched),
+        faulting local landing buffer, one CQ, one protection domain."""
+        fabric = fabric or Fabric.build(FabricConfig(n_nodes=2))
+        domain = fabric.domain(pd) or fabric.open_domain(pd, policy=policy)
+        size = n_pages * page_bytes
+        remote_mr = domain.register_memory(remote_node, remote_base, size,
+                                           prep=BufferPrep.TOUCHED)
+        local_mr = domain.register_memory(local_node, local_base, size,
+                                          prep=BufferPrep.FAULTING)
+        cq = fabric.create_cq(depth=cq_depth)
+        local = local or DeviceFramePool(n_frames, page_elems, dtype)
+        return cls(local, domain, remote_mr, local_mr, cq,
+                   page_bytes=page_bytes)

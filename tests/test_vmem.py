@@ -1,0 +1,289 @@
+"""repro.vmem: unified pager, pluggable pools/eviction/prefetch, the
+remote (fabric-backed) frame pool, and the legacy-kwarg deprecation."""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.api import FaultPolicy, Strategy, WROpcode
+from repro.vmem import (ClockEviction, DeviceFramePool, FrameIdPool,
+                        HostFramePool, LRUEviction, Pager, PagingStats,
+                        PinAwareLRU, RemoteFramePool, StreamPrefetch,
+                        TouchAheadPrefetch, coerce_policy, predictor_for)
+
+
+def _pager(n_frames=4, n_pages=16, page_elems=8, **kw):
+    pool = kw.pop("pool", None) or DeviceFramePool(n_frames, page_elems)
+    pager = Pager(pool, **kw)
+    space = pager.create_space(n_pages, name="t0")
+    for v in range(n_pages):
+        space.write(v, np.full(page_elems, v, np.float32))
+    return pager, space
+
+
+class TestPagerCore:
+    def test_fault_resolve_map_roundtrip(self):
+        pager, sp = _pager(policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        out = sp.access([3])
+        assert sp.is_resident(3)
+        np.testing.assert_array_equal(np.asarray(out[0]), np.full(8, 3.0))
+        assert pager.stats.faults == 1
+        assert pager.stats.pages_in == 1
+        assert pager.stats.simulated_us > 0
+
+    def test_touch_ahead_prefetch_and_hits(self):
+        pager, sp = _pager(policy=FaultPolicy(Strategy.TOUCH_AHEAD,
+                                              lookahead=4))
+        sp.access([0])
+        assert sp.resident_pages() == 4
+        sp.access([1, 2, 3])
+        assert pager.stats.faults == 1
+        assert pager.stats.prefetch_hits == 3
+
+    def test_stream_predictor_warms_next_block(self):
+        pager, sp = _pager(n_frames=8,
+                           policy=FaultPolicy(Strategy.STREAM, lookahead=4))
+        sp.access([0])
+        # block 0-3 plus the streamed first page of the next block
+        assert sp.resident_pages() == 5
+        assert sp.is_resident(4)
+
+    def test_host_pool_backend(self):
+        pool = HostFramePool(4, 8)
+        pager = Pager(pool)
+        sp = pager.create_space(8)
+        sp.write(5, np.arange(8))
+        out = sp.access([5])
+        np.testing.assert_array_equal(np.asarray(out[0]), np.arange(8.0))
+
+    def test_writeback_on_eviction(self):
+        pager, sp = _pager(n_frames=2,
+                           policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        sp.access([0])
+        f = int(sp.page_table[0])
+        pager.pool.load(f, np.full(8, 99.0))
+        sp.access([1])
+        sp.access([2])                        # evicts page 0 (LRU)
+        assert not sp.is_resident(0)
+        np.testing.assert_array_equal(sp.backing[0], np.full(8, 99.0))
+
+
+class TestEvictionUnderPins:
+    def test_pinned_pages_never_evicted(self):
+        pager, sp = _pager(n_frames=4,
+                           policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        sp.pin([0, 1])
+        for v in (2, 3, 4, 5, 6):             # cycle the unpinned frames
+            sp.access([v])
+        assert sp.is_resident(0) and sp.is_resident(1)
+        assert pager.stats.evictions == 3
+        assert not sp.pinned[[2, 3, 4, 5, 6]].any()
+
+    def test_all_pinned_raises_with_violation(self):
+        pager, sp = _pager(n_frames=2,
+                           policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        sp.pin([0, 1])
+        with pytest.raises(MemoryError):
+            sp.access([2])
+        assert pager.stats.pin_violations == 1
+        assert sp.stats.pin_violations == 1
+
+    def test_fault_policy_pin_budget(self):
+        pol = FaultPolicy(Strategy.TOUCH_A_PAGE,
+                          pin_limit_bytes=2 * 4096)
+        pager, sp = _pager(n_frames=4, policy=pol)
+        sp.pin([0, 1])                        # exactly the budget
+        with pytest.raises(MemoryError):
+            sp.pin([2])
+        assert pager.stats.pin_violations == 1
+
+    def test_clock_eviction_second_chance(self):
+        pager, sp = _pager(n_frames=2, eviction=ClockEviction(),
+                           policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        sp.access([0])
+        sp.access([1])
+        sp.access([0])                        # re-reference page 0
+        sp.access([2])                        # clock skips hot 0 eventually
+        assert sp.resident_pages() == 2
+        assert pager.stats.evictions == 1
+
+
+class TestMultiTenantSharedPool:
+    def test_two_spaces_one_pool_contention(self):
+        pool = DeviceFramePool(8, 4)
+        pager = Pager(pool, policy=FaultPolicy(Strategy.TOUCH_A_PAGE),
+                      eviction=PinAwareLRU())
+        a = pager.create_space(16, name="a")
+        b = pager.create_space(16, name="b")
+        for v in range(8):                    # tenant A hogs the pool
+            a.access([v])
+        assert a.resident_pages() == 8
+        for v in range(2):                    # B faults: fairness — A pays
+            b.access([v])
+        assert b.resident_pages() == 2
+        assert a.resident_pages() == 6
+        assert pager.stats.spills == 2        # cross-tenant evictions
+        assert b.stats.spills == 2            # charged to the requester
+        assert a.stats.pages_out == 2         # paid by the hog
+        assert pager.stats.evictions == 2
+
+    def test_pinning_tenant_cannot_be_robbed(self):
+        pool = DeviceFramePool(4, 4)
+        pager = Pager(pool, policy=FaultPolicy(Strategy.TOUCH_A_PAGE),
+                      eviction=PinAwareLRU())
+        a = pager.create_space(8, name="a")
+        b = pager.create_space(8, name="b")
+        a.pin([0, 1, 2])
+        b.access([0])
+        b.access([1])                         # must evict b's own page
+        assert a.resident_pages() == 3
+        assert b.resident_pages() == 1
+        pager.pin(b, [1])                     # now everything is pinned
+        with pytest.raises(MemoryError):
+            b.access([2])
+        assert pager.stats.pin_violations == 1
+
+    def test_per_space_policy_override(self):
+        pool = DeviceFramePool(8, 4)
+        pager = Pager(pool, policy=FaultPolicy(Strategy.TOUCH_AHEAD,
+                                               lookahead=4))
+        a = pager.create_space(16, name="a")
+        b = pager.create_space(16, name="b",
+                               policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        a.access([0])
+        b.access([0])
+        assert a.resident_pages() == 4        # block fault
+        assert b.resident_pages() == 1        # single-page fault
+
+    def test_shared_pool_across_separate_pagers(self):
+        # consumers that share a pool via pool= get separate Pagers; the
+        # pool-wide space registry still lets them contend for frames
+        from repro.memory.paged_store import PagedTensorStore
+        pool = DeviceFramePool(4, 16)
+        a = PagedTensorStore(16, 4, 8, pool=pool,
+                             policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        b = PagedTensorStore(16, 4, 8, pool=pool,
+                             policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        b.access([0, 1, 2, 3])                # b fills the shared pool
+        a.access([0])                         # must evict one of b's pages
+        assert a.resident_pages() == 1
+        assert b.resident_pages() == 3
+        assert a.stats.spills == 1
+
+    def test_injected_pager_policy_governs(self):
+        from repro.memory.paged_store import PagedTensorStore
+        pager = Pager(DeviceFramePool(8, 16),
+                      policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        st = PagedTensorStore(16, 8, 8, pager=pager)
+        st.access([0])
+        assert st.resident_pages() == 1       # TOUCH_A_PAGE, not the
+        assert st.strategy is Strategy.TOUCH_A_PAGE   # coerced default
+
+    def test_frame_id_pool_is_control_plane_only(self):
+        pager = Pager(FrameIdPool(4))
+        sp = pager.create_space(8)
+        assert sp.backing is None
+        pager.map_fresh(sp, 0)
+        assert sp.is_resident(0)
+        with pytest.raises(NotImplementedError):
+            sp.access([0])
+
+
+class TestRemoteFramePool:
+    def _remote_pager(self, policy=None, n_frames=4, n_pages=16):
+        pool = RemoteFramePool.build(n_frames=n_frames, page_elems=8,
+                                     n_pages=n_pages, policy=policy)
+        pager = Pager(pool, policy=policy or FaultPolicy(
+            Strategy.TOUCH_AHEAD, lookahead=4))
+        sp = pager.create_space(n_pages, name="remote-tenant")
+        for v in range(n_pages):
+            sp.write(v, np.full(8, v, np.float32))
+        return pool, pager, sp
+
+    def test_page_ins_complete_on_cq(self):
+        pool, pager, sp = self._remote_pager()
+        sp.access([0])                        # one block fault -> one read
+        wcs = pool.cq.poll(max_entries=16)
+        assert len(wcs) == 1
+        assert wcs[0].opcode is WROpcode.READ
+        assert wcs[0].nbytes == 4 * 4096      # the whole touched-ahead run
+        assert pager.stats.remote_reads == 1
+        assert pager.stats.remote_bytes_in == 4 * 4096
+
+    def test_rapf_stats_surface_in_paging_stats(self):
+        pool, pager, sp = self._remote_pager()
+        sp.access([0])
+        # the local landing region is FAULTING: cold page-ins take
+        # destination faults whose RAPF retransmits are surfaced
+        assert pager.stats.remote_dst_faults > 0
+        assert pager.stats.rapf_retransmits > 0
+        assert sp.stats.rapf_retransmits > 0
+        assert pager.stats.simulated_us > 0
+
+    def test_data_plane_still_real(self):
+        pool, pager, sp = self._remote_pager(
+            policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        out = sp.access([7])
+        np.testing.assert_array_equal(np.asarray(out[0]), np.full(8, 7.0))
+        assert pager.stats.remote_reads == 1
+
+    def test_refault_after_eviction_posts_again(self):
+        pool, pager, sp = self._remote_pager(
+            policy=FaultPolicy(Strategy.TOUCH_A_PAGE), n_frames=2)
+        sp.access([0])
+        sp.access([1])
+        sp.access([2])                        # evicts 0
+        sp.access([0])                        # pages 0 back in remotely
+        assert pager.stats.remote_reads == 4
+        drained = pool.cq.poll(max_entries=16)
+        assert len(drained) + len(pool.completions) == 4
+
+
+class TestUnifiedStats:
+    def test_reset_zeroes_everything(self):
+        s = PagingStats()
+        s.faults = 7
+        s.simulated_us = 3.5
+        s.rapf_retransmits = 2
+        s.reset()
+        assert s == PagingStats()
+
+    def test_legacy_aliases(self):
+        s = PagingStats(faults=3, pages_in=9)
+        assert s.fault_events == 3
+        assert s.fault_page_ins == 9
+
+    def test_merge(self):
+        a = PagingStats(faults=1, simulated_us=2.0)
+        b = PagingStats(faults=2, simulated_us=0.5)
+        a.merge(b)
+        assert a.faults == 3
+        assert a.simulated_us == 2.5
+
+
+class TestPolicyCompat:
+    def test_legacy_kwargs_warn_once_place(self):
+        with pytest.warns(DeprecationWarning, match="deprecated"):
+            pol = coerce_policy("X", None, Strategy.TOUCH_A_PAGE, 2)
+        assert pol.strategy is Strategy.TOUCH_A_PAGE
+        assert pol.lookahead == 2
+
+    def test_policy_wins_and_both_is_an_error(self):
+        pol = FaultPolicy(Strategy.STREAM)
+        assert coerce_policy("X", pol) is pol
+        with pytest.raises(TypeError):
+            coerce_policy("X", pol, Strategy.TOUCH_A_PAGE)
+
+    def test_no_kwargs_no_warning(self):
+        with warnings.catch_warnings():
+            warnings.simplefilter("error")
+            pol = coerce_policy("X", None)
+        assert pol.strategy is Strategy.TOUCH_AHEAD
+
+    def test_predictors_match_policies(self):
+        assert isinstance(
+            predictor_for(FaultPolicy(Strategy.STREAM)), StreamPrefetch)
+        assert isinstance(
+            predictor_for(FaultPolicy(Strategy.KERNEL_RAPF)),
+            TouchAheadPrefetch)
