@@ -1,0 +1,123 @@
+"""DMA-arbiter QoS benchmark: fault isolation across tenants.
+
+The thesis' mechanism ("a faulting transfer pauses without stalling the
+engine", §3.2) scaled to multi-tenant service: a BULK tenant that takes a
+destination fault on **every block** it sends (fresh, cold landing
+buffers per request) shares one node's PLDMA with a clean LATENCY
+serving tenant.  Four scenarios, one seed, all through
+``repro.testing.soak``:
+
+* **baseline** — the LATENCY tenant alone on the fabric;
+* **contended** — LATENCY + fault-storming BULK, arbiter on
+  (deschedule-on-fault + strict LATENCY priority + DRR);
+* **firehose** — LATENCY + *clean* 64 KB BULK firehose: the blocks
+  genuinely occupy PLDMA slots and wire, so arbitration (not
+  deschedule-on-fault) is what protects the serving tenant;
+* **firehose_prearb** — same mix in the seed regime (unbounded PLDMA
+  occupancy via a slot count nothing here can exhaust): every launched
+  block books the wire immediately, recreating the old head-of-line
+  stall.
+
+Claim checks: with the arbiter, the serving tenant's mean completion
+latency stays within 2x its fault-free baseline (the ISSUE-3 bound), its
+p99 stays well under one retransmission timeout, the pre-arbiter regime
+is measurably worse, and the soak invariant checkers report zero
+violations in every scenario.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.api import BufferPrep, FabricConfig, ServiceClass
+from repro.testing import FaultInjection, TenantSpec, soak
+
+SEED = 2026
+
+SERVING = TenantSpec(pd=1, name="serving",
+                     service_class=ServiceClass.LATENCY,
+                     mode="closed", inflight=2, n_requests=24,
+                     size_choices=(4096,),
+                     src_prep=BufferPrep.TOUCHED,
+                     dst_prep=BufferPrep.TOUCHED)
+
+#: every 64 KB request lands in a brand-new FAULTING region: all four
+#: blocks of every transfer fault, NACK, pause and RAPF-retransmit
+STORM = TenantSpec(pd=2, name="bulk-storm",
+                   service_class=ServiceClass.BULK,
+                   mode="closed", inflight=8, n_requests=16,
+                   size_choices=(65536,),
+                   dst_prep=BufferPrep.FAULTING, fresh_dst=True)
+
+#: clean 64 KB BULK firehose: no faults, so its blocks genuinely occupy
+#: PLDMA slots and wire — the regime where class priority (not
+#: deschedule-on-fault) is what protects the serving tenant
+FIREHOSE = TenantSpec(pd=2, name="bulk-firehose",
+                      service_class=ServiceClass.BULK,
+                      mode="closed", inflight=8, n_requests=16,
+                      size_choices=(65536,),
+                      dst_prep=BufferPrep.TOUCHED)
+
+CHURN = FaultInjection(khugepaged_period_us=500.0)
+
+
+def run_scenarios() -> dict:
+    out = {}
+    out["baseline"] = soak(SEED, tenants=[SERVING])
+    out["contended"] = soak(SEED, tenants=[SERVING, STORM],
+                            injection=CHURN)
+    out["firehose"] = soak(SEED, tenants=[SERVING, FIREHOSE])
+    # the seed regime: no shared-slot arbitration — every launched block
+    # goes straight to the PLDMA/wire (approximated by a slot count no
+    # workload here can exhaust), so the firehose books the wire ahead
+    # of the serving tenant's small writes
+    out["firehose_prearb"] = soak(
+        SEED, tenants=[SERVING, FIREHOSE],
+        config=FabricConfig(n_nodes=2, pldma_slots=512))
+    return out
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    res = run_scenarios()
+    serving = {k: r.stats["tenants"][0] for k, r in res.items()}
+    base_mean = serving["baseline"]["latency_mean_us"]
+    cont_mean = serving["contended"]["latency_mean_us"]
+    cont_p99 = serving["contended"]["latency_p99_us"]
+    fh_mean = serving["firehose"]["latency_mean_us"]
+    fh_prearb_mean = serving["firehose_prearb"]["latency_mean_us"]
+    storm = res["contended"].stats["tenants"][1]
+
+    emit("arbiter/serving_baseline_mean", base_mean,
+         f"n={SERVING.n_requests} 4KB writes, fabric idle")
+    emit("arbiter/serving_contended_mean", cont_mean,
+         f"vs {STORM.n_requests} 64KB all-blocks-faulting BULK writes")
+    emit("arbiter/serving_contended_p99", cont_p99,
+         f"storm dst_faults={storm['dst_faults']}")
+    emit("arbiter/serving_vs_firehose_mean", fh_mean,
+         "LATENCY class vs clean 64KB BULK firehose")
+    emit("arbiter/serving_vs_firehose_prearb_mean", fh_prearb_mean,
+         "same mix, pre-arbiter regime (unbounded PLDMA occupancy)")
+    emit("arbiter/storm_mean", storm["latency_mean_us"],
+         f"rapf={storm['rapf_retransmits']} timeouts={storm['timeouts']}")
+
+    check("arbiter: fault-storming BULK tenant leaves LATENCY tenant's "
+          "mean within 2x its fault-free baseline",
+          cont_mean <= 2.0 * base_mean,
+          f"{cont_mean:.1f}us vs 2x{base_mean:.1f}us")
+    check("arbiter: contended LATENCY p99 stays under one retransmission "
+          "timeout (no head-of-line 1ms stall)",
+          cont_p99 < 1000.0, f"p99={cont_p99:.1f}us")
+    check("arbiter: bounded-slot arbitration is load-bearing (pre-arbiter "
+          "unbounded PLDMA occupancy degrades the serving tenant)",
+          fh_prearb_mean > 1.5 * fh_mean,
+          f"{fh_prearb_mean:.1f}us unbounded vs {fh_mean:.1f}us arbitrated")
+    check("arbiter: storm tenant still makes progress (no starvation)",
+          storm["completed"] == STORM.n_requests,
+          f"{storm['completed']}/{STORM.n_requests}")
+    for name, r in res.items():
+        check(f"arbiter: soak invariants hold ({name})", r.ok,
+              "; ".join(r.violations[:3]))
+
+
+if __name__ == "__main__":
+    main()

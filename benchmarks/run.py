@@ -12,9 +12,9 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks import (fig_2_3_firehose, fig_4_1, fig_4_2, fig_4_3, fig_4_4,
-                        fig_4_6, fig_4_7, table_4_1, thp_study,
-                        timeout_sweep, verbs_async, vmem_remote)
+from benchmarks import (arbiter_qos, fig_2_3_firehose, fig_4_1, fig_4_2,
+                        fig_4_3, fig_4_4, fig_4_6, fig_4_7, table_4_1,
+                        thp_study, timeout_sweep, verbs_async, vmem_remote)
 from benchmarks.common import summary, write_json
 
 MODULES = (
@@ -31,6 +31,7 @@ MODULES = (
     ("Verbs API (async burst, batched CQ polling, multi-tenant)",
      verbs_async),
     ("vmem over the fabric (remote KV/tensor page-ins)", vmem_remote),
+    ("DMA-arbiter QoS (multi-tenant fault isolation)", arbiter_qos),
 )
 
 

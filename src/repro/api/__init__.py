@@ -43,6 +43,25 @@ Pinning limit M / Firehose        ``FaultPolicy.pin_limit_bytes``,
 working-set cliff (§2.3)          enforced by ``Pager.pin`` and by
                                   pin-aware eviction
                                   (``repro.vmem.PinAwareLRU``).
+"Adjustments to the DMA           ``repro.core.arbiter.DMAArbiter`` —
+scheduling logic" so a faulting   per-(domain, class) send queues feeding
+transfer pauses without           each node's PLDMA slots by deficit
+stalling the engine (§3.2)        round-robin; a block entering
+                                  ``PAUSED_SRC``/``PAUSED_DST`` yields
+                                  its slot immediately and re-enters at
+                                  the back of its queue on RAPF/timeout.
+DMA service classes /             ``ServiceClass.LATENCY`` (strict
+per-tenant QoS (beyond paper:     priority) vs ``ServiceClass.BULK``
+multi-tenant RDMA service)        (weighted share) — per
+                                  ``FaultPolicy.service_class`` /
+                                  ``open_domain``, overridable per work
+                                  request (``post_write(...,
+                                  service_class=...)``).
+Per-tenant admission control      ``FaultPolicy.max_outstanding_blocks``
+(beyond paper)                    — the posting verbs raise
+                                  ``DomainQuotaExceeded`` when a domain
+                                  is at its outstanding-block quota;
+                                  telemetry in ``ArbiterStats``.
 ===============================  ========================================
 
 Quick tour::
@@ -64,18 +83,21 @@ Quick tour::
         print(wc.latency_us, wc.stats.dst_faults, wc.stats.rapf_retransmits)
 """
 
-from repro.api.completion import (CompletionQueue, CQStats, WCStatus,
+from repro.api.completion import (CompletionQueue, CQStats,
+                                  DomainQuotaExceeded, WCStatus,
                                   WorkCompletion, WorkQueueFull, WorkRequest,
                                   WROpcode)
 from repro.api.config import FabricConfig
 from repro.api.fabric import Fabric, ProtectionDomain
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import DEFAULT_POLICY, FaultPolicy
+from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
 from repro.core.resolver import Strategy
 
 __all__ = [
-    "BufferPrep", "CompletionQueue", "CQStats", "DEFAULT_POLICY", "Fabric",
+    "ArbiterStats", "BufferPrep", "CompletionQueue", "CQStats",
+    "DEFAULT_POLICY", "DMAArbiter", "DomainQuotaExceeded", "Fabric",
     "FabricConfig", "FaultPolicy", "MemoryRegion", "PrepCost",
-    "ProtectionDomain", "RegionError", "Strategy", "WCStatus",
-    "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
+    "ProtectionDomain", "RegionError", "ServiceClass", "Strategy",
+    "WCStatus", "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
 ]

@@ -55,6 +55,16 @@ class WorkQueueFull(RuntimeError):
     """Posting would exceed the CQ's outstanding-work-request cap."""
 
 
+class DomainQuotaExceeded(WorkQueueFull):
+    """Posting would exceed the domain's outstanding-block quota.
+
+    Raised by the posting verbs when the sending node's DMA arbiter
+    reports the protection domain at its ``max_outstanding_blocks``
+    (:class:`~repro.api.policy.FaultPolicy`) — per-tenant backpressure,
+    so one tenant's backlog can't grow without bound inside the fabric.
+    """
+
+
 class WROpcode(enum.Enum):
     WRITE = "write"
     READ = "read"
@@ -130,6 +140,7 @@ class CQStats:
     empty_polls: int = 0
     max_queued: int = 0
     rejected_posts: int = 0      # WorkQueueFull backpressure events
+    deadline_expiries: int = 0   # wait() returns that hit the deadline
 
 
 class CompletionQueue:
@@ -200,8 +211,14 @@ class CompletionQueue:
         deadline passes), then drain and return up to ``n`` of them.
 
         May return fewer than ``n`` entries if the deadline expires first —
-        callers check ``len()``, as with a timed verbs CQ wait.
+        callers check ``len()`` (and ``stats.deadline_expiries``), as with
+        a timed verbs CQ wait.
         """
-        _advance_until(self.fabric.loop, lambda: len(self._entries) >= n,
-                       deadline_us, max_events)
+        loop = self.fabric.loop
+        if not _advance_until(loop, lambda: len(self._entries) >= n,
+                              deadline_us, max_events) \
+                and loop.peek_time() is not None:
+            # events remain past the deadline: a genuine expiry (a
+            # drained loop just means no more completions will ever come)
+            self.stats.deadline_expiries += 1
         return self.poll(max_entries=n)

@@ -12,6 +12,8 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.core.addresses import BLOCK_SIZE
+from repro.core.arbiter import DEFAULT_PLDMA_SLOTS
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.fault import FaultModel
 from repro.api.policy import FaultPolicy
@@ -32,6 +34,12 @@ class FabricConfig:
     * ``default_policy`` — fabric-wide fault policy; per-node overrides in
       ``node_policies`` (node index -> policy); per-domain overrides are
       given to ``Fabric.open_domain``.
+    * ``pldma_slots`` — PLDMA occupancy per node: blocks streaming (or
+      awaiting their ACK) at once, shared by ALL tenants and arbitrated by
+      the fault-aware :class:`~repro.core.arbiter.DMAArbiter` (default 2,
+      the hardware's outstanding-block window).
+    * ``arb_quantum_bytes`` — deficit-round-robin quantum of that arbiter
+      (default one 16 KB block).
     """
 
     n_nodes: int = 2
@@ -42,10 +50,15 @@ class FabricConfig:
     frames_per_node: int = 1 << 20
     default_policy: FaultPolicy = dataclasses.field(default_factory=FaultPolicy)
     node_policies: dict = dataclasses.field(default_factory=dict)
+    pldma_slots: int = DEFAULT_PLDMA_SLOTS
+    arb_quantum_bytes: int = BLOCK_SIZE
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
             raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.pldma_slots < 1:
+            raise ValueError(
+                f"pldma_slots must be >= 1, got {self.pldma_slots}")
         if self.cost is None:
             self.cost = DEFAULT_COST_MODEL
 

@@ -19,11 +19,13 @@ from __future__ import annotations
 from typing import Optional
 
 from repro.core import addresses as A
+from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.core.node import Link, Node, Transfer
 from repro.core.pagetable import FrameAllocator
 from repro.core.simulator import EventLoop
-from repro.api.completion import (CompletionQueue, WCStatus, WorkCompletion,
-                                  WorkRequest, WROpcode)
+from repro.api.completion import (CompletionQueue, DomainQuotaExceeded,
+                                  WCStatus, WorkCompletion, WorkRequest,
+                                  WROpcode)
 from repro.api.config import FabricConfig
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import FaultPolicy
@@ -37,6 +39,10 @@ class ProtectionDomain:
         self.fabric = fabric
         self.pd = pd
         self.policy = policy
+        # default arbiter class of this domain's work requests (None ->
+        # the class each node registered for the pd); consulted by the
+        # posting verbs, so reassigning it retargets subsequent posts
+        self.service_class: Optional[ServiceClass] = policy.service_class
         # node index -> the policy actually governing this domain there
         # (per-node FabricConfig overrides when no domain policy was given)
         self._node_policies = node_policies or {}
@@ -87,8 +93,13 @@ class ProtectionDomain:
     def post_write(self, src: MemoryRegion, dst: MemoryRegion,
                    cq: CompletionQueue, nbytes: Optional[int] = None,
                    src_offset: int = 0, dst_offset: int = 0,
-                   wr_id: Optional[int] = None) -> WorkRequest:
-        """Asynchronous remote write ``src -> dst``; completion on ``cq``."""
+                   wr_id: Optional[int] = None,
+                   service_class: Optional[ServiceClass] = None
+                   ) -> WorkRequest:
+        """Asynchronous remote write ``src -> dst``; completion on ``cq``.
+
+        ``service_class`` overrides the domain's arbiter class for this
+        work request only (e.g. a BULK tenant posting one urgent WR)."""
         self._check_regions(src, dst)
         nbytes = nbytes if nbytes is not None else min(src.length, dst.length)
         src_va = src.addr + src_offset
@@ -98,18 +109,26 @@ class ProtectionDomain:
         assert (src_va % A.PAGE_SIZE) == (dst_va % A.PAGE_SIZE), \
             "fabric requires equally page-aligned src/dst (as in the thesis runs)"
         fabric = self.fabric
+        self._check_quota(src.node_id)     # blocks launch on the src node
         cq.on_post()
         wr_id = wr_id if wr_id is not None else fabric._next_wr_id()
         t = fabric._start_write(self.pd, src.node_id, src_va,
-                                dst.node_id, dst_va, nbytes)
+                                dst.node_id, dst_va, nbytes,
+                                service_class=service_class
+                                or self.service_class)
         return fabric._track(wr_id, WROpcode.WRITE, cq, t)
 
     def post_read(self, target: MemoryRegion, local: MemoryRegion,
                   cq: CompletionQueue, nbytes: Optional[int] = None,
                   target_offset: int = 0, local_offset: int = 0,
-                  wr_id: Optional[int] = None) -> WorkRequest:
+                  wr_id: Optional[int] = None,
+                  service_class: Optional[ServiceClass] = None
+                  ) -> WorkRequest:
         """Asynchronous remote read: request forwarded to the target node,
-        whose R5 turns it into a write back to the initiator (§1.3.2.2)."""
+        whose R5 turns it into a write back to the initiator (§1.3.2.2).
+
+        ``service_class`` overrides the domain's arbiter class for this
+        work request only (demand page-ins post LATENCY, prefetch BULK)."""
         self._check_regions(target, local)
         nbytes = nbytes if nbytes is not None else min(target.length,
                                                       local.length)
@@ -121,11 +140,29 @@ class ProtectionDomain:
         assert (target_va % A.PAGE_SIZE) == (local_va % A.PAGE_SIZE), \
             "fabric requires equally page-aligned target/local (as in the thesis runs)"
         fabric = self.fabric
+        self._check_quota(target.node_id)  # blocks launch on the target node
         cq.on_post()
         wr_id = wr_id if wr_id is not None else fabric._next_wr_id()
         t = fabric._start_read(self.pd, target.node_id, target_va,
-                               local.node_id, local_va, nbytes)
+                               local.node_id, local_va, nbytes,
+                               service_class=service_class
+                               or self.service_class)
         return fabric._track(wr_id, WROpcode.READ, cq, t)
+
+    def _check_quota(self, sending_node: int) -> None:
+        """Per-domain outstanding-block quota backpressure (arbiter)."""
+        arb = self.fabric.nodes[sending_node].arbiter
+        if arb.over_quota(self.pd):
+            arb.note_quota_rejection(self.pd)
+            raise DomainQuotaExceeded(
+                f"domain pd={self.pd} at its outstanding-block quota on "
+                f"node {sending_node} ({arb.outstanding(self.pd)} blocks); "
+                f"drain completions first")
+
+    def arbiter_stats(self, node_idx: int) -> ArbiterStats:
+        """This domain's DMA-arbiter telemetry on ``node_idx``."""
+        arb = self.fabric.nodes[node_idx].arbiter
+        return arb.domain_stats.setdefault(self.pd, ArbiterStats())
 
     def _check_regions(self, *regions: MemoryRegion) -> None:
         for mr in regions:
@@ -150,7 +187,9 @@ class Fabric:
             node = Node(self.loop, self.cost, i,
                         policy.make_resolver(self.cost),
                         allocator=FrameAllocator(config.frames_per_node),
-                        hupcf=config.hupcf, fault_model=config.fault_model)
+                        hupcf=config.hupcf, fault_model=config.fault_model,
+                        pldma_slots=config.pldma_slots,
+                        arb_quantum_bytes=config.arb_quantum_bytes)
             self.nodes.append(node)
         # full-duplex links between every pair (and loopback), one hop each
         for a in self.nodes:
@@ -178,12 +217,21 @@ class Fabric:
     # ------------------------------------------------------------- domains
     def open_domain(self, pd: int,
                     policy: Optional[FaultPolicy] = None,
-                    nodes: Optional[list[int]] = None) -> ProtectionDomain:
+                    nodes: Optional[list[int]] = None,
+                    service_class: Optional[ServiceClass] = None,
+                    arb_weight: Optional[int] = None,
+                    max_outstanding_blocks: Optional[int] = None
+                    ) -> ProtectionDomain:
         """Create protection domain ``pd`` on ``nodes`` (default: all).
 
         ``policy`` overrides the per-node / fabric-default fault policy for
         THIS domain: its resolver is threaded into each node's fault
         handlers via ``Node.resolver_for(pd)``.
+
+        ``service_class`` / ``arb_weight`` / ``max_outstanding_blocks``
+        override the policy's DMA-arbiter parameters for this domain
+        (class of its blocks, DRR bandwidth weight, outstanding-block
+        quota enforced by the posting verbs).
         """
         if pd in self.domains:
             raise ValueError(f"domain pd={pd} already open")
@@ -206,12 +254,21 @@ class Fabric:
         for i in node_idxs:
             resolver = (policy.make_resolver(self.cost)
                         if policy is not None else None)
+            eff = effective[i]
             self.nodes[i].create_domain(
-                pd, pin_limit_bytes=effective[i].pin_limit_bytes,
-                resolver=resolver)
+                pd, pin_limit_bytes=eff.pin_limit_bytes,
+                resolver=resolver,
+                service_class=service_class or eff.service_class,
+                arb_weight=(arb_weight if arb_weight is not None
+                            else eff.arb_weight),
+                max_outstanding_blocks=(
+                    max_outstanding_blocks if max_outstanding_blocks
+                    is not None else eff.max_outstanding_blocks))
         dom = ProtectionDomain(self, pd,
                                policy or self.config.default_policy,
                                node_policies=effective)
+        if service_class is not None:     # explicit override beats policy
+            dom.service_class = service_class
         self.domains[pd] = dom
         return dom
 
@@ -239,18 +296,29 @@ class Fabric:
         return self._wr_counter
 
     def _start_write(self, pd: int, src_node: int, src_va: int,
-                     dst_node: int, dst_va: int, nbytes: int) -> Transfer:
+                     dst_node: int, dst_va: int, nbytes: int,
+                     service_class: Optional[ServiceClass] = None) -> Transfer:
         self._tid += 1
         t = Transfer(self._tid, pd, self.nodes[src_node],
-                     self.nodes[dst_node], src_va, dst_va, nbytes)
+                     self.nodes[dst_node], src_va, dst_va, nbytes,
+                     service_class=service_class)
+        # count against the domain quota NOW, so a burst of posts sees
+        # its own backlog before any simulated delay elapses
+        self.nodes[src_node].arbiter.note_submit(t)
         self.nodes[src_node].r5.submit(t)
         return t
 
     def _start_read(self, pd: int, target_node: int, target_va: int,
-                    local_node: int, local_va: int, nbytes: int) -> Transfer:
+                    local_node: int, local_va: int, nbytes: int,
+                    service_class: Optional[ServiceClass] = None) -> Transfer:
         self._tid += 1
         t = Transfer(self._tid, pd, self.nodes[target_node],
-                     self.nodes[local_node], target_va, local_va, nbytes)
+                     self.nodes[local_node], target_va, local_va, nbytes,
+                     service_class=service_class)
+        # blocks will launch on the TARGET node: count them against the
+        # quota now (not after the request-packet delay), so a burst of
+        # posted reads is backpressured like a burst of writes
+        self.nodes[target_node].arbiter.note_submit(t)
         # request packet: initiator -> target mailbox
         req_delay = (self.cost.pckzer_to_mbox_us
                      + (self.cost.hop_latency_us + self.cost.packet_wire_us(16)

@@ -15,13 +15,15 @@ import dataclasses
 from typing import Optional
 
 from repro.core.addresses import PAGES_PER_BLOCK
+from repro.core.arbiter import ServiceClass
 from repro.core.costmodel import CostModel
 from repro.core.resolver import Resolver, Strategy
 
 
 @dataclasses.dataclass(frozen=True)
 class FaultPolicy:
-    """How one protection domain's page faults are resolved.
+    """How one protection domain's page faults are resolved — and how its
+    DMA traffic is scheduled while they are being resolved.
 
     * ``strategy`` — the thesis resolution strategy (Touch-A-Page,
       Touch-Ahead, ...; see :class:`~repro.core.resolver.Strategy`).
@@ -29,11 +31,24 @@ class FaultPolicy:
       ``TOUCH_AHEAD_N`` / ``STREAM`` strategies.
     * ``pin_limit_bytes`` — the domain's pinnable-memory budget M (the
       Firehose constraint); ``None`` = unlimited.
+    * ``service_class`` — DMA-arbiter class of the domain's blocks:
+      ``LATENCY`` (strict priority; serving-style small WRs) or ``BULK``
+      (DRR bandwidth share; training/offload streams).  ``None`` means
+      unspecified and schedules as BULK.
+    * ``arb_weight`` — the domain's deficit-round-robin weight within its
+      class ring (relative bandwidth share).
+    * ``max_outstanding_blocks`` — per-node cap on the domain's launched,
+      not-yet-completed blocks; the posting verbs raise
+      :class:`~repro.api.completion.DomainQuotaExceeded` beyond it.
+      ``None`` = no quota.
     """
 
     strategy: Strategy = Strategy.TOUCH_AHEAD
     lookahead: int = PAGES_PER_BLOCK
     pin_limit_bytes: Optional[int] = None
+    service_class: Optional[ServiceClass] = None
+    arb_weight: int = 1
+    max_outstanding_blocks: Optional[int] = None
 
     def make_resolver(self, cost: CostModel) -> Resolver:
         """Instantiate the resolver this policy describes."""

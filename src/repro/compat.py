@@ -1,0 +1,60 @@
+"""Version-compat shims for the installed jax.
+
+The repo targets current jax but must run on older releases (e.g. the
+CI/container pin): ``jax.sharding.AxisType`` and top-level
+``jax.shard_map`` only exist in newer versions.  Every use site goes
+through these helpers instead of feature-detecting inline.
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def axis_types_kwargs(n_axes: int) -> dict:
+    """``axis_types=(AxisType.Auto, ...)`` where the installed jax has it.
+
+    Older jax defaults every mesh axis to auto sharding anyway, so
+    omitting the kwarg there is behaviour-identical.
+    """
+    axis_type = getattr(jax.sharding, "AxisType", None)
+    if axis_type is None:
+        return {}
+    return {"axis_types": (axis_type.Auto,) * n_axes}
+
+
+def cost_analysis_dict(compiled) -> dict:
+    """``compiled.cost_analysis()`` as a dict on every jax version
+    (older releases return a one-element list of per-device dicts)."""
+    ca = compiled.cost_analysis() or {}
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return ca
+
+
+def import_shard_map():
+    """The ``shard_map`` transform, kwarg-normalized across jax versions.
+
+    ``jax.shard_map`` (new) vs ``jax.experimental.shard_map.shard_map``
+    (old), and ``check_vma=`` (new) vs ``check_rep=`` (old): call sites
+    use the new spelling; this shim translates for older releases.
+    """
+    try:
+        from jax import shard_map as sm
+    except ImportError:
+        from jax.experimental.shard_map import shard_map as sm
+    import inspect
+    try:
+        params = inspect.signature(sm).parameters
+    except (TypeError, ValueError):      # pragma: no cover
+        return sm
+    if "check_vma" in params:
+        return sm
+
+    def compat_shard_map(f=None, **kwargs):
+        vma = kwargs.pop("check_vma", None)
+        if vma is not None and "check_rep" in params:
+            kwargs.setdefault("check_rep", vma)
+        return sm(f, **kwargs) if f is not None else sm(**kwargs)
+
+    return compat_shard_map

@@ -7,6 +7,7 @@ The public, verbs-style API lives in :mod:`repro.api` (``Fabric`` /
 
 from repro.core.addresses import (BLOCK_SIZE, MTU, PAGE_SIZE, PAGES_PER_BLOCK,
                                   NetlinkMessage, RAPFMessage)
+from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.engine import BufferPrep, RDMAEngine
 from repro.core.fault import SMMU, Access, Disposition, FaultModel
@@ -17,7 +18,8 @@ from repro.core.resolver import Resolution, Resolver, Strategy
 from repro.core.simulator import EventLoop, Resource
 
 __all__ = [
-    "BLOCK_SIZE", "MTU", "PAGE_SIZE", "PAGES_PER_BLOCK",
+    "ArbiterStats", "BLOCK_SIZE", "DMAArbiter", "MTU", "PAGE_SIZE",
+    "PAGES_PER_BLOCK", "ServiceClass",
     "NetlinkMessage", "RAPFMessage", "CostModel", "DEFAULT_COST_MODEL",
     "BufferPrep", "RDMAEngine", "SMMU", "Access", "Disposition", "FaultModel",
     "FaultFIFO", "FIFOEntry", "FrameAllocator", "PageState", "PageTable",

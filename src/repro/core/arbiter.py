@@ -1,0 +1,341 @@
+"""Fault-aware multi-tenant DMA arbiter (the thesis' §3.2 "adjustments to
+the DMA scheduling logic", grown into a QoS scheduler).
+
+The thesis prototype required the DMA engine to *pause* a faulting
+transfer without stalling the engine.  The seed's ``R5Scheduler`` kept the
+pause but not the "without stalling" part for multi-tenant traffic: every
+launched block went straight to the PLDMA, so one tenant's fault storm
+(pause → 1 ms timeout → full retransmit) could book the engine and the
+wire ahead of everyone else's traffic — head-of-line blocking across
+protection domains.
+
+:class:`DMAArbiter` sits between the R5 block launcher and the PLDMA:
+
+* **per-(domain, class) send queues** — launched blocks queue per
+  protection domain, in one of two service classes:
+  :attr:`ServiceClass.LATENCY` (serving-style small work requests) and
+  :attr:`ServiceClass.BULK` (training/offload streams).  LATENCY queues
+  are served with strict priority over BULK queues;
+* **deficit round-robin across domains** within a class: each domain's
+  queue accrues ``quantum × weight`` bytes of service credit per turn and
+  dispatches whole blocks against it, so bandwidth shares follow the
+  configured weights regardless of block sizes;
+* **bounded PLDMA occupancy** — ``slots`` blocks may occupy the engine at
+  once (default 2, the hardware's outstanding-block window, now shared by
+  all tenants instead of granted per transfer);
+* **deschedule-on-fault** — a block entering ``PAUSED_SRC``/``PAUSED_DST``
+  yields its PLDMA slot *immediately*; the RAPF / retransmission-timeout
+  re-enqueues it at the back of its class queue, so a faulting tenant
+  waits out its own page faults instead of holding the engine;
+* **per-domain outstanding-block quotas** — ``Fabric``'s posting verbs
+  consult :meth:`DMAArbiter.over_quota` and refuse work beyond a domain's
+  budget (:class:`~repro.api.completion.DomainQuotaExceeded`), turning
+  runaway tenants into backpressure instead of queue growth.
+
+Everything is observable: one :class:`ArbiterStats` per domain plus a
+node-level total, with the invariant (checked by ``repro.testing``) that
+the per-domain records sum to the total.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import enum
+from collections import deque
+from typing import TYPE_CHECKING, Optional
+
+from repro.core import addresses as A
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    from repro.core.node import Block, Node
+
+
+class ServiceClass(enum.Enum):
+    """Arbiter service class of a work request / protection domain."""
+    LATENCY = "latency"      # serving-style small WRs: strict priority
+    BULK = "bulk"            # training/offload streams: bandwidth-shared
+
+    def __lt__(self, other: "ServiceClass") -> bool:   # stable sort keys
+        return self.value < other.value
+
+
+#: scheduling order: LATENCY queues are always served before BULK queues
+CLASS_PRIORITY = (ServiceClass.LATENCY, ServiceClass.BULK)
+
+#: default PLDMA occupancy: the hardware's two outstanding blocks,
+#: now a *shared* resource arbitrated across all tenants of the node
+DEFAULT_PLDMA_SLOTS = A.OUTSTANDING_BLOCKS_PER_TRANSFER
+
+
+@dataclasses.dataclass
+class ArbiterStats:
+    """Per-domain (or node-total) arbiter telemetry.
+
+    All fields except ``max_queue_depth`` are additive: the node total is
+    the field-wise sum of the per-domain records (a ``repro.testing``
+    invariant).  ``max_queue_depth`` is a high-water mark — per domain of
+    its own queues, for the total of the node-wide backlog.
+    """
+    enqueued: int = 0            # fresh blocks entering the send queues
+    dispatched: int = 0          # blocks granted a PLDMA slot
+    completed: int = 0           # blocks ACKed
+    deschedules: int = 0         # PAUSED_* blocks yielding their slot
+    requeues: int = 0            # timeout/RAPF re-entries (back of queue)
+    bytes_served: int = 0        # payload bytes of dispatched blocks
+    quota_rejections: int = 0    # posts refused by the domain quota
+    max_queue_depth: int = 0     # high-water mark (not additive)
+
+    ADDITIVE = ("enqueued", "dispatched", "completed", "deschedules",
+                "requeues", "bytes_served", "quota_rejections")
+
+
+class _DomainQueue:
+    """One (protection domain, service class) send queue with its DRR state."""
+
+    __slots__ = ("pd", "service_class", "weight", "blocks", "deficit",
+                 "credited", "in_ring")
+
+    def __init__(self, pd: int, service_class: ServiceClass, weight: int):
+        self.pd = pd
+        self.service_class = service_class
+        self.weight = max(1, weight)
+        self.blocks: deque = deque()
+        self.deficit = 0.0       # bytes of service credit (DRR counter)
+        self.credited = False    # already credited for the current turn
+        self.in_ring = False     # member of its class's active ring
+
+
+class DMAArbiter:
+    """Deficit-round-robin block scheduler in front of one node's PLDMA."""
+
+    def __init__(self, node: "Node", slots: int = DEFAULT_PLDMA_SLOTS,
+                 quantum_bytes: int = A.BLOCK_SIZE):
+        if slots < 1:
+            raise ValueError(f"need at least one PLDMA slot, got {slots}")
+        if quantum_bytes < 1:
+            raise ValueError(f"DRR quantum must be >= 1 B, got {quantum_bytes}")
+        self.node = node
+        self.slots = slots
+        self.quantum = quantum_bytes
+        self.in_flight = 0                   # blocks occupying PLDMA slots
+        # (pd, class) -> queue; active rings hold queues with blocks
+        self.queues: dict[tuple[int, ServiceClass], _DomainQueue] = {}
+        self._active: dict[ServiceClass, deque] = {
+            cls: deque() for cls in CLASS_PRIORITY}
+        # domain registration (class/weight/quota defaults per pd)
+        self._dom_class: dict[int, ServiceClass] = {}
+        self._dom_weight: dict[int, int] = {}
+        self._dom_quota: dict[int, Optional[int]] = {}
+        self._outstanding: dict[int, int] = {}   # launched, not-yet-done
+        self.stats = ArbiterStats()              # node-wide total
+        self.domain_stats: dict[int, ArbiterStats] = {}
+
+    # ------------------------------------------------------------ domains
+    def register_domain(self, pd: int,
+                        service_class: Optional[ServiceClass] = None,
+                        weight: int = 1,
+                        max_outstanding_blocks: Optional[int] = None) -> None:
+        """Declare a domain's arbitration parameters (idempotent)."""
+        self._dom_class[pd] = service_class or ServiceClass.BULK
+        self._dom_weight[pd] = max(1, weight)
+        self._dom_quota[pd] = max_outstanding_blocks
+        self.domain_stats.setdefault(pd, ArbiterStats())
+
+    def class_of(self, pd: int) -> ServiceClass:
+        return self._dom_class.get(pd, ServiceClass.BULK)
+
+    def outstanding(self, pd: int) -> int:
+        """Blocks of ``pd`` submitted and not yet completed (pending
+        launch, queued, in a PLDMA slot, or paused awaiting RAPF/timeout)."""
+        return self._outstanding.get(pd, 0)
+
+    def note_submit(self, transfer) -> None:
+        """Count a posted transfer's blocks against its domain quota
+        (called synchronously from the fabric's posting verbs — for both
+        writes and reads — so quota checks see work the moment it is
+        posted, not when blocks launch on this node)."""
+        pd = transfer.pd
+        self._outstanding[pd] = (self._outstanding.get(pd, 0)
+                                 + len(transfer.blocks))
+
+    def over_quota(self, pd: int) -> bool:
+        """Is the domain at (or beyond) its outstanding-block quota?
+
+        Posts are refused while ``outstanding >= quota``; a single work
+        request may overshoot the quota by its own block count (the quota
+        is a backpressure threshold, not a hard block-count ceiling).
+        """
+        quota = self._dom_quota.get(pd)
+        return quota is not None and self.outstanding(pd) >= quota
+
+    def note_quota_rejection(self, pd: int) -> None:
+        self._stats_for(pd).quota_rejections += 1
+        self.stats.quota_rejections += 1
+
+    def queue_depth(self, pd: Optional[int] = None) -> int:
+        if pd is None:
+            return sum(len(q.blocks) for q in self.queues.values())
+        return sum(len(q.blocks) for q in self.queues.values()
+                   if q.pd == pd)
+
+    def _stats_for(self, pd: int) -> ArbiterStats:
+        return self.domain_stats.setdefault(pd, ArbiterStats())
+
+    def _queue_for(self, pd: int, cls: ServiceClass) -> _DomainQueue:
+        q = self.queues.get((pd, cls))
+        if q is None:
+            if pd not in self._dom_class:
+                self.register_domain(pd)
+            q = _DomainQueue(pd, cls, self._dom_weight.get(pd, 1))
+            self.queues[(pd, cls)] = q
+        return q
+
+    # ------------------------------------------------------------- intake
+    def enqueue(self, block: "Block", *, retransmit: bool = False) -> None:
+        """Queue a block for a PLDMA slot (fresh launch or re-entry).
+
+        Re-entries go to the *back* of their class queue — a faulting
+        block that lost its slot does not jump fresh traffic.
+        """
+        if block.queued or block.state.name == "DONE":
+            return
+        pd = block.transfer.pd
+        cls = (block.transfer.service_class or self.class_of(pd))
+        block.service_class = cls
+        block.is_retransmit = retransmit
+        block.queued = True
+        q = self._queue_for(pd, cls)
+        q.blocks.append(block)
+        if not q.in_ring:
+            q.in_ring = True
+            self._active[cls].append(q)
+        st = self._stats_for(pd)
+        if retransmit:
+            st.requeues += 1
+            self.stats.requeues += 1
+        else:
+            st.enqueued += 1
+            self.stats.enqueued += 1
+        st.max_queue_depth = max(st.max_queue_depth, self.queue_depth(pd))
+        self.stats.max_queue_depth = max(self.stats.max_queue_depth,
+                                         self.queue_depth())
+        self._pump()
+
+    def requeue(self, block: "Block") -> None:
+        """Timeout/RAPF re-entry: release the slot if held, back of queue.
+
+        Idempotent against the timeout-then-late-RAPF race: a block that
+        is already queued, or already granted a slot with its dispatch
+        event in flight (``grant_pending``), is on its way to retransmit
+        — a second requeue must not steal the slot or double-queue it.
+        """
+        if block.queued or block.grant_pending:
+            return
+        self._release_slot(block, descheduled=False)
+        self.enqueue(block, retransmit=True)
+
+    # ---------------------------------------------------------- slot events
+    def on_block_paused(self, block: "Block") -> None:
+        """Deschedule-on-fault: a PAUSED_* block yields its slot NOW."""
+        if self._release_slot(block, descheduled=True):
+            self._pump()
+
+    def on_block_done(self, block: "Block") -> None:
+        pd = block.transfer.pd
+        st = self._stats_for(pd)
+        st.completed += 1
+        self.stats.completed += 1
+        left = self._outstanding.get(pd, 0) - 1
+        self._outstanding[pd] = max(0, left)
+        if self._release_slot(block, descheduled=False):
+            self._pump()
+
+    def _release_slot(self, block: "Block", descheduled: bool) -> bool:
+        if not block.holds_slot:
+            return False
+        block.holds_slot = False
+        self.in_flight -= 1
+        if descheduled:
+            st = self._stats_for(block.transfer.pd)
+            st.deschedules += 1
+            self.stats.deschedules += 1
+        return True
+
+    # ------------------------------------------------------------ scheduling
+    def _pump(self) -> None:
+        """Grant free PLDMA slots to queued blocks per class/DRR order."""
+        while self.in_flight < self.slots:
+            block = self._next_block()
+            if block is None:
+                return
+            block.queued = False
+            if block.state.name == "DONE":     # completed while queued
+                continue
+            block.holds_slot = True
+            block.grant_pending = True
+            self.in_flight += 1
+            pd = block.transfer.pd
+            st = self._stats_for(pd)
+            st.dispatched += 1
+            st.bytes_served += block.nbytes
+            self.stats.dispatched += 1
+            self.stats.bytes_served += block.nbytes
+            r5 = self.node.r5
+            delay = (self.node.cost.retransmit_setup_us
+                     if block.is_retransmit else self.node.cost.per_block_r5_us)
+            self.node.loop.schedule(delay, r5._dispatch, block,
+                                    block.is_retransmit)
+
+    def _next_block(self) -> Optional["Block"]:
+        """Deficit round robin, LATENCY ring strictly before BULK."""
+        for cls in CLASS_PRIORITY:
+            active = self._active[cls]
+            # a full rotation credits every queue by quantum × weight, so
+            # some head fits within ceil(BLOCK_SIZE / quantum) + 1 rotations
+            max_rot = (len(active) + 1) * (A.BLOCK_SIZE // self.quantum + 2)
+            rotations = 0
+            while active and rotations <= max_rot:
+                q = active[0]
+                if not q.blocks:
+                    # drained queue leaves the ring; credit does not hoard
+                    active.popleft()
+                    q.in_ring = False
+                    q.deficit = 0.0
+                    q.credited = False
+                    continue
+                if not q.credited:
+                    q.deficit += self.quantum * q.weight
+                    q.credited = True
+                head = q.blocks[0]
+                if q.deficit >= head.nbytes:
+                    q.deficit -= head.nbytes
+                    block = q.blocks.popleft()
+                    if not q.blocks:
+                        active.popleft()
+                        q.in_ring = False
+                        q.deficit = 0.0
+                        q.credited = False
+                    return block
+                # credit did not cover the head block: turn passes
+                q.credited = False
+                active.rotate(-1)
+                rotations += 1
+        return None
+
+    # ------------------------------------------------------------ invariants
+    def deficit_bound_violations(self) -> list[str]:
+        """DRR fairness bound: 0 <= deficit <= BLOCK_SIZE + quantum × weight.
+
+        A queue is credited quantum × weight per turn and serves whole
+        blocks (each ≤ BLOCK_SIZE) against the credit, so the counter can
+        never exceed one un-served head (< BLOCK_SIZE) plus one fresh
+        credit.  ``repro.testing`` asserts this after a soak.
+        """
+        out = []
+        for (pd, cls), q in self.queues.items():
+            hi = A.BLOCK_SIZE + self.quantum * q.weight
+            if not (0.0 <= q.deficit <= hi):
+                out.append(
+                    f"node {self.node.node_id} pd={pd} {cls.value}: "
+                    f"deficit {q.deficit} outside [0, {hi}]")
+        return out

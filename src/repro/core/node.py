@@ -34,6 +34,7 @@ from typing import Callable, Optional
 from repro.core import addresses as A
 from repro.core.addresses import (NetlinkMessage, RAPFMessage, iova_field_pack,
                                   iova_field_unpack, pages_spanned, split_blocks)
+from repro.core.arbiter import DEFAULT_PLDMA_SLOTS, DMAArbiter, ServiceClass
 from repro.core.costmodel import CostModel
 from repro.core.fault import SMMU, Access, Disposition, FaultModel
 from repro.core.fault_fifo import FaultFIFO, FIFOEntry
@@ -75,7 +76,9 @@ class TransferStats:
 class Block:
     __slots__ = ("transfer", "index", "src_va", "dst_va", "nbytes", "tr_id",
                  "seq_num", "state", "attempts", "round_id", "delivered",
-                 "nacked_round", "timeout_event", "n_pages")
+                 "nacked_round", "timeout_event", "n_pages",
+                 "service_class", "queued", "holds_slot", "grant_pending",
+                 "is_retransmit")
 
     def __init__(self, transfer: "Transfer", index: int, src_va: int,
                  dst_va: int, nbytes: int):
@@ -93,14 +96,23 @@ class Block:
         self.nacked_round = -1       # round for which a PF-NACK was sent
         self.timeout_event = None
         self.n_pages = len(pages_spanned(dst_va, nbytes))
+        # DMA-arbiter state (repro.core.arbiter)
+        self.service_class: Optional[ServiceClass] = None
+        self.queued = False          # sitting in an arbiter send queue
+        self.holds_slot = False      # occupying a PLDMA slot
+        self.grant_pending = False   # slot granted, _dispatch not yet run
+        self.is_retransmit = False
 
 
 class Transfer:
     def __init__(self, tid: int, pd: int, src_node: "Node", dst_node: "Node",
                  src_va: int, dst_va: int, nbytes: int,
-                 on_complete: Optional[Callable[["Transfer"], None]] = None):
+                 on_complete: Optional[Callable[["Transfer"], None]] = None,
+                 service_class: Optional[ServiceClass] = None):
         self.tid = tid
         self.pd = pd
+        # per-transfer arbiter class override (None -> the domain's class)
+        self.service_class = service_class
         self.src_node = src_node
         self.dst_node = dst_node
         self.src_va = src_va
@@ -147,7 +159,9 @@ class Node:
     def __init__(self, loop: EventLoop, cost: CostModel, node_id: int,
                  resolver: Resolver, allocator: Optional[FrameAllocator] = None,
                  hupcf: bool = True,
-                 fault_model: FaultModel = FaultModel.TERMINATE):
+                 fault_model: FaultModel = FaultModel.TERMINATE,
+                 pldma_slots: int = DEFAULT_PLDMA_SLOTS,
+                 arb_quantum_bytes: int = A.BLOCK_SIZE):
         self.loop = loop
         self.cost = cost
         self.node_id = node_id
@@ -162,6 +176,8 @@ class Node:
         self.hupcf = hupcf
         self.fault_model = fault_model
         self.r5 = R5Scheduler(self)
+        self.arbiter = DMAArbiter(self, slots=pldma_slots,
+                                  quantum_bytes=arb_quantum_bytes)
         # driver last-2-transactions dedup cache (§ Fig 4.2 discussion)
         self._handled: deque[tuple[int, int, int, int]] = deque(maxlen=2)
         self._rcv_tasklet_pending = False
@@ -173,13 +189,21 @@ class Node:
 
     # ------------------------------------------------------------- domains
     def create_domain(self, pd: int, pin_limit_bytes: Optional[int] = None,
-                      resolver: Optional[Resolver] = None) -> PageTable:
+                      resolver: Optional[Resolver] = None,
+                      service_class: Optional[ServiceClass] = None,
+                      arb_weight: int = 1,
+                      max_outstanding_blocks: Optional[int] = None
+                      ) -> PageTable:
         """Create protection domain ``pd``, optionally with its own fault
-        resolver (per-domain :class:`~repro.api.policy.FaultPolicy`)."""
+        resolver (per-domain :class:`~repro.api.policy.FaultPolicy`) and
+        DMA-arbiter parameters (service class, DRR weight, block quota)."""
         pt = PageTable(pd, self.allocator, pin_limit_bytes=pin_limit_bytes)
         self.page_tables[pd] = pt
         if resolver is not None:
             self.domain_resolvers[pd] = resolver
+        self.arbiter.register_domain(
+            pd, service_class=service_class, weight=arb_weight,
+            max_outstanding_blocks=max_outstanding_blocks)
         self.smmu.attach_domain(pd % A.NUM_CONTEXT_BANKS, pt, hupcf=self.hupcf,
                                 fault_model=self.fault_model)
         return pt
@@ -416,6 +440,10 @@ class R5Scheduler:
 
     # ---------------------------------------------------------------- user
     def submit(self, transfer: Transfer) -> None:
+        # NOTE: quota accounting (arbiter.note_submit) happens at POST
+        # time in repro.api.fabric, not here — for remote reads this
+        # method only runs after the request-packet delay, too late for
+        # the posting verbs' backpressure check to see the work.
         transfer.stats.t_submit = self.loop.now
         self.loop.schedule(self.cost.dma_setup_us, self._start, transfer)
 
@@ -431,10 +459,13 @@ class R5Scheduler:
         block.tr_id = self._tr_counter & A.TR_ID_MASK
         self._tr_counter += 1
         self.pending[block.tr_id] = block
-        self.loop.schedule(self.cost.per_block_r5_us, self._dispatch, block, False)
+        # blocks no longer go straight to the PLDMA: the fault-aware
+        # arbiter grants slots per service class / DRR across domains
+        self.node.arbiter.enqueue(block)
 
     # ------------------------------------------------------------ dispatch
     def _dispatch(self, block: Block, is_retransmit: bool) -> None:
+        block.grant_pending = False
         if block.state is BlockState.DONE:
             return
         node = self.node
@@ -457,6 +488,9 @@ class R5Scheduler:
             if res.disposition is not Disposition.OK:
                 block.state = BlockState.PAUSED_SRC
                 transfer.stats.src_faults += 1
+                # deschedule-on-fault: the paused block yields its PLDMA
+                # slot so other tenants' queued blocks keep streaming
+                node.arbiter.on_block_paused(block)
                 break
             pg_start = max(block.src_va, vpn << 12)
             pg_end = min(block.src_va + block.nbytes, (vpn + 1) << 12)
@@ -476,8 +510,9 @@ class R5Scheduler:
         if block.state is BlockState.DONE or round_id != block.round_id:
             return
         block.transfer.stats.timeouts += 1
-        self.loop.schedule(self.cost.retransmit_setup_us, self._dispatch,
-                           block, True)
+        # re-enter at the BACK of the block's class queue: a faulting
+        # tenant's retransmits do not jump other tenants' fresh traffic
+        self.node.arbiter.requeue(block)
 
     # ------------------------------------------------------------- arrivals
     def on_ack(self, block: Block, round_id: int) -> None:
@@ -487,6 +522,7 @@ class R5Scheduler:
         if block.timeout_event is not None:
             block.timeout_event.cancel()
         self.pending.pop(block.tr_id, None)
+        self.node.arbiter.on_block_done(block)
         transfer = block.transfer
         transfer.done_blocks += 1
         self._launch_next(transfer)
@@ -501,6 +537,7 @@ class R5Scheduler:
         if block.state is BlockState.DONE or round_id != block.round_id:
             return
         block.state = BlockState.PAUSED_DST
+        self.node.arbiter.on_block_paused(block)
 
     def on_mailbox(self, msg: RAPFMessage, stats: Optional[TransferStats]) -> None:
         if msg.opcode != A.OPCODE_RAPF:
@@ -519,8 +556,7 @@ class R5Scheduler:
         block.transfer.stats.rapf_retransmits += 1
         if block.timeout_event is not None:
             block.timeout_event.cancel()
-        self.loop.schedule(self.cost.retransmit_setup_us, self._dispatch,
-                           block, True)
+        self.node.arbiter.requeue(block)
 
     # ----------------------------------------------------------- utilities
     def find_block_by_src_page(self, pd: int, vpn: int) -> Optional[Block]:

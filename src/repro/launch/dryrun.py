@@ -18,6 +18,7 @@ import jax.numpy as jnp    # noqa: E402
 import numpy as np         # noqa: E402
 
 from repro.analysis.hlo import analyze_hlo                     # noqa: E402
+from repro.compat import cost_analysis_dict                    # noqa: E402
 from repro.configs import ARCH_IDS, get_config                 # noqa: E402
 from repro.configs.shapes import SHAPES, shapes_for, skip_reason  # noqa: E402
 from repro.distributed.logical import logical_rules                 # noqa: E402
@@ -191,7 +192,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             t_lower = time.time() - t0
             compiled = lowered.compile()
             t_compile = time.time() - t0 - t_lower
-        ca = compiled.cost_analysis() or {}
+        ca = cost_analysis_dict(compiled)
         hlo = compiled.as_text()
         ana = analyze_hlo(hlo)
         mem = _memory_dict(compiled)

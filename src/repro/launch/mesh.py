@@ -10,23 +10,24 @@ from __future__ import annotations
 
 import jax
 
+from repro.compat import axis_types_kwargs
+
+__all__ = ["axis_types_kwargs", "make_local_mesh", "make_production_mesh"]
+
 
 def make_production_mesh(*, multi_pod: bool = False):
     """Single pod: 16×16 = 256 chips (data, model).
     Multi-pod: 2×16×16 = 512 chips (pod, data, model)."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(
-        shape, axes,
-        axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    return jax.make_mesh(shape, axes, **axis_types_kwargs(len(axes)))
 
 
 def make_local_mesh(model: int = 1):
     """Whatever this process has (tests/examples: 1 CPU device)."""
     n = jax.device_count()
     return jax.make_mesh(
-        (n // model, model), ("data", "model"),
-        axis_types=(jax.sharding.AxisType.Auto,) * 2)
+        (n // model, model), ("data", "model"), **axis_types_kwargs(2))
 
 
 # TPU v5e hardware constants (per chip) for the roofline terms

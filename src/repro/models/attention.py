@@ -101,7 +101,8 @@ def _paged_update_and_attend_dist(q1, k1, v1, k_pool, v_pool, page_table,
     shard_map the gather is local: page-table frames are rebased to the
     shard-local pool slice and no collective is emitted at all.
     """
-    from jax import shard_map
+    from repro.compat import import_shard_map
+    shard_map = import_shard_map()
     from jax.sharding import PartitionSpec as P
     import numpy as _np
     from repro.distributed import logical

@@ -129,7 +129,8 @@ def _mla_update_and_attend_dist(q_abs, q_rope, c_new, kr_new, ckv_pool,
     transit the region replicated over 'model', one layer slice at a time).
     Same locality argument as the GQA path (EXPERIMENTS.md §Perf iter. 5).
     """
-    from jax import shard_map
+    from repro.compat import import_shard_map
+    shard_map = import_shard_map()
     from jax.sharding import PartitionSpec as P
     import numpy as _np
     from repro.distributed import logical

@@ -26,6 +26,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api.policy import FaultPolicy
+from repro.core.arbiter import ServiceClass
 from repro.core.resolver import Strategy
 from repro.memory.kv_cache import PagedKVManager
 from repro.vmem import coerce_policy
@@ -70,8 +71,14 @@ class ServingEngine:
         self.sampler = sampler
         self.pin_all = pin_all
         # this engine is one tenant of the KV fabric: its FaultPolicy decides
-        # how spilled pages fault back in (legacy ``strategy`` deprecated)
+        # how spilled pages fault back in (legacy ``strategy`` deprecated).
+        # Serving is latency-class traffic: unless the caller pinned a
+        # class, its fault-back-ins arbitrate ahead of BULK tenants when
+        # the KV pool is backed by the fabric (RemoteFramePool).
         self.policy = coerce_policy("ServingEngine", policy, strategy)
+        if self.policy.service_class is None:
+            self.policy = dataclasses.replace(
+                self.policy, service_class=ServiceClass.LATENCY)
         ps = cfg.kv_page_tokens
         pages_per_seq = -(-max_len // ps)
         n_frames = pool_frames or max_batch * pages_per_seq

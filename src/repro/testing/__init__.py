@@ -1,0 +1,29 @@
+"""Deterministic fabric stress/soak harness.
+
+Everything the example-driven tests could not prove lives here: seeded
+multi-tenant traffic generation (:mod:`repro.testing.traffic`), invariant
+checkers (:mod:`repro.testing.invariants`) and the
+:func:`~repro.testing.soak.soak` entry point shared by the stress tests
+and ``benchmarks/arbiter_qos.py``.
+
+Determinism contract: two ``soak(seed)`` runs with the same seed produce
+**byte-identical** stats dicts (``json.dumps(..., sort_keys=True)``), and
+different seeds produce different traffic — guarded by
+``tests/test_stress.py``, so the event loop stays free of wall-clock and
+iteration-order nondeterminism.
+"""
+
+from repro.testing.invariants import (check_arbiter_consistency,
+                                      check_completion_conservation,
+                                      check_pinned_resident,
+                                      check_vmem_frame_conservation,
+                                      check_vmem_pins)
+from repro.testing.soak import SoakResult, soak
+from repro.testing.traffic import FaultInjection, TenantSpec
+
+__all__ = [
+    "FaultInjection", "SoakResult", "TenantSpec",
+    "check_arbiter_consistency", "check_completion_conservation",
+    "check_pinned_resident", "check_vmem_frame_conservation",
+    "check_vmem_pins", "soak",
+]

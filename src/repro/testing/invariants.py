@@ -1,0 +1,130 @@
+"""Invariant checkers for the stress harness (and the property tests).
+
+Each checker returns a list of human-readable violation strings — empty
+means the invariant holds.  They are pure observers: no checker mutates
+fabric, pager or page-table state, so they can run mid-soak as well as
+at the end.
+"""
+
+from __future__ import annotations
+
+from typing import Iterable, List
+
+from repro.core.arbiter import ArbiterStats
+
+NON_RESIDENT = -1
+
+
+# ---------------------------------------------------------------- fabric
+def check_completion_conservation(posted_ids: Iterable[int],
+                                  completed_ids: Iterable[int],
+                                  label: str = "") -> List[str]:
+    """Every posted work request completes exactly once (no lost or
+    duplicated completions) — the block-conservation invariant at WR
+    granularity."""
+    posted = list(posted_ids)
+    completed = list(completed_ids)
+    out = []
+    tag = f" [{label}]" if label else ""
+    if len(set(posted)) != len(posted):
+        out.append(f"duplicate wr_ids posted{tag}")
+    dupes = {w for w in completed if completed.count(w) > 1}
+    if dupes:
+        out.append(f"wr_ids completed more than once{tag}: {sorted(dupes)}")
+    lost = set(posted) - set(completed)
+    if lost:
+        out.append(f"posted but never completed{tag}: {sorted(lost)}")
+    phantom = set(completed) - set(posted)
+    if phantom:
+        out.append(f"completed but never posted{tag}: {sorted(phantom)}")
+    return out
+
+
+def check_pinned_resident(fabric) -> List[str]:
+    """Pinned pages are exempt from reclaim/THP: every pinned PTE must
+    still be RESIDENT, whatever churn the injection schedule applied."""
+    out = []
+    for node in fabric.nodes:
+        for pd, pt in node.page_tables.items():
+            for vpn, pte in pt.entries.items():
+                if pte.pinned and pte.state.name != "RESIDENT":
+                    out.append(
+                        f"node {node.node_id} pd={pd} vpn={vpn:#x}: pinned "
+                        f"page in state {pte.state.name}")
+    return out
+
+
+def check_arbiter_consistency(fabric) -> List[str]:
+    """Arbiter telemetry and end-state sanity:
+
+    * per-domain :class:`ArbiterStats` sum to the node total on every
+      additive field;
+    * DRR deficit counters sit inside the fairness bound;
+    * once the fabric drained, no block is queued, slotted, or counted
+      outstanding (nothing leaked a PLDMA slot).
+    """
+    out = []
+    for node in fabric.nodes:
+        arb = node.arbiter
+        for field in ArbiterStats.ADDITIVE:
+            total = getattr(arb.stats, field)
+            per_dom = sum(getattr(s, field)
+                          for s in arb.domain_stats.values())
+            if total != per_dom:
+                out.append(
+                    f"node {node.node_id}: arbiter stats field {field!r} "
+                    f"total {total} != per-domain sum {per_dom}")
+        out.extend(arb.deficit_bound_violations())
+        if fabric.loop.idle:
+            if arb.in_flight != 0:
+                out.append(f"node {node.node_id}: {arb.in_flight} blocks "
+                           f"still hold PLDMA slots after drain")
+            depth = arb.queue_depth()
+            if depth != 0:
+                out.append(f"node {node.node_id}: {depth} blocks still "
+                           f"queued after drain")
+            for pd in arb.domain_stats:
+                n = arb.outstanding(pd)
+                if n != 0:
+                    out.append(f"node {node.node_id} pd={pd}: {n} blocks "
+                               f"still outstanding after drain")
+    return out
+
+
+# ------------------------------------------------------------------ vmem
+def check_vmem_frame_conservation(pool) -> List[str]:
+    """No frame double-owned across the pool's address spaces, and the
+    pool's used-frame count equals the resident-page count."""
+    out = []
+    owner = {}
+    resident = 0
+    for sp in pool.spaces:
+        for vpage in range(sp.n_pages):
+            f = int(sp.page_table[vpage])
+            if f == NON_RESIDENT:
+                continue
+            resident += 1
+            if f in owner:
+                out.append(f"frame {f} owned by both {owner[f]} and "
+                           f"({sp.name!r}, {vpage})")
+            owner[f] = (sp.name, vpage)
+    if resident != pool.frames_used:
+        out.append(f"{resident} resident pages but pool reports "
+                   f"{pool.frames_used} frames used")
+    free = set(pool.free)
+    leaked = free & set(owner)
+    if leaked:
+        out.append(f"frames on the free list while mapped: {sorted(leaked)}")
+    return out
+
+
+def check_vmem_pins(pool) -> List[str]:
+    """A pinned page is never evicted: pinned implies resident."""
+    out = []
+    for sp in pool.spaces:
+        for vpage in range(sp.n_pages):
+            if sp.pinned[vpage] and \
+                    int(sp.page_table[vpage]) == NON_RESIDENT:
+                out.append(f"space {sp.name!r} vpage {vpage}: pinned "
+                           f"but not resident")
+    return out

@@ -1,0 +1,266 @@
+"""Seeded multi-tenant traffic generation over a verbs fabric.
+
+A :class:`TenantSpec` declares one protection domain's workload (service
+class, arrival process, sizes, buffer preparation — i.e. whether its
+destinations fault) and a :class:`FaultInjection` declares the background
+churn (khugepaged collapses, reclaim/swap-out) the thesis identifies as
+the reason even touched buffers keep faulting.  :class:`TenantRun` drives
+one tenant entirely in virtual time: posts, CQ drains and retries are
+event-loop callbacks, so a run is a pure function of ``(specs, seed)``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import random
+from typing import Optional
+
+from repro.api.completion import WorkQueueFull
+from repro.api.fabric import Fabric
+from repro.api.memory import BufferPrep
+from repro.api.policy import FaultPolicy
+from repro.core import addresses as A
+from repro.core.arbiter import ServiceClass
+from repro.core.resolver import Strategy
+
+SRC_BASE = 0x10_0000_0000
+DST_BASE = 0x20_0000_0000
+TENANT_STRIDE = 0x1_0000_0000       # 4 GB of VA per tenant
+REQUEST_STRIDE = 1 << 20            # 1 MB per request region
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantSpec:
+    """One tenant's workload over the fabric."""
+
+    pd: int
+    name: str = ""
+    service_class: Optional[ServiceClass] = None
+    strategy: Strategy = Strategy.TOUCH_AHEAD
+    arb_weight: int = 1
+    max_outstanding_blocks: Optional[int] = None
+    # arrival process
+    mode: str = "closed"            # "closed" (fixed in-flight) | "open"
+    inflight: int = 2               # closed-loop concurrency
+    arrival_period_us: float = 100.0   # open-loop inter-arrival (uniform
+    #                                    jitter of +-50% applied per post)
+    n_requests: int = 16
+    size_choices: tuple = (4096, 16384, 65536)
+    # buffer preparation: FAULTING destinations take the thesis' fault
+    # path on every cold page; fresh_dst=True makes EVERY request cold
+    src_prep: BufferPrep = BufferPrep.TOUCHED
+    dst_prep: BufferPrep = BufferPrep.FAULTING
+    fresh_dst: bool = True
+    src_node: int = 0
+    dst_node: int = 1
+
+    def label(self) -> str:
+        return self.name or f"pd{self.pd}"
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultInjection:
+    """Seeded background churn applied while traffic runs.
+
+    * ``khugepaged_period_us`` — every period, one khugepaged pass over a
+      random registered region (transiently invalidates its resident,
+      unpinned PTEs — §3.1.2.3);
+    * ``reclaim_period_us`` — every period, swap out up to
+      ``reclaim_pages`` LRU pages of a random domain (major faults on
+      next access).
+
+    A period of 0 disables that churn source.
+    """
+
+    khugepaged_period_us: float = 0.0
+    reclaim_period_us: float = 0.0
+    reclaim_pages: int = 8
+
+
+class TenantRun:
+    """Drives one TenantSpec through a fabric, all in virtual time."""
+
+    def __init__(self, fabric: Fabric, spec: TenantSpec,
+                 rng: random.Random, poll_period_us: float = 200.0,
+                 cq_depth: int = 256):
+        self.fabric = fabric
+        self.spec = spec
+        self.rng = rng
+        self.poll_period_us = poll_period_us
+        self.domain = fabric.open_domain(
+            spec.pd,
+            policy=FaultPolicy(
+                strategy=spec.strategy,
+                service_class=spec.service_class,
+                arb_weight=spec.arb_weight,
+                max_outstanding_blocks=spec.max_outstanding_blocks))
+        self.cq = fabric.create_cq(depth=cq_depth)
+        self._mrs: dict[int, tuple] = {}      # request idx -> (src, dst)
+        self.regions: list[tuple[int, int, int, int]] = []  # node, pd, vpn, n
+        self.posted_ids: list[int] = []
+        self.completions: list = []
+        self.latencies: list[float] = []
+        self.rejected = 0                     # quota/CQ backpressure events
+        self.next_req = 0
+        self._pump_scheduled = False
+
+    # ----------------------------------------------------------- lifecycle
+    @property
+    def done(self) -> bool:
+        return len(self.completions) >= self.spec.n_requests
+
+    @property
+    def in_flight(self) -> int:
+        return len(self.posted_ids) - len(self.completions)
+
+    def start(self) -> None:
+        spec = self.spec
+        if spec.mode == "closed":
+            for _ in range(min(spec.inflight, spec.n_requests)):
+                self._try_post()        # rejects retried by the pump
+        elif spec.mode == "open":
+            t = 0.0
+            for _ in range(spec.n_requests):
+                jitter = self.rng.uniform(0.5, 1.5)
+                t += spec.arrival_period_us * jitter
+                self.fabric.loop.schedule(t, self._try_post, True)
+        else:
+            raise ValueError(f"unknown arrival mode {spec.mode!r}")
+        self._schedule_pump()
+
+    # -------------------------------------------------------------- posting
+    def _regions_for(self, i: int):
+        spec = self.spec
+        if i in self._mrs:
+            return self._mrs[i]
+        size = self.rng.choice(spec.size_choices)
+        src_va = SRC_BASE + spec.pd * TENANT_STRIDE + i * REQUEST_STRIDE
+        # fresh_dst: a brand-new (cold, faulting) landing region per
+        # request; otherwise all requests share one warm region
+        slot = i if spec.fresh_dst else 0
+        dst_va = DST_BASE + spec.pd * TENANT_STRIDE + slot * REQUEST_STRIDE
+        src = self.domain.register_memory(spec.src_node, src_va, size,
+                                          prep=spec.src_prep)
+        dst = (self._mrs[0][1] if not spec.fresh_dst and self._mrs
+               else self.domain.register_memory(spec.dst_node, dst_va,
+                                                size, prep=spec.dst_prep))
+        self._mrs[i] = (src, dst)
+        self.regions.append((spec.src_node, spec.pd, src_va >> 12,
+                             A.num_pages(src_va, size)))
+        self.regions.append((spec.dst_node, spec.pd, dst_va >> 12,
+                             A.num_pages(dst_va, size)))
+        return self._mrs[i]
+
+    def _try_post(self, reschedule_on_reject: bool = False) -> None:
+        if self.next_req >= self.spec.n_requests:
+            return
+        i = self.next_req
+        src, dst = self._regions_for(i)
+        try:
+            wr = self.domain.post_write(
+                src, dst, cq=self.cq,
+                nbytes=min(src.length, dst.length))
+        except WorkQueueFull:
+            # quota / CQ backpressure; open-loop arrivals retry
+            # themselves, closed-loop posts are retried by the pump
+            self.rejected += 1
+            if reschedule_on_reject:
+                self.fabric.loop.schedule(self.poll_period_us,
+                                          self._try_post, True)
+            return
+        self.next_req += 1
+        self.posted_ids.append(wr.wr_id)
+
+    # -------------------------------------------------------------- pumping
+    def _schedule_pump(self) -> None:
+        if self._pump_scheduled or self.done:
+            return
+        self._pump_scheduled = True
+        self.fabric.loop.schedule(self.poll_period_us, self._pump)
+
+    def _pump(self) -> None:
+        self._pump_scheduled = False
+        for wc in self.cq.poll(max_entries=self.cq.depth):
+            self.completions.append(wc)
+            self.latencies.append(wc.latency_us)
+        if self.spec.mode == "closed":
+            while (not self.done
+                   and self.next_req < self.spec.n_requests
+                   and self.in_flight < self.spec.inflight):
+                before = self.next_req
+                self._try_post()
+                if self.next_req == before:     # backpressured: retry later
+                    break
+        self._schedule_pump()
+
+    # ------------------------------------------------------------ reporting
+    def stats_dict(self) -> dict:
+        """Deterministic, JSON-able per-tenant summary."""
+        lat = sorted(self.latencies)
+
+        def pct(p: float) -> float:
+            if not lat:
+                return 0.0
+            return lat[min(len(lat) - 1, int(p * len(lat)))]
+
+        agg = {"timeouts": 0, "rapf_retransmits": 0, "retransmissions": 0,
+               "src_faults": 0, "dst_faults": 0}
+        for wc in self.completions:
+            for k in agg:
+                agg[k] += getattr(wc.stats, k)
+        return {
+            "tenant": self.spec.label(),
+            "pd": self.spec.pd,
+            "service_class": (self.spec.service_class.value
+                              if self.spec.service_class else "bulk"),
+            "posted": len(self.posted_ids),
+            "completed": len(self.completions),
+            "rejected": self.rejected,
+            "latency_mean_us": (round(sum(lat) / len(lat), 6)
+                                if lat else 0.0),
+            "latency_p50_us": round(pct(0.50), 6),
+            "latency_p99_us": round(pct(0.99), 6),
+            "latency_max_us": round(lat[-1], 6) if lat else 0.0,
+            **agg,
+        }
+
+
+def schedule_injection(fabric: Fabric, runs: list[TenantRun],
+                       inj: FaultInjection, rng: random.Random) -> None:
+    """Install the churn schedule as self-rescheduling loop events."""
+
+    def all_done() -> bool:
+        return all(r.done for r in runs)
+
+    def regions():
+        out = []
+        for r in runs:
+            out.extend(r.regions)
+        return out
+
+    def khugepaged_tick() -> None:
+        if all_done():
+            return
+        regs = regions()
+        if regs:
+            node_idx, pd, vpn, n = rng.choice(regs)
+            pt = fabric.nodes[node_idx].page_tables.get(pd)
+            if pt is not None:
+                pt.khugepaged_collapse(vpn + rng.randrange(max(1, n)))
+        fabric.loop.schedule(inj.khugepaged_period_us, khugepaged_tick)
+
+    def reclaim_tick() -> None:
+        if all_done():
+            return
+        regs = regions()
+        if regs:
+            node_idx, pd, _, _ = rng.choice(regs)
+            pt = fabric.nodes[node_idx].page_tables.get(pd)
+            if pt is not None:
+                pt.reclaim(inj.reclaim_pages)
+        fabric.loop.schedule(inj.reclaim_period_us, reclaim_tick)
+
+    if inj.khugepaged_period_us > 0:
+        fabric.loop.schedule(inj.khugepaged_period_us, khugepaged_tick)
+    if inj.reclaim_period_us > 0:
+        fabric.loop.schedule(inj.reclaim_period_us, reclaim_tick)

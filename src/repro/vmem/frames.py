@@ -71,11 +71,14 @@ class FramePool:
         raise NotImplementedError(f"{type(self).__name__} holds no payload")
 
     # ------------------------------------------------------------ transport
-    def page_in(self, space, vpage: int, n_pages: int) -> PageInReceipt:
+    def page_in(self, space, vpage: int, n_pages: int,
+                prefetch: bool = False) -> PageInReceipt:
         """Transport cost of paging ``n_pages`` starting at ``vpage``.
 
         Local pools are free (the resolver strategy already accounts the
         fault-handling time); the remote backend posts a verbs read here.
+        ``prefetch`` marks predictive (non-demand) page-ins, which
+        fabric-backed pools schedule as BULK instead of LATENCY traffic.
         """
         return PageInReceipt()
 

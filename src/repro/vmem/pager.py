@@ -263,14 +263,18 @@ class Pager:
             us = c.gup_us(max(1, min(len(paged) * osp, cap)))
             us += min(len(streamed) * osp, cap) * c.gup_per_page_us
             self._acct(space, faults=1, simulated_us=us)
-        # transport: contiguous runs, one backend page-in per run
-        for start, n in _runs(sorted(paged + streamed)):
-            r = self.pool.page_in(space, start, n)
-            self._acct(space, simulated_us=r.us,
-                       remote_reads=r.remote_reads,
-                       rapf_retransmits=r.rapf_retransmits,
-                       remote_dst_faults=r.dst_faults,
-                       remote_bytes_in=r.bytes_in)
+        # transport: contiguous runs, one backend page-in per run.  Demand
+        # pages (the faulted block) go first as LATENCY traffic; predictive
+        # stream warm-ups ride behind them as BULK (fabric-backed pools
+        # thread the class into the DMA arbiter via post_read).
+        for pages, is_prefetch in ((paged, False), (streamed, True)):
+            for start, n in _runs(sorted(pages)):
+                r = self.pool.page_in(space, start, n, prefetch=is_prefetch)
+                self._acct(space, simulated_us=r.us,
+                           remote_reads=r.remote_reads,
+                           rapf_retransmits=r.rapf_retransmits,
+                           remote_dst_faults=r.dst_faults,
+                           remote_bytes_in=r.bytes_in)
         return len(paged) + len(streamed)
 
     def fault_in(self, space: AddressSpace, vpage: int,

