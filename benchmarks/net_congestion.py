@@ -1,0 +1,217 @@
+"""Topology-aware interconnect benchmark: control-packet distance fixes
+and shared-link congestion under a fault storm.
+
+Two claim families (ISSUE-4 acceptance criteria):
+
+**A. Control-packet distance accounting.**  The seed charged ACK, NACK,
+RAPF and read-request packets exactly one ``hop_latency_us`` regardless
+of ``FabricConfig.hops`` — undercharging every fault-handling round trip
+on any fabric deeper than one hop.  Post-fix, a clean write's RTT grows
+by 2 legs (data + ACK) per extra hop and a faulted block's recovery by 4
+legs (stream + RAPF + retransmit + ACK on the critical path), so the
+*minimum safe retransmission timeout* — the smallest R5 timeout that
+never fires before the RAPF arrives — shifts up with distance, exactly
+the timeout/RAPF trade-off regime of the thesis (Fig 4.2/4.6).  The
+seed's ALL_TO_ALL ``hops=1`` timing is preserved **bit-for-bit**
+(golden-value checks recorded on the pre-PR tree).
+
+**B. Shared-link contention on a torus.**  On a 2x4 torus a fault-storm
+BULK tenant (0 -> 2, routed 0 -> 1 -> 2) shares link 0 -> 1 with a clean
+LATENCY serving tenant (0 -> 1).  The storm's blocks and retransmits
+measurably congest the shared link (queueing, utilization), while
+LATENCY-class traffic — which overtakes BULK backlogs on every hop —
+stays within 2x its uncongested baseline.
+"""
+
+from __future__ import annotations
+
+from benchmarks.common import check, emit
+from repro.api import (BufferPrep, Fabric, FabricConfig, ServiceClass)
+from repro.core.costmodel import (DEFAULT_COST_MODEL,
+                                  cost_model_with_timeout)
+from repro.testing import TenantSpec, soak
+
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+HOP = DEFAULT_COST_MODEL.hop_latency_us
+SEED = 2026
+
+# ---- golden values recorded on the pre-PR tree (ALL_TO_ALL, hops=1) ----
+GOLDEN_FAULT_65536 = (260.8803999999993, 4, 0, 13)   # latency, rapf, to, df
+GOLDEN_CLEAN_16B = 4.002800000000001
+GOLDEN_VECTOR = [7.2668, 44.9804, 260.8804000000001, 38.16960000000148,
+                 56.41879999999969, 17.09719999999993]
+GOLDEN_VECTOR_CASES = [(4096, BufferPrep.TOUCHED), (16384, BufferPrep.FAULTING),
+                       (65536, BufferPrep.FAULTING), (4096, BufferPrep.FAULTING),
+                       (65536, BufferPrep.TOUCHED), (16384, BufferPrep.TOUCHED)]
+
+
+def one_write(fab: Fabric, nbytes: int, dst_prep: BufferPrep,
+              slot: int = 0, src_node: int = 0, dst_node: int = 1):
+    dom = fab.domain(1) or fab.open_domain(1)
+    src = dom.register_memory(src_node, SRC + slot * 0x100000, nbytes,
+                              prep=BufferPrep.TOUCHED)
+    dst = dom.register_memory(dst_node, DST + slot * 0x100000, nbytes,
+                              prep=dst_prep)
+    cq = fab.create_cq()
+    return dom.post_write(src, dst, cq=cq).result(deadline_us=1e7)
+
+
+def fault_write(hops: int, nbytes: int = 65536, timeout_us=None):
+    cost = (cost_model_with_timeout(timeout_us)
+            if timeout_us is not None else None)
+    fab = Fabric.build(FabricConfig(n_nodes=2, hops=hops, cost=cost))
+    return one_write(fab, nbytes, BufferPrep.FAULTING)
+
+
+def clean_write(hops: int, nbytes: int = 16):
+    fab = Fabric.build(FabricConfig(n_nodes=2, hops=hops))
+    return one_write(fab, nbytes, BufferPrep.TOUCHED)
+
+
+def min_safe_timeout(hops: int, lo: float = 10.0, hi: float = 120.0,
+                     step: float = 0.5) -> float:
+    """Smallest R5 timeout (us) for which a one-block destination fault
+    recovers by RAPF alone — no spurious timeout retransmission."""
+    t = lo
+    while t <= hi:
+        wc = fault_write(hops, nbytes=4096, timeout_us=t)
+        if wc.stats.timeouts == 0:
+            return t
+        t += step
+    return float("inf")
+
+
+def torus_tenants(with_storm: bool):
+    serving = TenantSpec(pd=1, name="serving",
+                         service_class=ServiceClass.LATENCY,
+                         mode="closed", inflight=2, n_requests=24,
+                         size_choices=(4096,), src_node=0, dst_node=1,
+                         src_prep=BufferPrep.TOUCHED,
+                         dst_prep=BufferPrep.TOUCHED)
+    if not with_storm:
+        return [serving]
+    # every 64 KB request lands in a fresh FAULTING region two routed
+    # hops away: all four blocks fault, NACK, RAPF and retransmit over
+    # the shared 0 -> 1 link
+    storm = TenantSpec(pd=2, name="bulk-storm",
+                       service_class=ServiceClass.BULK,
+                       mode="closed", inflight=8, n_requests=16,
+                       size_choices=(65536,), src_node=0, dst_node=2,
+                       dst_prep=BufferPrep.FAULTING, fresh_dst=True)
+    return [serving, storm]
+
+
+TORUS = dict(n_nodes=8, topology="torus_2d", dims=(2, 4))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+
+    # ---------------- A. control-packet distance accounting -------------
+    base_clean = clean_write(1)
+    far_clean = clean_write(8)
+    emit("net/clean_rtt_16B_hops1", base_clean.latency_us,
+         "thesis 4us zero-fault RTT")
+    emit("net/clean_rtt_16B_hops8", far_clean.latency_us,
+         "data + ACK both charged 8 hops")
+    clean_slope = (far_clean.latency_us - base_clean.latency_us) / 7
+    check("net: clean-write RTT grows 2 x hop_latency per hop "
+          "(ACK charged the routed distance, not one hop)",
+          abs(clean_slope - 2 * HOP) < 1e-9,
+          f"slope {clean_slope:.4f}us/hop vs {2 * HOP:.4f}")
+
+    base_fault = fault_write(1, nbytes=4096)
+    far_fault = fault_write(8, nbytes=4096)
+    emit("net/fault_rtt_4K_hops1", base_fault.latency_us,
+         f"rapf={base_fault.stats.rapf_retransmits}")
+    emit("net/fault_rtt_4K_hops8", far_fault.latency_us,
+         "stream+RAPF+retransmit+ACK all charged 8 hops")
+    fault_slope = (far_fault.latency_us - base_fault.latency_us) / 7
+    check("net: faulted-block recovery grows 4 x hop_latency per hop "
+          "(RAPF/retransmit/ACK legs charged per routed hop)",
+          abs(fault_slope - 4 * HOP) < 1e-9,
+          f"slope {fault_slope:.4f}us/hop vs {4 * HOP:.4f}")
+
+    to1 = min_safe_timeout(1)
+    to16 = min_safe_timeout(16)
+    emit("net/min_safe_timeout_hops1", to1, "smallest RAPF-only R5 timeout")
+    emit("net/min_safe_timeout_hops16", to16,
+         "distance-correct control path shifts the trade-off")
+    # the timeout arms at dispatch; the legs before the RAPF arrives are
+    # the data stream out (h) and the RAPF back (h) — the NACK overlaps
+    # the driver's FIFO drain — so the safe floor shifts by 2 legs/hop
+    check("net: minimum safe retransmission timeout shifts up with routed "
+          "distance (thesis Fig 4.2/4.6 trade-off regime)",
+          to16 >= to1 + 2 * 15 * HOP - 0.5,
+          f"{to1:.1f}us @ 1 hop vs {to16:.1f}us @ 16 hops")
+
+    # ---------------- back-compat: bit-for-bit at ALL_TO_ALL hops=1 -----
+    wc = fault_write(1)
+    got = (wc.latency_us, wc.stats.rapf_retransmits, wc.stats.timeouts,
+           wc.stats.dst_faults)
+    emit("net/backcompat_fault_65536", wc.latency_us,
+         "golden pre-PR scenario")
+    check("net: ALL_TO_ALL hops=1 reproduces the pre-PR faulting-block "
+          "latency bit-for-bit", got == GOLDEN_FAULT_65536,
+          f"{got} vs {GOLDEN_FAULT_65536}")
+    check("net: ALL_TO_ALL hops=1 reproduces the pre-PR clean 16B RTT "
+          "bit-for-bit", clean_write(1).latency_us == GOLDEN_CLEAN_16B,
+          f"{clean_write(1).latency_us} vs {GOLDEN_CLEAN_16B}")
+    fab = Fabric.build(FabricConfig(n_nodes=2))
+    vec = [one_write(fab, n, p, slot=i).latency_us
+           for i, (n, p) in enumerate(GOLDEN_VECTOR_CASES)]
+    check("net: pre-PR mixed-size block-latency vector reproduced "
+          "bit-for-bit", vec == GOLDEN_VECTOR, f"{vec}")
+
+    # ---------------- B. torus shared-link congestion -------------------
+    baseline = soak(SEED, tenants=torus_tenants(False),
+                    config=FabricConfig(**TORUS))
+    congested = soak(SEED, tenants=torus_tenants(True),
+                     config=FabricConfig(**TORUS))
+    congested2 = soak(SEED, tenants=torus_tenants(True),
+                      config=FabricConfig(**TORUS))
+    serv_base = baseline.stats["tenants"][0]
+    serv_cong = congested.stats["tenants"][0]
+    storm = congested.stats["tenants"][1]
+    shared_base = baseline.stats["net"]["links"]["0->1"]
+    shared_cong = congested.stats["net"]["links"]["0->1"]
+
+    emit("net/torus_serving_baseline_mean", serv_base["latency_mean_us"],
+         "LATENCY tenant alone on the 2x4 torus")
+    emit("net/torus_serving_congested_mean", serv_cong["latency_mean_us"],
+         f"vs fault storm routed over the shared 0->1 link")
+    emit("net/torus_shared_link_queue_us", shared_cong["queue_us"],
+         f"queued={shared_cong['queued']} "
+         f"overtakes={shared_cong['latency_overtakes']}")
+    emit("net/torus_storm_mean", storm["latency_mean_us"],
+         f"rapf={storm['rapf_retransmits']} timeouts={storm['timeouts']}")
+
+    check("net: the fault storm measurably congests the shared torus "
+          "link (wire queueing appears where the baseline had none)",
+          shared_cong["queue_us"] > 10.0 * max(shared_base["queue_us"], 1.0)
+          and shared_cong["data_bytes"] > 4 * shared_base["data_bytes"],
+          f"queue {shared_base['queue_us']:.1f} -> "
+          f"{shared_cong['queue_us']:.1f}us, bytes "
+          f"{shared_base['data_bytes']} -> {shared_cong['data_bytes']}")
+    check("net: storm retransmits traverse the shared link (RAPF "
+          "recovery active)", storm["rapf_retransmits"] > 0,
+          f"rapf={storm['rapf_retransmits']}")
+    check("net: LATENCY-class traffic overtakes BULK backlogs on the "
+          "congested hop", shared_cong["latency_overtakes"] > 0,
+          f"overtakes={shared_cong['latency_overtakes']}")
+    check("net: LATENCY fault-resolution RTT stays within 2x its "
+          "uncongested baseline on the congested torus",
+          serv_cong["latency_mean_us"] <= 2.0 * serv_base["latency_mean_us"],
+          f"{serv_cong['latency_mean_us']:.1f}us vs "
+          f"2 x {serv_base['latency_mean_us']:.1f}us")
+    check("net: torus soak invariants hold (conservation, arbiter, pins)",
+          baseline.ok and congested.ok,
+          "; ".join((baseline.violations + congested.violations)[:3]))
+    check("net: torus congestion run is seed-deterministic "
+          "(byte-identical stats)",
+          congested.json() == congested2.json(), "")
+
+
+if __name__ == "__main__":
+    main()

@@ -13,8 +13,9 @@ import argparse
 import sys
 
 from benchmarks import (arbiter_qos, fig_2_3_firehose, fig_4_1, fig_4_2,
-                        fig_4_3, fig_4_4, fig_4_6, fig_4_7, table_4_1,
-                        thp_study, timeout_sweep, verbs_async, vmem_remote)
+                        fig_4_3, fig_4_4, fig_4_6, fig_4_7, net_congestion,
+                        table_4_1, thp_study, timeout_sweep, verbs_async,
+                        vmem_remote)
 from benchmarks.common import summary, write_json
 
 MODULES = (
@@ -32,6 +33,8 @@ MODULES = (
      verbs_async),
     ("vmem over the fabric (remote KV/tensor page-ins)", vmem_remote),
     ("DMA-arbiter QoS (multi-tenant fault isolation)", arbiter_qos),
+    ("Interconnect topology (routed control packets, torus congestion)",
+     net_congestion),
 )
 
 

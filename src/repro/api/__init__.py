@@ -62,6 +62,26 @@ Per-tenant admission control      ``FaultPolicy.max_outstanding_blocks``
                                   ``DomainQuotaExceeded`` when a domain
                                   is at its outstanding-block quota;
                                   telemetry in ``ArbiterStats``.
+ExaNeSt multi-hop fabric          ``repro.net`` — ``TopologyKind``
+(QFDB quads over HSS links,       (``FabricConfig(topology=, dims=)``):
+§ experimental setup)             ALL_TO_ALL (n_nodes=4 = one fully
+                                  connected QFDB quad) / RING / MESH_2D
+                                  / TORUS_2D (quads tiled) / DRAGONFLY
+                                  (quad-like cliques + global links);
+                                  ``hops=`` stays as the ALL_TO_ALL
+                                  back-compat distance alias.
+Routed RAPF/NACK/ACK delivery     deterministic dimension-order
+(control packets cross the real   ``Router``; every control packet
+interconnect, §3.2.3.3)           charges — and on shared-link
+                                  topologies reserves — wire time per
+                                  routed hop (the seed charged one
+                                  ``hop_latency_us`` flat).
+Shared-link contention /          per-direction ``Link`` resources with
+congested fabric QoS (beyond      LATENCY-over-BULK wire arbitration
+paper: multi-tenant fabrics)      (``FabricConfig.link_qos``); per-link
+                                  utilization/queueing telemetry rolls
+                                  up into ``Fabric.net_stats()`` →
+                                  ``FabricStats``.
 ===============================  ========================================
 
 Quick tour::
@@ -92,12 +112,17 @@ from repro.api.fabric import Fabric, ProtectionDomain
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import DEFAULT_POLICY, FaultPolicy
 from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
+from repro.core.node import FabricError
 from repro.core.resolver import Strategy
+from repro.net import (FabricStats, LinkStats, Router, Topology,
+                       TopologyError, TopologyKind, build_topology)
 
 __all__ = [
     "ArbiterStats", "BufferPrep", "CompletionQueue", "CQStats",
     "DEFAULT_POLICY", "DMAArbiter", "DomainQuotaExceeded", "Fabric",
-    "FabricConfig", "FaultPolicy", "MemoryRegion", "PrepCost",
-    "ProtectionDomain", "RegionError", "ServiceClass", "Strategy",
-    "WCStatus", "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
+    "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
+    "LinkStats", "MemoryRegion", "PrepCost", "ProtectionDomain",
+    "RegionError", "Router", "ServiceClass", "Strategy", "Topology",
+    "TopologyError", "TopologyKind", "WCStatus", "WorkCompletion",
+    "WorkQueueFull", "WorkRequest", "WROpcode", "build_topology",
 ]

@@ -1,21 +1,23 @@
 """Declarative fabric configuration (replaces the ``RDMAEngine`` kwargs blob).
 
 A :class:`FabricConfig` fully describes a simulated ExaNeSt fabric:
-topology (nodes, hops), hardware behaviour (HUPCF, fault model, frame
-pool), the calibrated cost model, and fault-handling policy at three
-scopes — fabric-wide default, per node, and (via
+interconnect topology (nodes, :class:`~repro.net.topology.TopologyKind`,
+dims), hardware behaviour (HUPCF, fault model, frame pool), the
+calibrated cost model, and fault-handling policy at three scopes —
+fabric-wide default, per node, and (via
 :meth:`~repro.api.fabric.Fabric.open_domain`) per protection domain.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import Optional
+from typing import Optional, Union
 
 from repro.core.addresses import BLOCK_SIZE
 from repro.core.arbiter import DEFAULT_PLDMA_SLOTS
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.fault import FaultModel
+from repro.net.topology import TopologyKind, coerce_kind
 from repro.api.policy import FaultPolicy
 
 
@@ -23,8 +25,22 @@ from repro.api.policy import FaultPolicy
 class FabricConfig:
     """Everything needed to build a :class:`~repro.api.fabric.Fabric`.
 
-    * ``n_nodes`` / ``hops`` — topology: full-duplex links between every
-      pair of nodes, ``hops`` network hops apart (loopback is one hop).
+    * ``n_nodes`` / ``topology`` / ``dims`` — the interconnect: a
+      :class:`~repro.net.topology.TopologyKind` (or its string name:
+      ``"all_to_all"``, ``"ring"``, ``"mesh_2d"``, ``"torus_2d"``,
+      ``"dragonfly"``) plus its dimensions (rows × cols for grids,
+      n_groups × group_size for dragonfly).  Routed topologies share
+      physical links: traffic between different node pairs contends for
+      wire time on every common hop of its deterministic dimension-order
+      route (:mod:`repro.net`).
+    * ``hops`` — **back-compat alias for ALL_TO_ALL only**: the seed's
+      flat distance scalar, scaling every dedicated direct link to
+      ``hops`` network hops (loopback stays one hop).  Rejected on
+      routed topologies, where distance comes from the route.
+    * ``link_qos`` — extend the DMA arbiter's service classes to the
+      wire: LATENCY-class packets overtake BULK backlogs on congested
+      links.  ``None`` (default) = on for routed topologies, off for
+      ALL_TO_ALL (preserving the seed's dedicated-link timing exactly).
     * ``cost`` — the calibrated :class:`~repro.core.costmodel.CostModel`
       (``None`` = thesis defaults).
     * ``hupcf`` — SMMU Hit-Under-Previous-Context-Fault: translate
@@ -44,6 +60,9 @@ class FabricConfig:
 
     n_nodes: int = 2
     hops: int = 1
+    topology: Union[TopologyKind, str] = TopologyKind.ALL_TO_ALL
+    dims: Optional[tuple] = None
+    link_qos: Optional[bool] = None
     cost: Optional[CostModel] = None
     hupcf: bool = True
     fault_model: FaultModel = FaultModel.TERMINATE
@@ -59,6 +78,16 @@ class FabricConfig:
         if self.pldma_slots < 1:
             raise ValueError(
                 f"pldma_slots must be >= 1, got {self.pldma_slots}")
+        self.topology = coerce_kind(self.topology)
+        if self.hops < 1:
+            raise ValueError(f"hops must be >= 1, got {self.hops}")
+        if self.hops != 1 and self.topology is not TopologyKind.ALL_TO_ALL:
+            raise ValueError(
+                f"hops={self.hops} is the ALL_TO_ALL back-compat alias; "
+                f"on topology={self.topology.value} distance comes from "
+                f"the routed hop path — drop hops= or choose dims")
+        if self.dims is not None:
+            self.dims = tuple(self.dims)
         if self.cost is None:
             self.cost = DEFAULT_COST_MODEL
 

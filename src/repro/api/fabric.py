@@ -20,9 +20,10 @@ from typing import Optional
 
 from repro.core import addresses as A
 from repro.core.arbiter import ArbiterStats, ServiceClass
-from repro.core.node import Link, Node, Transfer
+from repro.core.node import FabricError, Node, Transfer
 from repro.core.pagetable import FrameAllocator
 from repro.core.simulator import EventLoop
+from repro.net.interconnect import FabricStats, Interconnect
 from repro.api.completion import (CompletionQueue, DomainQuotaExceeded,
                                   WCStatus, WorkCompletion, WorkRequest,
                                   WROpcode)
@@ -191,12 +192,17 @@ class Fabric:
                         pldma_slots=config.pldma_slots,
                         arb_quantum_bytes=config.arb_quantum_bytes)
             self.nodes.append(node)
-        # full-duplex links between every pair (and loopback), one hop each
+        # the routed interconnect: per-direction links along the physical
+        # adjacencies of config.topology (ALL_TO_ALL keeps the seed's
+        # dedicated pair links, with hops= as its distance alias), shared
+        # by every transmit path — data pages and control packets alike
+        self.interconnect = Interconnect(
+            self.loop, self.cost, config.topology, n_nodes=config.n_nodes,
+            dims=config.dims, qos=config.link_qos,
+            legacy_hops=config.hops)
         for a in self.nodes:
+            a.interconnect = self.interconnect
             for b in self.nodes:
-                a.links_to[b.node_id] = Link(
-                    self.loop, self.cost,
-                    hops=config.hops if a is not b else 1)
                 a.peer[b.node_id] = b
         self.domains: dict[int, ProtectionDomain] = {}
         self._tid = 0
@@ -245,7 +251,7 @@ class Fabric:
             clash = [q for q in self.nodes[i].page_tables
                      if q % A.NUM_CONTEXT_BANKS == bank]
             if clash:
-                raise ValueError(
+                raise FabricError(
                     f"pd={pd} maps to SMMU context bank {bank}, already "
                     f"claimed by domain pd={clash[0]} on node {i} "
                     f"(bank = pd % {A.NUM_CONTEXT_BANKS})")
@@ -280,6 +286,27 @@ class Fabric:
                   max_outstanding: Optional[int] = None) -> CompletionQueue:
         return CompletionQueue(self, depth=depth,
                                max_outstanding=max_outstanding)
+
+    # ------------------------------------------------------------- network
+    def net_stats(self) -> FabricStats:
+        """Interconnect telemetry: per-link utilization/queueing rollup."""
+        return self.interconnect.stats()
+
+    def link_stats(self, src_node: int, dst_node: int):
+        """One directed physical link's :class:`~repro.net.link.LinkStats`.
+
+        Raises :class:`FabricError` for non-adjacent pairs — on routed
+        topologies only physical neighbours (and loopbacks) have links;
+        use :meth:`net_stats` for the fabric-wide rollup.
+        """
+        try:
+            return self.interconnect.link(src_node, dst_node).stats
+        except KeyError:
+            adj = self.interconnect.topology.neighbors(src_node)
+            raise FabricError(
+                f"no physical link {src_node}->{dst_node} on topology "
+                f"{self.interconnect.topology.kind.value}; node "
+                f"{src_node}'s neighbours are {adj}") from None
 
     # ------------------------------------------------------------ progress
     @property
@@ -319,10 +346,12 @@ class Fabric:
         # quota now (not after the request-packet delay), so a burst of
         # posted reads is backpressured like a burst of writes
         self.nodes[target_node].arbiter.note_submit(t)
-        # request packet: initiator -> target mailbox
-        req_delay = (self.cost.pckzer_to_mbox_us
-                     + (self.cost.hop_latency_us + self.cost.packet_wire_us(16)
-                        if target_node != local_node else 0.0))
+        # request packet: initiator -> target mailbox over the routed
+        # interconnect (the seed charged one hop however far the target)
+        req_delay = self.cost.pckzer_to_mbox_us
+        if target_node != local_node:
+            req_delay += (self.nodes[local_node]
+                          .path_to(target_node).send_ctrl(16))
         self.loop.schedule(req_delay, self.nodes[target_node].r5.submit, t)
         return t
 

@@ -51,12 +51,23 @@ if TYPE_CHECKING:                                    # pragma: no cover
 
 
 class ServiceClass(enum.Enum):
-    """Arbiter service class of a work request / protection domain."""
+    """Arbiter service class of a work request / protection domain.
+
+    The class governs two arbitration points: the PLDMA slot scheduler
+    below, and — on shared-link topologies (:mod:`repro.net`) — the wire
+    itself, where :attr:`wire_priority` traffic overtakes BULK backlogs
+    on every congested hop of its route.
+    """
     LATENCY = "latency"      # serving-style small WRs: strict priority
     BULK = "bulk"            # training/offload streams: bandwidth-shared
 
     def __lt__(self, other: "ServiceClass") -> bool:   # stable sort keys
         return self.value < other.value
+
+    @property
+    def wire_priority(self) -> bool:
+        """Does this class jump BULK queues on contended links?"""
+        return self is ServiceClass.LATENCY
 
 
 #: scheduling order: LATENCY queues are always served before BULK queues

@@ -29,7 +29,7 @@ from __future__ import annotations
 import dataclasses
 import enum
 from collections import deque
-from typing import Callable, Optional
+from typing import TYPE_CHECKING, Callable, Optional
 
 from repro.core import addresses as A
 from repro.core.addresses import (NetlinkMessage, RAPFMessage, iova_field_pack,
@@ -41,6 +41,17 @@ from repro.core.fault_fifo import FaultFIFO, FIFOEntry
 from repro.core.pagetable import FrameAllocator, PageTable
 from repro.core.resolver import Resolver, Strategy
 from repro.core.simulator import EventLoop, Resource
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    # type-only: importing repro.net at runtime here would make the two
+    # packages circularly dependent (net is the lower layer)
+    from repro.net.interconnect import Interconnect
+    from repro.net.link import Path
+
+
+class FabricError(ValueError):
+    """A fabric-level configuration or wiring error (e.g. two live
+    protection domains colliding on one SMMU context bank)."""
 
 
 class BlockState(enum.Enum):
@@ -131,30 +142,6 @@ class Transfer:
         return self.done_blocks == len(self.blocks)
 
 
-class Link:
-    """One direction of a (possibly loopback) network path."""
-
-    def __init__(self, loop: EventLoop, cost: CostModel, hops: int = 1):
-        self.res = Resource(loop, "link")
-        self.cost = cost
-        self.hops = hops
-        self.last_user: Optional[int] = None   # block identity for interleave
-
-    def stream_page(self, nbytes: int, block_key: int) -> tuple[float, bool]:
-        """Reserve wire time for one page worth of packets.
-
-        Returns (arrival_delay_from_now, interleaved_with_other_stream).
-        """
-        interleaved = (self.res.would_queue()
-                       and self.last_user is not None
-                       and self.last_user != block_key)
-        self.last_user = block_key
-        wire = self.cost.packet_wire_us(nbytes)
-        _, end = self.res.reserve(wire)
-        delay = (end - self.res.loop.now) + self.hops * self.cost.hop_latency_us
-        return delay, interleaved
-
-
 class Node:
     def __init__(self, loop: EventLoop, cost: CostModel, node_id: int,
                  resolver: Resolver, allocator: Optional[FrameAllocator] = None,
@@ -181,8 +168,9 @@ class Node:
         # driver last-2-transactions dedup cache (§ Fig 4.2 discussion)
         self._handled: deque[tuple[int, int, int, int]] = deque(maxlen=2)
         self._rcv_tasklet_pending = False
-        # engine wiring
-        self.links_to: dict[int, Link] = {}
+        # engine wiring: the routed interconnect every transmit path —
+        # data pages AND control packets — travels through
+        self.interconnect: Optional[Interconnect] = None
         self.peer: dict[int, "Node"] = {}
         # demo/bench hook: blocks by (pd, src vpn) for source-fault attribution
         self.netlink_log: list[NetlinkMessage] = []
@@ -196,7 +184,21 @@ class Node:
                       ) -> PageTable:
         """Create protection domain ``pd``, optionally with its own fault
         resolver (per-domain :class:`~repro.api.policy.FaultPolicy`) and
-        DMA-arbiter parameters (service class, DRR weight, block quota)."""
+        DMA-arbiter parameters (service class, DRR weight, block quota).
+
+        Raises :class:`FabricError` if the domain's SMMU context bank
+        (``pd % NUM_CONTEXT_BANKS``) is already live for another pd:
+        attaching the new page table would silently overwrite the bank
+        and corrupt the other tenant's translations.
+        """
+        bank = pd % A.NUM_CONTEXT_BANKS
+        owner = self.pd_for_bank(bank)
+        if owner is not None and owner != pd:
+            raise FabricError(
+                f"pd={pd} maps to SMMU context bank {bank}, already live "
+                f"for domain pd={owner} on node {self.node_id} "
+                f"(bank = pd % {A.NUM_CONTEXT_BANKS}); only "
+                f"{A.NUM_CONTEXT_BANKS} concurrent domains fit one node")
         pt = PageTable(pd, self.allocator, pin_limit_bytes=pin_limit_bytes)
         self.page_tables[pd] = pt
         if resolver is not None:
@@ -204,7 +206,7 @@ class Node:
         self.arbiter.register_domain(
             pd, service_class=service_class, weight=arb_weight,
             max_outstanding_blocks=max_outstanding_blocks)
-        self.smmu.attach_domain(pd % A.NUM_CONTEXT_BANKS, pt, hupcf=self.hupcf,
+        self.smmu.attach_domain(bank, pt, hupcf=self.hupcf,
                                 fault_model=self.fault_model)
         return pt
 
@@ -229,6 +231,11 @@ class Node:
             if pd % A.NUM_CONTEXT_BANKS == bank_index:
                 return pd
         return None
+
+    # ------------------------------------------------------------- network
+    def path_to(self, node_id: int) -> Path:
+        """The routed interconnect path from this node to ``node_id``."""
+        return self.interconnect.path(self.node_id, node_id)
 
     # =================================================== SMMU driver (CPU0)
     def _on_smmu_interrupt(self, bank_index: int) -> None:
@@ -364,7 +371,11 @@ class Node:
             return
         delay = self.cost.pckzer_to_mbox_us
         if target is not self:
-            delay += self.cost.hop_latency_us + self.cost.packet_wire_us(8)
+            # the RAPF retransmission request rides the interconnect to
+            # the initiator's mailbox: charge (and, on shared-link
+            # topologies, reserve) the full routed distance — the seed
+            # charged one hop_latency_us however far the initiator was
+            delay += self.path_to(src_node_id).send_ctrl(8)
         self.loop.schedule(delay, target.r5.on_mailbox, msg, stats)
 
     # ============================================================== receive
@@ -395,7 +406,11 @@ class Node:
         if res.disposition is Disposition.OK:
             block.delivered.add(page_idx)
             if len(block.delivered) == block.n_pages:
-                delay = self.cost.ack_us + self.cost.hop_latency_us
+                # the ACK travels back over the interconnect: charge the
+                # routed distance (the seed charged one hop, flat)
+                delay = (self.cost.ack_us
+                         + self.path_to(block.transfer.src_node.node_id)
+                               .send_ctrl(0))
                 self.loop.schedule(delay, block.transfer.src_node.r5.on_ack,
                                    block, round_id)
             return
@@ -419,7 +434,10 @@ class Node:
                 self.fifo.break_dedup()
         if block.nacked_round != round_id:
             block.nacked_round = round_id
-            delay = self.cost.nack_us + self.cost.hop_latency_us
+            # the PF-NACK (AXI slave error) propagates back per routed hop
+            delay = (self.cost.nack_us
+                     + self.path_to(block.transfer.src_node.node_id)
+                           .send_ctrl(0))
             self.loop.schedule(delay, block.transfer.src_node.r5.on_nack,
                                block, round_id)
         # the SMMU interrupt fired inside translate() if this was the first
@@ -482,7 +500,11 @@ class R5Scheduler:
         src_pages = pages_spanned(block.src_va, block.nbytes)
         # PLDMA reads/packetizes pages in order; a source fault stops the
         # stream (pages already read remain in flight).
-        link = node.links_to[transfer.dst_node.node_id]
+        path = node.path_to(transfer.dst_node.node_id)
+        # the DMA arbiter's service class extends to link arbitration:
+        # LATENCY blocks overtake BULK backlogs on congested shared hops
+        latency_class = (block.service_class is not None
+                         and block.service_class.wire_priority)
         for i, vpn in enumerate(src_pages):
             res = node.smmu.translate(bank, vpn, Access.READ)
             if res.disposition is not Disposition.OK:
@@ -495,7 +517,8 @@ class R5Scheduler:
             pg_start = max(block.src_va, vpn << 12)
             pg_end = min(block.src_va + block.nbytes, (vpn + 1) << 12)
             nbytes = pg_end - pg_start
-            delay, interleaved = link.stream_page(nbytes, id(block))
+            delay, interleaved = path.stream_page(
+                nbytes, id(block), latency_class=latency_class)
             self.loop.schedule(delay, transfer.dst_node.recv_page, block, i,
                                block.round_id, interleaved, nbytes)
         self._arm_timeout(block)

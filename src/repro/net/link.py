@@ -1,0 +1,265 @@
+"""Per-direction link resources and routed paths.
+
+A :class:`Link` is ONE direction of one physical adjacency: a serially
+occupied wire with microsecond-resolution reservation cursors, per-link
+telemetry (:class:`LinkStats`) and the PLDMA interleave heuristic the
+Fig 4.2 dampening model relies on.  A :class:`Path` is the routed chain
+of links between two nodes; everything a node transmits — a page of
+packets, an ACK, a NACK, a RAPF mailbox message — goes through a path,
+so cross-tenant traffic meeting on a shared link genuinely contends.
+
+**Service classes on the wire.**  With ``qos`` enabled (the default on
+routed topologies) each link arbitrates like the DMA arbiter's class
+scheme (:class:`~repro.core.arbiter.ServiceClass`): LATENCY-class
+reservations queue only behind other LATENCY traffic and *overtake* the
+BULK backlog (which is pushed back by the stolen wire time), so
+fault-resolution control packets stay bounded on hops congested by a
+BULK retransmit storm.  With ``qos`` off (legacy ALL_TO_ALL) a link is a
+single FIFO cursor — bit-for-bit the seed's behavior — and control
+packets charge wire + routed distance without booking the link.
+
+**Interleave hygiene** (ISSUE-4 satellite): ``last_user`` — the stream
+identity used to detect two blocks interleaving their packets on one
+wire — is cleared whenever the link has fully drained, so a stream that
+finished long ago can never flag a later, lone stream as interleaved and
+inflate its FIFO dedup-break pushes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import TYPE_CHECKING, Optional
+
+if TYPE_CHECKING:                                    # pragma: no cover
+    # type-only: repro.net is the bottom layer — importing repro.core at
+    # runtime would pull core/__init__ -> engine -> api -> net back in
+    from repro.core.costmodel import CostModel
+    from repro.core.simulator import EventLoop
+
+
+@dataclasses.dataclass
+class LinkStats:
+    """One direction's wire telemetry (all additive except the maxima)."""
+
+    data_packets: int = 0        # page-stream reservations carried
+    ctrl_packets: int = 0        # ACK/NACK/RAPF/read-request messages
+    data_bytes: int = 0          # payload bytes serialized
+    busy_us: float = 0.0         # wire time booked
+    queued: int = 0              # reservations that had to wait
+    queue_us: float = 0.0        # total waiting time
+    max_queue_us: float = 0.0    # worst single wait (not additive)
+    latency_overtakes: int = 0   # LATENCY reservations that jumped BULK
+    interleaves: int = 0         # streams flagged interleaved here
+
+    ADDITIVE = ("data_packets", "ctrl_packets", "data_bytes", "busy_us",
+                "queued", "queue_us", "latency_overtakes", "interleaves")
+
+    def as_dict(self) -> dict:
+        return {
+            "data_packets": self.data_packets,
+            "ctrl_packets": self.ctrl_packets,
+            "data_bytes": self.data_bytes,
+            "busy_us": round(self.busy_us, 6),
+            "queued": self.queued,
+            "queue_us": round(self.queue_us, 6),
+            "max_queue_us": round(self.max_queue_us, 6),
+            "latency_overtakes": self.latency_overtakes,
+            "interleaves": self.interleaves,
+        }
+
+
+class Link:
+    """One direction of one physical adjacency (or a node's loopback).
+
+    ``hops`` scales the propagation latency charged per traversal — 1 for
+    a real physical link; the legacy ALL_TO_ALL topology keeps the seed's
+    ``FabricConfig.hops`` alias by building direct links with
+    ``hops=config.hops``.
+    """
+
+    __slots__ = ("loop", "cost", "src", "dst", "hops", "qos",
+                 "busy_until", "lat_busy_until", "last_user", "stats")
+
+    def __init__(self, loop: EventLoop, cost: CostModel, src: int, dst: int,
+                 hops: int = 1, qos: bool = False):
+        self.loop = loop
+        self.cost = cost
+        self.src = src
+        self.dst = dst
+        self.hops = hops
+        self.qos = qos
+        self.busy_until = 0.0        # BULK (and, qos off, only) cursor
+        self.lat_busy_until = 0.0    # LATENCY-class cursor (qos only)
+        self.last_user: Optional[int] = None  # stream id for interleave
+        self.stats = LinkStats()
+
+    # ---------------------------------------------------------------- state
+    @property
+    def name(self) -> str:
+        return f"{self.src}->{self.dst}"
+
+    @property
+    def latency_us(self) -> float:
+        """Propagation latency charged per traversal of this link."""
+        return self.hops * self.cost.hop_latency_us
+
+    @property
+    def drained(self) -> bool:
+        """No reservation extends past *now*: the wire is idle."""
+        now = self.loop.now
+        return self.busy_until <= now and self.lat_busy_until <= now
+
+    def utilization(self, elapsed_us: float) -> float:
+        return self.stats.busy_us / elapsed_us if elapsed_us > 0 else 0.0
+
+    # ------------------------------------------------------------- reserve
+    def reserve(self, wire_us: float, earliest: float,
+                latency_class: bool = False) -> tuple[float, float]:
+        """Book ``wire_us`` of serialization no earlier than ``earliest``.
+
+        Returns ``(start, end)``.  LATENCY-class reservations (qos links
+        only) queue behind LATENCY traffic alone and push the BULK
+        backlog back by the wire time they steal.
+        """
+        if self.drained:
+            # the wire went idle since the previous reservation: whatever
+            # streamed last finished long ago and must not be mistaken
+            # for a live interleaving stream by the next data packet
+            self.last_user = None
+        floor = max(self.loop.now, earliest)
+        if latency_class and self.qos:
+            start = max(floor, self.lat_busy_until)
+            end = start + wire_us
+            self.lat_busy_until = end
+            if self.busy_until > start:          # jumped a BULK backlog
+                if wire_us > 0:
+                    self.stats.latency_overtakes += 1
+                self.busy_until += wire_us       # stolen wire time
+            else:
+                self.busy_until = end
+        else:
+            start = max(floor, self.busy_until,
+                        self.lat_busy_until if self.qos else 0.0)
+            end = start + wire_us
+            self.busy_until = end
+        waited = start - floor
+        if waited > 0:
+            self.stats.queued += 1
+            self.stats.queue_us += waited
+            self.stats.max_queue_us = max(self.stats.max_queue_us, waited)
+        self.stats.busy_us += wire_us
+        return start, end
+
+    # ----------------------------------------------------------- data path
+    def stream_page(self, nbytes: int, block_key: int, earliest: float,
+                    latency_class: bool = False) -> tuple[float, bool]:
+        """Serialize one page worth of packets of stream ``block_key``.
+
+        Returns ``(end_time, interleaved_with_another_live_stream)``.
+        """
+        # a stream that finished long ago cannot interleave with us: the
+        # drained check (mirrored inside reserve for control bookings)
+        # forgets it before the comparison
+        interleaved = (not self.drained
+                       and self.last_user is not None
+                       and self.last_user != block_key)
+        _, end = self.reserve(self.cost.packet_wire_us(nbytes), earliest,
+                              latency_class=latency_class)
+        self.last_user = block_key
+        self.stats.data_packets += 1
+        self.stats.data_bytes += nbytes
+        if interleaved:
+            self.stats.interleaves += 1
+        return end, interleaved
+
+    # -------------------------------------------------------- control path
+    def send_ctrl(self, nbytes: int, earliest: float,
+                  latency_class: bool = True) -> float:
+        """Carry one control message (ACK/NACK/RAPF/request) across.
+
+        Returns the time the message clears this link's wire.  On qos
+        links control messages book wire time (and so contend — with
+        LATENCY priority by default); on legacy links they charge
+        serialization + distance without booking, preserving the seed's
+        dedicated-link timing bit-for-bit.
+        """
+        wire_us = self.cost.packet_wire_us(nbytes) if nbytes > 0 else 0.0
+        self.stats.ctrl_packets += 1
+        if self.qos:
+            _, end = self.reserve(wire_us, earliest,
+                                  latency_class=latency_class)
+            return end
+        return max(self.loop.now, earliest) + wire_us
+
+
+class Path:
+    """The routed chain of directed links between two nodes.
+
+    Reservations chain: a packet cannot start serializing on hop *i+1*
+    before it cleared hop *i* (virtual cut-through at page granularity),
+    so congestion on any shared link along the route delays the packet
+    and everything queued behind it.
+    """
+
+    __slots__ = ("loop", "cost", "route", "links", "n_hops", "ledger")
+
+    def __init__(self, loop: EventLoop, cost: CostModel,
+                 route: tuple[int, ...], links: tuple[Link, ...],
+                 ledger: Optional[dict] = None):
+        self.loop = loop
+        self.cost = cost
+        self.route = route
+        self.links = links
+        #: propagation distance: the sum of per-link hop charges (equals
+        #: len(links) on physical topologies; the legacy ALL_TO_ALL alias
+        #: scales its single direct link instead)
+        self.n_hops = sum(l.hops for l in links)
+        self.ledger = ledger            # (src, dst) -> [data, ctrl] counts
+
+    @property
+    def src(self) -> int:
+        return self.route[0]
+
+    @property
+    def dst(self) -> int:
+        return self.route[-1]
+
+    @property
+    def latency_us(self) -> float:
+        return self.n_hops * self.cost.hop_latency_us
+
+    def stream_page(self, nbytes: int, block_key: int,
+                    latency_class: bool = False) -> tuple[float, bool]:
+        """Reserve wire time on every link along the route for one page.
+
+        Returns ``(arrival_delay_from_now, interleaved)`` — the same
+        contract the seed's single :class:`Link` offered the PLDMA model.
+        """
+        t = self.loop.now
+        interleaved = False
+        for link in self.links:
+            t, il = link.stream_page(nbytes, block_key, earliest=t,
+                                     latency_class=latency_class)
+            interleaved = interleaved or il
+        if self.ledger is not None:
+            rec = self.ledger.setdefault((self.src, self.dst), [0, 0])
+            rec[0] += 1
+        return (t - self.loop.now) + self.latency_us, interleaved
+
+    def send_ctrl(self, nbytes: int = 0,
+                  latency_class: bool = True) -> float:
+        """Carry one control message along the route.
+
+        Returns the delay from *now* until delivery: per-link wire /
+        queueing plus the full routed propagation distance — the ISSUE-4
+        control-packet distance-accounting fix (the seed charged a single
+        ``hop_latency_us`` however far apart the nodes were).
+        """
+        t = self.loop.now
+        for link in self.links:
+            t = link.send_ctrl(nbytes, earliest=t,
+                               latency_class=latency_class)
+        if self.ledger is not None:
+            rec = self.ledger.setdefault((self.src, self.dst), [0, 0])
+            rec[1] += 1
+        return (t - self.loop.now) + self.latency_us

@@ -15,7 +15,9 @@ iteration-order nondeterminism.
 
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_completion_conservation,
+                                      check_link_conservation,
                                       check_pinned_resident,
+                                      check_route_sanity,
                                       check_vmem_frame_conservation,
                                       check_vmem_pins)
 from repro.testing.soak import SoakResult, soak
@@ -24,6 +26,7 @@ from repro.testing.traffic import FaultInjection, TenantSpec
 __all__ = [
     "FaultInjection", "SoakResult", "TenantSpec",
     "check_arbiter_consistency", "check_completion_conservation",
-    "check_pinned_resident", "check_vmem_frame_conservation",
+    "check_link_conservation", "check_pinned_resident",
+    "check_route_sanity", "check_vmem_frame_conservation",
     "check_vmem_pins", "soak",
 ]

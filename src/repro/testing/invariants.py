@@ -54,6 +54,36 @@ def check_pinned_resident(fabric) -> List[str]:
     return out
 
 
+def check_link_conservation(fabric) -> List[str]:
+    """Per-link packet conservation over the routed interconnect: every
+    directed link carried exactly the data/ctrl packets of the routes
+    that cross it (ledger recomputed from the deterministic router) —
+    nothing lost, duplicated, or smuggled around the topology."""
+    return fabric.interconnect.conservation_violations()
+
+
+def check_route_sanity(fabric) -> List[str]:
+    """Static route invariants for every (src, dst) pair: consecutive
+    hops are physical adjacencies, no node repeats, and hop counts are
+    symmetric (|route(a, b)| == |route(b, a)| for minimal routing)."""
+    out = []
+    ic = fabric.interconnect
+    n = ic.topology.n_nodes
+    for a in range(n):
+        for b in range(n):
+            try:
+                fwd = ic.router.route(a, b)      # router verifies adjacency
+                rev = ic.router.route(b, a)
+            except Exception as e:               # RoutingError et al.
+                out.append(f"route {a}->{b}: {e}")
+                continue
+            if len(fwd) != len(rev):
+                out.append(
+                    f"asymmetric hop count: |{a}->{b}|={len(fwd) - 1} "
+                    f"but |{b}->{a}|={len(rev) - 1}")
+    return out
+
+
 def check_arbiter_consistency(fabric) -> List[str]:
     """Arbiter telemetry and end-state sanity:
 

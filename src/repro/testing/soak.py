@@ -21,6 +21,7 @@ from repro.api.memory import BufferPrep
 from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_completion_conservation,
+                                      check_link_conservation,
                                       check_pinned_resident)
 from repro.testing.traffic import (FaultInjection, TenantRun, TenantSpec,
                                    schedule_injection)
@@ -110,12 +111,14 @@ def soak(seed: int,
             label=r.spec.label())
     violations += check_pinned_resident(fabric)
     violations += check_arbiter_consistency(fabric)
+    violations += check_link_conservation(fabric)
 
     # ---- deterministic report -------------------------------------------
     stats = {
         "seed": seed,
         "tenants": [r.stats_dict() for r in runs],
         "arbiter": _arbiter_dict(fabric),
+        "net": fabric.net_stats().as_dict(),
         "makespan_us": round(fabric.now, 6),
         "events": fabric.loop.events_processed,
         "violations": sorted(violations),

@@ -100,10 +100,22 @@ class RemoteFramePool(FramePool):
                              dst_faults=wc.stats.dst_faults,
                              bytes_in=nbytes)
 
+    # telemetry ----------------------------------------------------------
+    @property
+    def fabric(self) -> Fabric:
+        return self.domain.fabric
+
+    def net_stats(self):
+        """Interconnect telemetry of the backing fabric — on routed
+        topologies a page-in's route shares links with other tenants, so
+        remote paging latency reflects real path contention."""
+        return self.fabric.net_stats()
+
     # convenience builder ------------------------------------------------
     @classmethod
     def build(cls, *, n_frames: int, page_elems: int, n_pages: int,
-              fabric: Optional[Fabric] = None, pd: int = 1,
+              fabric: Optional[Fabric] = None,
+              config: Optional[FabricConfig] = None, pd: int = 1,
               policy: Optional[FaultPolicy] = None,
               local: Optional[FramePool] = None,
               page_bytes: int = A.PAGE_SIZE,
@@ -111,9 +123,22 @@ class RemoteFramePool(FramePool):
               local_base: int = 0x10_0000_0000,
               remote_base: int = 0x20_0000_0000,
               cq_depth: int = 256, dtype=jnp.float32) -> "RemoteFramePool":
-        """Wire a two-node fabric scenario: remote backing (pre-touched),
-        faulting local landing buffer, one CQ, one protection domain."""
-        fabric = fabric or Fabric.build(FabricConfig(n_nodes=2))
+        """Wire a fabric scenario: remote backing (pre-touched), faulting
+        local landing buffer, one CQ, one protection domain.
+
+        ``config`` selects the fabric when none is passed — e.g. a
+        routed ``FabricConfig(n_nodes=8, topology="torus_2d")`` whose
+        multi-hop paths make page-ins contend with other traffic; the
+        default is the seed's two-node ALL_TO_ALL.
+        """
+        if fabric is not None and config is not None:
+            raise ValueError("pass either fabric= or config=, not both")
+        fabric = fabric or Fabric.build(config or FabricConfig(n_nodes=2))
+        n_nodes = len(fabric.nodes)
+        if not (0 <= local_node < n_nodes and 0 <= remote_node < n_nodes):
+            raise ValueError(
+                f"local_node={local_node} / remote_node={remote_node} "
+                f"outside the fabric's {n_nodes} nodes")
         domain = fabric.domain(pd) or fabric.open_domain(pd, policy=policy)
         size = n_pages * page_bytes
         remote_mr = domain.register_memory(remote_node, remote_base, size,

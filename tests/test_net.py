@@ -1,0 +1,400 @@
+"""Tests for the topology-aware interconnect (``repro.net``): topologies,
+deterministic routing, per-link contention/QoS, the control-packet
+distance-accounting bugfixes, context-bank collision errors, and the
+topology soak invariants (determinism, per-link packet conservation).
+"""
+
+import pytest
+
+from repro.api import (BufferPrep, Fabric, FabricConfig, FabricError,
+                       ServiceClass, TopologyError, TopologyKind)
+from repro.core import addresses as A
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.core.simulator import EventLoop
+from repro.net import (Interconnect, Link, Router, build_topology)
+from repro.testing import (TenantSpec, check_link_conservation,
+                           check_route_sanity, soak)
+
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+HOP = DEFAULT_COST_MODEL.hop_latency_us
+
+
+def build(n_nodes=2, **kw):
+    return Fabric.build(FabricConfig(n_nodes=n_nodes, **kw))
+
+
+def write_rtt(fab, nbytes=16, dst_prep=BufferPrep.TOUCHED,
+              src_node=0, dst_node=1):
+    dom = fab.domain(1) or fab.open_domain(1)
+    i = getattr(fab, "_rtt_calls", 0)
+    fab._rtt_calls = i + 1
+    src = dom.register_memory(src_node, SRC + i * 0x100000, nbytes,
+                              prep=BufferPrep.TOUCHED)
+    dst = dom.register_memory(dst_node, DST + i * 0x100000, nbytes,
+                              prep=dst_prep)
+    cq = fab.create_cq()
+    wc = dom.post_write(src, dst, cq=cq).result(deadline_us=1e7)
+    return wc
+
+
+# ---------------------------------------------------------------- topology
+class TestTopology:
+    def test_all_to_all_adjacency(self):
+        t = build_topology("all_to_all", 4)
+        assert t.neighbors(2) == (0, 1, 3)
+
+    def test_ring_adjacency(self):
+        t = build_topology(TopologyKind.RING, 5)
+        assert t.neighbors(0) == (1, 4)
+        assert t.neighbors(3) == (2, 4)
+
+    def test_mesh_vs_torus_edges(self):
+        mesh = build_topology("mesh_2d", 6, (2, 3))
+        torus = build_topology("torus_2d", 6, (2, 3))
+        # corner node 0 = (0, 0): mesh has right + down only
+        assert mesh.neighbors(0) == (1, 3)
+        # torus adds the wraparound column neighbor (0, 2) = node 2
+        assert torus.neighbors(0) == (1, 2, 3)
+
+    def test_torus_2x2_quad(self):
+        """A 2x2 torus: both axis partners adjacent (wrap collapses onto
+        the direct link), the diagonal two hops away."""
+        t = build_topology("torus_2d", 4, (2, 2))
+        assert t.neighbors(0) == (1, 2)
+        assert t.neighbors(3) == (1, 2)
+        assert Router(t).route(0, 3) == (0, 1, 3)
+
+    def test_dragonfly_intra_group_complete(self):
+        t = build_topology("dragonfly", 6, (3, 2))
+        g0 = {0, 1}
+        for n in g0:
+            assert (g0 - {n}) <= set(t.neighbors(n))
+
+    def test_dragonfly_one_global_link_per_group_pair(self):
+        t = build_topology("dragonfly", 8, (4, 2))
+        for a in range(4):
+            for b in range(4):
+                if a != b:
+                    gw = t.gateway(a, b)
+                    assert t.gateway(b, a) in t.neighbors(gw)
+
+    def test_bad_dims_rejected(self):
+        with pytest.raises(TopologyError):
+            build_topology("torus_2d", 6, (2, 2))
+        with pytest.raises(TopologyError):
+            build_topology("ring", 4, (5,))
+        with pytest.raises(TopologyError):
+            build_topology("nonsense", 4)
+
+    def test_config_rejects_hops_on_routed_topology(self):
+        """hops= is the ALL_TO_ALL back-compat alias only."""
+        with pytest.raises(ValueError, match="back-compat alias"):
+            FabricConfig(n_nodes=4, topology="ring", hops=3)
+        FabricConfig(n_nodes=4, topology="ring")           # fine
+        FabricConfig(n_nodes=4, hops=3)                    # fine
+
+
+# ------------------------------------------------------------------ router
+class TestRouter:
+    @pytest.mark.parametrize("kind,n,dims", [
+        ("all_to_all", 5, None), ("ring", 7, None), ("mesh_2d", 6, (2, 3)),
+        ("torus_2d", 9, (3, 3)), ("dragonfly", 8, (4, 2)),
+    ])
+    def test_routes_valid_and_symmetric(self, kind, n, dims):
+        fab = build(n, topology=kind, dims=dims)
+        assert check_route_sanity(fab) == []
+
+    def test_route_deterministic(self):
+        r1 = Router(build_topology("torus_2d", 16, (4, 4)))
+        r2 = Router(build_topology("torus_2d", 16, (4, 4)))
+        for s in range(16):
+            for d in range(16):
+                assert r1.route(s, d) == r2.route(s, d)
+                assert r1.route(s, d) is r1.route(s, d)    # memoized
+
+    def test_dimension_order_column_first(self):
+        r = Router(build_topology("mesh_2d", 9, (3, 3)))
+        # 0=(0,0) -> 8=(2,2): columns first, then rows
+        assert r.route(0, 8) == (0, 1, 2, 5, 8)
+
+    def test_torus_takes_shorter_wrap(self):
+        r = Router(build_topology("torus_2d", 16, (4, 4)))
+        # 0=(0,0) -> 3=(0,3): wrapping left is 1 hop, walking right is 3
+        assert r.route(0, 3) == (0, 3)
+        assert r.route(0, 12) == (0, 12)                  # row wrap too
+
+    def test_ring_shorter_direction(self):
+        r = Router(build_topology("ring", 6, None))
+        assert r.route(0, 2) == (0, 1, 2)
+        assert r.route(0, 4) == (0, 5, 4)
+        assert r.route(0, 3) == (0, 1, 2, 3)              # tie -> forward
+
+    def test_loopback_route(self):
+        r = Router(build_topology("ring", 4, None))
+        assert r.route(2, 2) == (2, 2)
+
+
+# ----------------------------------------- control-packet distance (bugfix)
+class TestControlDistanceAccounting:
+    """ISSUE-4 regression: ACK/NACK/RAPF/read-request must charge the full
+    routed distance.  The seed charged one ``hop_latency_us`` flat, so a
+    clean write's RTT grew only 1 x hop_latency per extra hop (the data
+    one-way) instead of 2 x (data + ACK)."""
+
+    def test_clean_write_control_rtt_matches_data_rtt_per_hop(self):
+        base = write_rtt(build(hops=1)).latency_us
+        for h in (2, 4, 8):
+            rtt = write_rtt(build(hops=h)).latency_us
+            # data one-way + ACK return, both charged h hops
+            assert rtt - base == pytest.approx(2 * (h - 1) * HOP), \
+                f"hops={h}: control path not charged per routed hop"
+
+    def test_fault_resolution_charges_every_leg_per_hop(self):
+        """One cold 4 KB block: the critical path crosses the wire four
+        times — stream (h) + RAPF (h) + retransmit (h) + ACK (h); the
+        NACK (also charged h now) overlaps the driver's FIFO drain, so
+        the RTT grows by 4 legs per extra hop.  Pre-fix it grew by 2:
+        only the data legs were charged per hop."""
+        base = write_rtt(build(hops=1), nbytes=4096,
+                         dst_prep=BufferPrep.FAULTING)
+        assert base.stats.rapf_retransmits == 1
+        for h in (2, 8):
+            wc = write_rtt(build(hops=h), nbytes=4096,
+                           dst_prep=BufferPrep.FAULTING)
+            assert wc.stats.rapf_retransmits == 1
+            assert wc.latency_us - base.latency_us == pytest.approx(
+                4 * (h - 1) * HOP)
+
+    def test_remote_read_request_charged_per_hop(self):
+        def read_rtt(h):
+            fab = build(hops=h)
+            dom = fab.open_domain(1)
+            tgt = dom.register_memory(1, SRC, 4096, prep=BufferPrep.TOUCHED)
+            loc = dom.register_memory(0, DST, 4096, prep=BufferPrep.TOUCHED)
+            cq = fab.create_cq()
+            return dom.post_read(tgt, loc, cq=cq).result(
+                deadline_us=1e6).latency_us
+        base = read_rtt(1)
+        # request leg + data leg + ACK leg all charged per routed hop
+        assert read_rtt(4) - base == pytest.approx(3 * 3 * HOP)
+
+    def test_routed_topology_charges_path_length(self):
+        """On a ring, 0->2 is two physical hops: a clean write's RTT must
+        exceed the adjacent 0->1 RTT by one extra hop each way (data +
+        ACK) plus the data packet's serialization on the second link
+        (store-and-forward per routed hop)."""
+        near = write_rtt(build(4, topology="ring"), dst_node=1).latency_us
+        far = write_rtt(build(4, topology="ring"), dst_node=2).latency_us
+        extra_wire = DEFAULT_COST_MODEL.packet_wire_us(16)
+        assert far - near == pytest.approx(2 * HOP + extra_wire)
+
+
+# ------------------------------------------------- context-bank collisions
+class TestContextBankCollision:
+    def test_open_domain_collision_is_fabric_error(self):
+        fab = build()
+        fab.open_domain(1)
+        with pytest.raises(FabricError, match="context bank"):
+            fab.open_domain(1 + A.NUM_CONTEXT_BANKS)
+
+    def test_seventeenth_domain_collides(self):
+        """All 16 banks live -> the 17th concurrent domain must raise a
+        clear FabricError instead of silently corrupting bank 0's page
+        table (the seed's pd % NUM_CONTEXT_BANKS aliasing)."""
+        fab = build()
+        for pd in range(A.NUM_CONTEXT_BANKS):
+            fab.open_domain(pd)
+        with pytest.raises(FabricError, match="context bank"):
+            fab.open_domain(A.NUM_CONTEXT_BANKS)      # pd 16 -> bank 0
+
+    def test_node_level_create_domain_guards_too(self):
+        """The guard lives in Node.create_domain itself, so direct core
+        users (not just Fabric.open_domain) cannot alias a live bank —
+        including the reverse direction (low pd onto a high pd's bank)."""
+        fab = build()
+        node = fab.nodes[0]
+        node.create_domain(3 + A.NUM_CONTEXT_BANKS)
+        with pytest.raises(FabricError, match="context bank"):
+            node.create_domain(3)
+        # the failed create left no partial state behind
+        assert 3 not in node.page_tables
+        node.create_domain(4)                         # other banks fine
+
+    def test_fabric_error_is_value_error(self):
+        """Back-compat: callers catching ValueError keep working."""
+        assert issubclass(FabricError, ValueError)
+
+
+# ------------------------------------------------------- link-level checks
+class TestLinkBehavior:
+    def make_link(self, qos=False):
+        loop = EventLoop()
+        return loop, Link(loop, DEFAULT_COST_MODEL, 0, 1, qos=qos)
+
+    def test_last_user_cleared_when_link_drains(self):
+        """ISSUE-4 satellite: a stream that finished long ago must not
+        flag a later stream as interleaved.  Pre-fix, ``last_user``
+        persisted across idle periods; if anything re-busied the wire
+        (e.g. a control booking) the next stream was falsely flagged."""
+        loop, link = self.make_link(qos=True)
+        end, il = link.stream_page(4096, block_key=111, earliest=0.0)
+        assert not il and link.last_user == 111
+        # drain the wire, then advance time well past the drain point
+        loop.schedule(end + 50.0, lambda: None)
+        loop.run()
+        # a control booking re-busies the idle wire (and, post-fix,
+        # forgets the finished stream)
+        link.send_ctrl(8, earliest=loop.now)
+        assert link.last_user is None
+        # the next stream starts while the ctrl booking still occupies
+        # the wire: pre-fix it was flagged interleaved with stream 111
+        _, il2 = link.stream_page(4096, block_key=222, earliest=loop.now)
+        assert il2 is False
+        assert link.stats.interleaves == 0
+
+    def test_live_streams_still_flag_interleave(self):
+        loop, link = self.make_link()
+        link.stream_page(4096, block_key=1, earliest=0.0)
+        _, il = link.stream_page(4096, block_key=2, earliest=0.0)
+        assert il is True
+        assert link.stats.interleaves == 1
+
+    def test_back_to_back_idle_transfers_no_dedup_break_inflation(self):
+        """End-to-end: two faulting transfers separated by idle time must
+        not interleave on the wire — no inflated FIFO dedup-break
+        pushes, and identical fault footprints for both transfers."""
+        fab = build()
+        wc1 = write_rtt(fab, nbytes=4096, dst_prep=BufferPrep.FAULTING)
+        wc2 = write_rtt(fab, nbytes=4096, dst_prep=BufferPrep.FAULTING)
+        link = fab.interconnect.link(0, 1)
+        assert link.stats.interleaves == 0
+        assert (wc1.stats.fifo_entries_handled
+                == wc2.stats.fifo_entries_handled)
+        assert (wc1.stats.fifo_entries_skipped
+                == wc2.stats.fifo_entries_skipped)
+
+    def test_latency_class_overtakes_bulk_backlog(self):
+        loop, link = self.make_link(qos=True)
+        # build a BULK backlog
+        for _ in range(8):
+            link.reserve(10.0, earliest=0.0, latency_class=False)
+        assert link.busy_until == pytest.approx(80.0)
+        # a LATENCY packet starts NOW, not after the backlog...
+        start, end = link.reserve(1.0, earliest=0.0, latency_class=True)
+        assert start == pytest.approx(0.0)
+        assert link.stats.latency_overtakes == 1
+        # ...and the backlog is pushed back by the stolen wire time
+        assert link.busy_until == pytest.approx(81.0)
+
+    def test_without_qos_all_classes_share_one_fifo(self):
+        loop, link = self.make_link(qos=False)
+        link.reserve(10.0, earliest=0.0, latency_class=False)
+        start, _ = link.reserve(1.0, earliest=0.0, latency_class=True)
+        assert start == pytest.approx(10.0)
+        assert link.stats.latency_overtakes == 0
+
+
+# ------------------------------------------------------- topology invariants
+def crossing_tenants(n_requests=6):
+    """Two tenants whose routes share links on small routed topologies."""
+    return [
+        TenantSpec(pd=1, name="serving", service_class=ServiceClass.LATENCY,
+                   mode="closed", inflight=2, n_requests=n_requests,
+                   size_choices=(4096,), src_node=0, dst_node=1,
+                   dst_prep=BufferPrep.TOUCHED),
+        TenantSpec(pd=2, name="storm", service_class=ServiceClass.BULK,
+                   mode="closed", inflight=4, n_requests=n_requests,
+                   size_choices=(65536,), src_node=0, dst_node=2,
+                   dst_prep=BufferPrep.FAULTING, fresh_dst=True),
+    ]
+
+
+class TestTopologySoaks:
+    @pytest.mark.parametrize("topo,n,dims", [
+        ("ring", 4, None),
+        ("torus_2d", 8, (2, 4)),
+    ])
+    def test_same_seed_byte_identical(self, topo, n, dims):
+        cfg = dict(n_nodes=n, topology=topo, dims=dims)
+        a = soak(7, tenants=crossing_tenants(),
+                 config=FabricConfig(**cfg))
+        b = soak(7, tenants=crossing_tenants(),
+                 config=FabricConfig(**cfg))
+        assert a.violations == []
+        assert a.json() == b.json()
+        assert a.json().encode() == b.json().encode()
+
+    @pytest.mark.parametrize("topo,n,dims", [
+        ("ring", 4, None),
+        ("torus_2d", 8, (2, 4)),
+        ("dragonfly", 6, (3, 2)),
+    ])
+    def test_per_link_packet_conservation(self, topo, n, dims):
+        r = soak(11, tenants=crossing_tenants(),
+                 config=FabricConfig(n_nodes=n, topology=topo, dims=dims))
+        assert r.violations == []
+        assert check_link_conservation(r.fabric) == []
+        assert check_route_sanity(r.fabric) == []
+        # multi-hop routes genuinely traversed shared links
+        net = r.stats["net"]["totals"]
+        assert net["data_packets"] > 0 and net["ctrl_packets"] > 0
+
+    def test_net_stats_in_soak_report(self):
+        r = soak(3, tenants=crossing_tenants(n_requests=3),
+                 config=FabricConfig(n_nodes=4, topology="ring"))
+        links = r.stats["net"]["links"]
+        assert "0->1" in links
+        assert links["0->1"]["data_packets"] > 0
+
+    def test_all_to_all_unchanged_by_default(self):
+        """The default config still builds the seed's dedicated-pair
+        fabric: no qos, hops honored, loopback present."""
+        fab = build(hops=3)
+        ic = fab.interconnect
+        assert ic.qos is False
+        assert ic.topology.kind is TopologyKind.ALL_TO_ALL
+        assert ic.link(0, 1).hops == 3
+        assert ic.link(0, 0).hops == 1
+
+
+# ------------------------------------------------------------ interconnect
+class TestInterconnect:
+    def test_conservation_catches_tampering(self):
+        loop = EventLoop()
+        ic = Interconnect(loop, DEFAULT_COST_MODEL, "ring", n_nodes=4)
+        ic.path(0, 2).stream_page(4096, block_key=1)
+        assert ic.conservation_violations() == []
+        ic.link(0, 1).stats.data_packets += 1          # tamper
+        assert ic.conservation_violations() != []
+
+    def test_loopback_paths(self):
+        loop = EventLoop()
+        ic = Interconnect(loop, DEFAULT_COST_MODEL, "torus_2d", n_nodes=4,
+                          dims=(2, 2))
+        p = ic.path(3, 3)
+        assert p.route == (3, 3)
+        assert p.n_hops == 1
+
+    def test_net_importable_standalone(self):
+        """repro.net is the bottom layer: importing it first (in a fresh
+        interpreter, before repro.core/repro.api) must not hit the
+        core -> engine -> api -> net import cycle."""
+        import os
+        import subprocess
+        import sys
+        src = os.path.join(os.path.dirname(os.path.dirname(
+            os.path.abspath(__file__))), "src")
+        env = dict(os.environ, PYTHONPATH=src)
+        r = subprocess.run(
+            [sys.executable, "-c",
+             "import repro.net; print(repro.net.TopologyKind.RING.value)"],
+            capture_output=True, text=True, env=env)
+        assert r.returncode == 0, r.stderr
+        assert r.stdout.strip() == "ring"
+
+    def test_link_stats_rejects_non_adjacent_pairs(self):
+        fab = build(8, topology="torus_2d", dims=(2, 4))
+        assert fab.link_stats(0, 1).data_packets == 0
+        with pytest.raises(FabricError, match="neighbours"):
+            fab.link_stats(0, 2)
