@@ -39,7 +39,14 @@ SEED = 2026
 # ---- golden values recorded on the pre-PR tree (ALL_TO_ALL, hops=1) ----
 GOLDEN_FAULT_65536 = (260.8803999999993, 4, 0, 13)   # latency, rapf, to, df
 GOLDEN_CLEAN_16B = 4.002800000000001
-GOLDEN_VECTOR = [7.2668, 44.9804, 260.8804000000001, 38.16960000000148,
+# Re-recorded for the ID-lifecycle PR: the requests share one fabric, and
+# completion callbacks now fire AT t_complete (the PLDMA status-poll
+# return) instead of completion_poll_us before it, so each chained post
+# starts 0.5 us later on the shared clock — element 3 sheds exactly the
+# 0.5 us it previously spent waiting on absolute-time driver state, and
+# element 2 moves one float ulp.  Single-write goldens above are
+# untouched bit-for-bit.
+GOLDEN_VECTOR = [7.2668, 44.9804, 260.8804000000002, 37.66960000000148,
                  56.41879999999969, 17.09719999999993]
 GOLDEN_VECTOR_CASES = [(4096, BufferPrep.TOUCHED), (16384, BufferPrep.FAULTING),
                        (65536, BufferPrep.FAULTING), (4096, BufferPrep.FAULTING),

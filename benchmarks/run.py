@@ -14,8 +14,8 @@ import sys
 
 from benchmarks import (arbiter_qos, fig_2_3_firehose, fig_4_1, fig_4_2,
                         fig_4_3, fig_4_4, fig_4_6, fig_4_7, net_congestion,
-                        table_4_1, thp_study, timeout_sweep, verbs_async,
-                        vmem_remote)
+                        scale_soak, table_4_1, thp_study, timeout_sweep,
+                        verbs_async, vmem_remote)
 from benchmarks.common import summary, write_json
 
 MODULES = (
@@ -35,6 +35,7 @@ MODULES = (
     ("DMA-arbiter QoS (multi-tenant fault isolation)", arbiter_qos),
     ("Interconnect topology (routed control packets, torus congestion)",
      net_congestion),
+    ("Scale soak (64-128 nodes, 1M blocks, tr_id wraparound)", scale_soak),
 )
 
 

@@ -82,6 +82,26 @@ paper: multi-tenant fabrics)      (``FabricConfig.link_qos``); per-link
                                   utilization/queueing telemetry rolls
                                   up into ``Fabric.net_stats()`` →
                                   ``FabricStats``.
+14-bit tr_ID wire field           R5 free-list allocator: fresh IDs
+(Table 3.2) — the hardware        first, recycle **only on block
+wraps, state must not             completion**, so a paused block is
+(ID-lifecycle correctness)        never aliased past 2^14 launches;
+                                  ``FabricConfig.tr_id_space`` shrinks
+                                  the pool for tests, wire format
+                                  bit-exact; telemetry in ``TrIdStats``
+                                  (``Fabric.protocol_stats()``).
+seq_num / RAPF matching under     host-side *generation* tags (never
+ID reuse (§3.2.3.3 firmware       serialized): RAPF matching, FIFO
+checks, wrap-robust)              dedup and driver last-2 cache compare
+                                  generations, dropping control traffic
+                                  addressed to a previous incarnation
+                                  (``TrIdStats.stale_rapf_drops``).
+R5 descriptor-pool exhaustion     ``TrIdExhausted`` (a
+(beyond paper: admission          ``WorkQueueFull``) from the posting
+control at protocol limits)       verbs when every tr_ID is in flight;
+                                  internal launches defer FIFO until
+                                  completions free IDs
+                                  (``TrIdStats.stalls``).
 ===============================  ========================================
 
 Quick tour::
@@ -104,15 +124,15 @@ Quick tour::
 """
 
 from repro.api.completion import (CompletionQueue, CQStats,
-                                  DomainQuotaExceeded, WCStatus,
-                                  WorkCompletion, WorkQueueFull, WorkRequest,
-                                  WROpcode)
+                                  DomainQuotaExceeded, TrIdExhausted,
+                                  WCStatus, WorkCompletion, WorkQueueFull,
+                                  WorkRequest, WROpcode)
 from repro.api.config import FabricConfig
 from repro.api.fabric import Fabric, ProtectionDomain
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import DEFAULT_POLICY, FaultPolicy
 from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
-from repro.core.node import FabricError
+from repro.core.node import FabricError, TrIdStats
 from repro.core.resolver import Strategy
 from repro.net import (FabricStats, LinkStats, Router, Topology,
                        TopologyError, TopologyKind, build_topology)
@@ -123,6 +143,7 @@ __all__ = [
     "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
     "LinkStats", "MemoryRegion", "PrepCost", "ProtectionDomain",
     "RegionError", "Router", "ServiceClass", "Strategy", "Topology",
-    "TopologyError", "TopologyKind", "WCStatus", "WorkCompletion",
-    "WorkQueueFull", "WorkRequest", "WROpcode", "build_topology",
+    "TopologyError", "TopologyKind", "TrIdExhausted", "TrIdStats",
+    "WCStatus", "WorkCompletion", "WorkQueueFull", "WorkRequest",
+    "WROpcode", "build_topology",
 ]

@@ -65,6 +65,20 @@ class DomainQuotaExceeded(WorkQueueFull):
     """
 
 
+class TrIdExhausted(WorkQueueFull):
+    """Posting would launch blocks with no free 14-bit transaction ID.
+
+    The wire protocol's ``tr_ID`` field (Table 3.2) bounds a node to 2^14
+    blocks in flight; IDs recycle only when blocks complete.  The posting
+    verbs raise this *node-wide* backpressure signal — subclassing
+    :class:`WorkQueueFull`, so generic backpressure handlers retry it —
+    when the launching node's pool is empty.  Work already accepted is
+    never lost to exhaustion: launches that race the pool internally are
+    deferred inside the R5 and redeemed as completions free IDs (visible
+    as ``TrIdStats.stalls``).
+    """
+
+
 class WROpcode(enum.Enum):
     WRITE = "write"
     READ = "read"

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
-from repro.core.addresses import BLOCK_SIZE
+from repro.core.addresses import BLOCK_SIZE, TR_ID_SPACE
 from repro.core.arbiter import DEFAULT_PLDMA_SLOTS
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.fault import FaultModel
@@ -56,6 +56,11 @@ class FabricConfig:
       the hardware's outstanding-block window).
     * ``arb_quantum_bytes`` — deficit-round-robin quantum of that arbiter
       (default one 16 KB block).
+    * ``tr_id_space`` — size of each node's transaction-ID pool (default
+      ``None`` = the hardware's full 2^14, Table 3.2).  A *host-side*
+      scale-model knob: shrinking it makes ID exhaustion and recycling
+      reachable in seconds for tests, while the wire encoding stays
+      bit-exact (every allocated ID still fits the 14-bit field).
     """
 
     n_nodes: int = 2
@@ -71,6 +76,7 @@ class FabricConfig:
     node_policies: dict = dataclasses.field(default_factory=dict)
     pldma_slots: int = DEFAULT_PLDMA_SLOTS
     arb_quantum_bytes: int = BLOCK_SIZE
+    tr_id_space: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
@@ -78,6 +84,11 @@ class FabricConfig:
         if self.pldma_slots < 1:
             raise ValueError(
                 f"pldma_slots must be >= 1, got {self.pldma_slots}")
+        if self.tr_id_space is not None \
+                and not 1 <= self.tr_id_space <= TR_ID_SPACE:
+            raise ValueError(
+                f"tr_id_space must be in [1, {TR_ID_SPACE}] (the 14-bit "
+                f"tr_ID wire field), got {self.tr_id_space}")
         self.topology = coerce_kind(self.topology)
         if self.hops < 1:
             raise ValueError(f"hops must be >= 1, got {self.hops}")

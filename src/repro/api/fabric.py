@@ -20,13 +20,13 @@ from typing import Optional
 
 from repro.core import addresses as A
 from repro.core.arbiter import ArbiterStats, ServiceClass
-from repro.core.node import FabricError, Node, Transfer
+from repro.core.node import FabricError, Node, Transfer, TrIdStats
 from repro.core.pagetable import FrameAllocator
 from repro.core.simulator import EventLoop
 from repro.net.interconnect import FabricStats, Interconnect
 from repro.api.completion import (CompletionQueue, DomainQuotaExceeded,
-                                  WCStatus, WorkCompletion, WorkRequest,
-                                  WROpcode)
+                                  TrIdExhausted, WCStatus, WorkCompletion,
+                                  WorkRequest, WROpcode)
 from repro.api.config import FabricConfig
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import FaultPolicy
@@ -159,6 +159,15 @@ class ProtectionDomain:
                 f"domain pd={self.pd} at its outstanding-block quota on "
                 f"node {sending_node} ({arb.outstanding(self.pd)} blocks); "
                 f"drain completions first")
+        # node-wide protocol backpressure: refuse new work while every
+        # 14-bit tr_ID is owned by a pending block (Table 3.2) — the
+        # launching R5 would only defer the blocks internally anyway
+        r5 = self.fabric.nodes[sending_node].r5
+        if r5.tr_ids_free() == 0:
+            r5.id_stats.exhausted_posts += 1
+            raise TrIdExhausted(
+                f"all {r5.tr_id_space} tr_IDs in flight on node "
+                f"{sending_node}; drain completions first")
 
     def arbiter_stats(self, node_idx: int) -> ArbiterStats:
         """This domain's DMA-arbiter telemetry on ``node_idx``."""
@@ -190,7 +199,8 @@ class Fabric:
                         allocator=FrameAllocator(config.frames_per_node),
                         hupcf=config.hupcf, fault_model=config.fault_model,
                         pldma_slots=config.pldma_slots,
-                        arb_quantum_bytes=config.arb_quantum_bytes)
+                        arb_quantum_bytes=config.arb_quantum_bytes,
+                        tr_id_space=config.tr_id_space)
             self.nodes.append(node)
         # the routed interconnect: per-direction links along the physical
         # adjacencies of config.topology (ALL_TO_ALL keeps the seed's
@@ -291,6 +301,16 @@ class Fabric:
     def net_stats(self) -> FabricStats:
         """Interconnect telemetry: per-link utilization/queueing rollup."""
         return self.interconnect.stats()
+
+    def protocol_stats(self) -> dict:
+        """Per-node tr_ID-lifecycle telemetry: ``{node_id: TrIdStats}``.
+
+        Allocation/recycle/wrap counts, exhaustion backpressure events and
+        stale-control drops (generation mismatches) — the observability
+        surface the scale soak and the wraparound regression tests assert
+        against.
+        """
+        return {n.node_id: n.r5.id_stats for n in self.nodes}
 
     def link_stats(self, src_node: int, dst_node: int):
         """One directed physical link's :class:`~repro.net.link.LinkStats`.

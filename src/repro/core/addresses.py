@@ -42,6 +42,13 @@ TR_ID_MASK = (1 << TR_ID_BITS) - 1
 SEQ_NUM_MASK = (1 << SEQ_NUM_BITS) - 1
 PDID_MASK = (1 << PDID_BITS) - 1
 
+#: size of the per-node transaction-ID space: the wire carries 14-bit
+#: tr_IDs (Table 3.2), so a node can have at most this many blocks in
+#: flight — ID reuse beyond it is a *protocol property*, handled by the
+#: R5's free-list allocator (recycle on completion, host-side generation
+#: tags), not an overflow bug.
+TR_ID_SPACE = 1 << TR_ID_BITS
+
 # RAPF mailbox opcode ("Retransmit After Page Fault handled", Section 3.2.1)
 OPCODE_RAPF = 2
 

@@ -138,6 +138,11 @@ class DMAArbiter:
         self._dom_weight: dict[int, int] = {}
         self._dom_quota: dict[int, Optional[int]] = {}
         self._outstanding: dict[int, int] = {}   # launched, not-yet-done
+        # O(1) queue-depth counters (node total + per domain): queue_depth
+        # is consulted on EVERY enqueue for the high-water stats, and the
+        # seed's sum-over-queues scan made intake O(domains) per block
+        self._depth_total = 0
+        self._depth_by_pd: dict[int, int] = {}
         self.stats = ArbiterStats()              # node-wide total
         self.domain_stats: dict[int, ArbiterStats] = {}
 
@@ -185,9 +190,8 @@ class DMAArbiter:
 
     def queue_depth(self, pd: Optional[int] = None) -> int:
         if pd is None:
-            return sum(len(q.blocks) for q in self.queues.values())
-        return sum(len(q.blocks) for q in self.queues.values()
-                   if q.pd == pd)
+            return self._depth_total
+        return self._depth_by_pd.get(pd, 0)
 
     def _stats_for(self, pd: int) -> ArbiterStats:
         return self.domain_stats.setdefault(pd, ArbiterStats())
@@ -217,6 +221,8 @@ class DMAArbiter:
         block.queued = True
         q = self._queue_for(pd, cls)
         q.blocks.append(block)
+        self._depth_total += 1
+        self._depth_by_pd[pd] = self._depth_by_pd.get(pd, 0) + 1
         if not q.in_ring:
             q.in_ring = True
             self._active[cls].append(q)
@@ -321,6 +327,8 @@ class DMAArbiter:
                 if q.deficit >= head.nbytes:
                     q.deficit -= head.nbytes
                     block = q.blocks.popleft()
+                    self._depth_total -= 1
+                    self._depth_by_pd[q.pd] -= 1
                     if not q.blocks:
                         active.popleft()
                         q.in_ring = False
@@ -334,6 +342,21 @@ class DMAArbiter:
         return None
 
     # ------------------------------------------------------------ invariants
+    def depth_counter_violations(self) -> list[str]:
+        """The O(1) depth counters must equal the actual queue contents."""
+        out = []
+        actual_total = sum(len(q.blocks) for q in self.queues.values())
+        if actual_total != self._depth_total:
+            out.append(f"node {self.node.node_id}: depth counter "
+                       f"{self._depth_total} != actual backlog {actual_total}")
+        for pd, n in self._depth_by_pd.items():
+            actual = sum(len(q.blocks) for q in self.queues.values()
+                         if q.pd == pd)
+            if actual != n:
+                out.append(f"node {self.node.node_id} pd={pd}: depth counter "
+                           f"{n} != actual backlog {actual}")
+        return out
+
     def deficit_bound_violations(self) -> list[str]:
         """DRR fairness bound: 0 <= deficit <= BLOCK_SIZE + quantum × weight.
 

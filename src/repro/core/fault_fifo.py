@@ -18,6 +18,17 @@ Faithful details implemented here:
   *driver-side* last-2 check absorbs (see resolver.py).
 * Overflow drops (FIFO full) are counted: lost entries are recovered by the
   R5 timeout path, another reason timeouts back-stop the mechanism.
+
+**Generation sidecar (host-side, beyond the 128-bit wire format).**  Once a
+node has launched 2^14 blocks, tr_IDs recycle and the wire key
+``(src_ID, tr_ID, seq_num, vpage)`` aliases across *incarnations* of the
+same ID.  The simulator keeps a per-entry generation tag *alongside* the
+FIFO — ``push(entry, gen=...)`` / ``last_popped_gen`` — so the dedup
+comparison and the driver's RAPF attribution stay correct under wrap.  The
+tag never enters :meth:`FIFOEntry.pack_words`: the four 32-bit words of
+Table 3.2 remain bit-exact, and the real hardware (which cannot see
+generations) would fall back to the R5 timeout in the rare cross-incarnation
+collision this tag disambiguates.
 """
 
 from __future__ import annotations
@@ -89,8 +100,19 @@ class FaultFIFO:
     def __init__(self, depth: int = FIFO_DEPTH):
         self.depth = depth
         self._q: deque[FIFOEntry] = deque()
+        #: host-side generation sidecar, parallel to ``_q`` (see module
+        #: docstring) — not part of the 128-bit hardware entry
+        self._gen_q: deque[int] = deque()
         self._last_pushed: Optional[FIFOEntry] = None
+        self._last_gen = 0
         self._read_lo_done = False
+        #: packed words of the head entry, cached between the FSM's two
+        #: 64-bit reads (the head only changes on pop) — at scale the
+        #: double bit-exact repack per pop was a measurable hot spot
+        self._head_words: Optional[tuple[int, int, int, int]] = None
+        #: generation tag of the entry most recently popped by the
+        #: two-read FSM (0 when the pusher supplied none)
+        self.last_popped_gen = 0
         self.stats = FIFOStats()
 
     def __len__(self) -> int:
@@ -101,9 +123,16 @@ class FaultFIFO:
         return not self._q
 
     # ---------------------------------------------------------------- push
-    def push(self, entry: FIFOEntry) -> bool:
-        """Hardware push on slave error.  Returns True if enqueued."""
+    def push(self, entry: FIFOEntry, gen: int = 0) -> bool:
+        """Hardware push on slave error.  Returns True if enqueued.
+
+        ``gen`` is the host-side incarnation tag of ``entry.tr_id`` (0 =
+        untagged): the consecutive-dedup only collapses entries of the
+        *same* incarnation, so a recycled tr_ID faulting on the same page
+        as its previous life still logs its entry.
+        """
         if (self._last_pushed is not None
+                and self._last_gen == gen
                 and self._last_pushed.vpage_key() == entry.vpage_key()):
             self.stats.dedup_skips += 1
             return False
@@ -111,7 +140,9 @@ class FaultFIFO:
             self.stats.overflow_drops += 1
             return False
         self._q.append(entry)
+        self._gen_q.append(gen)
         self._last_pushed = entry
+        self._last_gen = gen
         self.stats.pushes += 1
         self.stats.max_occupancy = max(self.stats.max_occupancy, len(self._q))
         return True
@@ -135,14 +166,19 @@ class FaultFIFO:
         """
         if not self._q:
             return 0
-        w0, w1, w2, w3 = self._q[0].pack_words()
+        words = self._head_words
+        if words is None:
+            words = self._head_words = self._q[0].pack_words()
+        w0, w1, w2, w3 = words
         if half == 0:
             self._read_lo_done = True
             return (w1 << 32) | w0
         value = (w3 << 32) | w2
         if self._read_lo_done:
             self._q.popleft()
+            self.last_popped_gen = self._gen_q.popleft()
             self._read_lo_done = False
+            self._head_words = None
             self.stats.pops += 1
         return value
 

@@ -22,6 +22,19 @@ Event-driven model of the full thesis mechanism:
   fires the RAPF retransmit request at the initiator's mailbox.
 * **Retransmission** (§3.2.3.3): R5 retransmits on RAPF (validating seq_num
   and the packetizer-wired PDID) or on timeout (1 ms default).
+* **tr_ID lifecycle** (Table 3.2): the wire carries 14-bit transaction IDs,
+  so once a node has launched 2^14 blocks, ID reuse is a *protocol
+  property*.  The R5 allocates tr_IDs from a free list tied to its
+  ``pending`` set — fresh IDs first, then IDs recycled **only on block
+  completion** — so a still-paused block can never be aliased by a later
+  launch.  Each allocation bumps a host-side *generation* tag (never on the
+  wire; the 128-bit FIFO entry and the RAPF mailbox words stay bit-exact):
+  RAPF matching, driver dedup and fault attribution all compare generations,
+  so stale control traffic for a previous incarnation of an ID is dropped
+  instead of retransmitting (or skipping) the wrong block.  When all 16K IDs
+  are in flight the launch is deferred (FIFO) until a completion frees one;
+  the posting verbs surface the same condition as typed backpressure
+  (``repro.api.TrIdExhausted``).
 """
 
 from __future__ import annotations
@@ -33,13 +46,13 @@ from typing import TYPE_CHECKING, Callable, Optional
 
 from repro.core import addresses as A
 from repro.core.addresses import (NetlinkMessage, RAPFMessage, iova_field_pack,
-                                  iova_field_unpack, pages_spanned, split_blocks)
+                                  iova_field_unpack, split_blocks)
 from repro.core.arbiter import DEFAULT_PLDMA_SLOTS, DMAArbiter, ServiceClass
 from repro.core.costmodel import CostModel
 from repro.core.fault import SMMU, Access, Disposition, FaultModel
 from repro.core.fault_fifo import FaultFIFO, FIFOEntry
 from repro.core.pagetable import FrameAllocator, PageTable
-from repro.core.resolver import Resolver, Strategy
+from repro.core.resolver import DriverDedupCache, Resolver, Strategy
 from repro.core.simulator import EventLoop, Resource
 
 if TYPE_CHECKING:                                    # pragma: no cover
@@ -63,10 +76,48 @@ class BlockState(enum.Enum):
 
 
 @dataclasses.dataclass
+class TrIdStats:
+    """Host-side telemetry of one node's 14-bit tr_ID lifecycle.
+
+    ``space`` is the ID-space size (2^14 on hardware; tests may shrink it
+    via ``FabricConfig.tr_id_space`` to exercise wraps cheaply — the wire
+    encoding is unaffected, every ID always fits the 14-bit field).
+    """
+
+    space: int = A.TR_ID_SPACE
+    allocated: int = 0           # total allocations (fresh + recycled)
+    fresh: int = 0               # allocations from the never-used range
+    recycled: int = 0            # allocations from the completion free list
+    stalls: int = 0              # launches deferred: every ID in flight
+    exhausted_posts: int = 0     # posts refused with TrIdExhausted
+    in_flight: int = 0           # IDs currently owned by pending blocks
+    max_in_flight: int = 0       # high-water mark of the above
+    stale_rapf_drops: int = 0    # RAPFs for a previous incarnation dropped
+    stale_fifo_entries: int = 0  # FIFO entries outliving their incarnation
+
+    @property
+    def wraps(self) -> int:
+        """Times the ID space has been fully consumed (>=1 once recycled
+        IDs are in play, the regime the scale soak must survive)."""
+        return self.allocated // self.space
+
+    def as_dict(self) -> dict:
+        return {
+            "allocated": self.allocated, "fresh": self.fresh,
+            "recycled": self.recycled, "stalls": self.stalls,
+            "exhausted_posts": self.exhausted_posts,
+            "max_in_flight": self.max_in_flight, "wraps": self.wraps,
+            "stale_rapf_drops": self.stale_rapf_drops,
+            "stale_fifo_entries": self.stale_fifo_entries,
+        }
+
+
+@dataclasses.dataclass(slots=True)
 class TransferStats:
     t_submit: float = 0.0
     t_complete: float = -1.0
     timeouts: int = 0
+    phantom_timeouts: int = 0    # of those, rounds with zero bytes on wire
     rapf_retransmits: int = 0
     retransmissions: int = 0
     src_faults: int = 0
@@ -86,10 +137,10 @@ class TransferStats:
 
 class Block:
     __slots__ = ("transfer", "index", "src_va", "dst_va", "nbytes", "tr_id",
-                 "seq_num", "state", "attempts", "round_id", "delivered",
-                 "nacked_round", "timeout_event", "n_pages",
-                 "service_class", "queued", "holds_slot", "grant_pending",
-                 "is_retransmit")
+                 "gen", "seq_num", "state", "attempts", "round_id",
+                 "delivered", "nacked_round", "timeout_event", "n_pages",
+                 "wire_bytes", "service_class", "queued", "holds_slot",
+                 "grant_pending", "is_retransmit")
 
     def __init__(self, transfer: "Transfer", index: int, src_va: int,
                  dst_va: int, nbytes: int):
@@ -99,6 +150,7 @@ class Block:
         self.dst_va = dst_va
         self.nbytes = nbytes
         self.tr_id = -1
+        self.gen = 0                 # host-side incarnation tag of tr_id
         self.seq_num = index & A.SEQ_NUM_MASK
         self.state = BlockState.PENDING
         self.attempts = 0
@@ -106,7 +158,8 @@ class Block:
         self.delivered: set[int] = set()
         self.nacked_round = -1       # round for which a PF-NACK was sent
         self.timeout_event = None
-        self.n_pages = len(pages_spanned(dst_va, nbytes))
+        self.n_pages = A.num_pages(dst_va, nbytes)
+        self.wire_bytes = 0          # bytes streamed in the current round
         # DMA-arbiter state (repro.core.arbiter)
         self.service_class: Optional[ServiceClass] = None
         self.queued = False          # sitting in an arbiter send queue
@@ -136,6 +189,10 @@ class Transfer:
                        for i, (sva, n) in enumerate(split_blocks(src_va, nbytes))]
         self.next_block = 0
         self.done_blocks = 0
+        # blocks currently IN_FLIGHT or PAUSED_* — the O(1) form of the
+        # per-page "is another block of this transfer live on the wire"
+        # interleave check (previously an O(n_blocks) scan per page)
+        self.live_blocks = 0
 
     @property
     def complete(self) -> bool:
@@ -148,7 +205,8 @@ class Node:
                  hupcf: bool = True,
                  fault_model: FaultModel = FaultModel.TERMINATE,
                  pldma_slots: int = DEFAULT_PLDMA_SLOTS,
-                 arb_quantum_bytes: int = A.BLOCK_SIZE):
+                 arb_quantum_bytes: int = A.BLOCK_SIZE,
+                 tr_id_space: Optional[int] = None):
         self.loop = loop
         self.cost = cost
         self.node_id = node_id
@@ -162,11 +220,12 @@ class Node:
         self.user_cpu = Resource(loop, f"n{node_id}.cpu2")     # library thread
         self.hupcf = hupcf
         self.fault_model = fault_model
-        self.r5 = R5Scheduler(self)
+        self.r5 = R5Scheduler(self, tr_id_space=tr_id_space)
         self.arbiter = DMAArbiter(self, slots=pldma_slots,
                                   quantum_bytes=arb_quantum_bytes)
-        # driver last-2-transactions dedup cache (§ Fig 4.2 discussion)
-        self._handled: deque[tuple[int, int, int, int]] = deque(maxlen=2)
+        # driver last-2-transactions dedup cache (§ Fig 4.2 discussion),
+        # generation-aware so recycled tr_IDs can't alias fresh faults
+        self._handled = DriverDedupCache()
         self._rcv_tasklet_pending = False
         # engine wiring: the routed interconnect every transmit path —
         # data pages AND control packets — travels through
@@ -312,17 +371,23 @@ class Node:
             entry = self.fifo.pop_entry()
             if entry is None:
                 break
-            key = entry.vpage_key()
+            gen = self.fifo.last_popped_gen
+            key = entry.vpage_key() + (gen,)
             src_node = self.peer.get(entry.src_id)
             stats = None
             if src_node is not None:
+                # O(1) lookup; the generation tag rejects entries that
+                # outlived their block (the tr_id has been recycled) so a
+                # stale entry can't charge a new incarnation's stats
                 blk = src_node.r5.pending.get(entry.tr_id)
-                if blk is not None:
+                if blk is not None and (gen == 0 or blk.gen == gen):
                     stats = blk.transfer.stats
+                elif gen:
+                    src_node.r5.id_stats.stale_fifo_entries += 1
             _, vpn27 = iova_field_unpack(entry.iova_field)
             pt = self.page_tables.get(entry.pdid)
-            if key in self._handled or (pt is not None
-                                        and pt.is_resident(vpn27)):
+            if self._handled.seen(key) or (pt is not None
+                                           and pt.is_resident(vpn27)):
                 # last-2-transactions cache (absorbs interleaving dups) or a
                 # page an earlier get_user_pages already brought in: skip.
                 _, _ = self.driver_cpu.reserve(c.driver_bookkeep_us)
@@ -330,7 +395,7 @@ class Node:
                     stats.fifo_entries_skipped += 1
                     stats.driver_us += 2 * c.fifo_read64_us + c.driver_bookkeep_us
                 continue
-            self._handled.append(key)
+            self._handled.note(key)
             if pt is None:
                 continue
             res = self.resolver_for(entry.pdid).resolve(
@@ -347,25 +412,27 @@ class Node:
             rapf = RAPFMessage(wired_pdid=entry.pdid, rcved_pdid=entry.pdid,
                                tr_id=entry.tr_id, seq_num=entry.seq_num)
             if res.rapf_from_kernel:
-                self.loop.at(kend, self._send_rapf, entry.src_id, rapf, stats)
+                self.loop.at(kend, self._send_rapf, entry.src_id, rapf, stats,
+                             gen)
             else:
                 self.netlink_log.append(NetlinkMessage(
                     src_id=entry.src_id, tr_id=entry.tr_id,
                     seq_num=entry.seq_num, iova_field=entry.iova_field,
                     pdid=entry.pdid, rw=1))
                 self.loop.at(kend, self._user_thread_work, res.user_us, stats,
-                             (entry.src_id, rapf))
+                             (entry.src_id, rapf, gen))
 
     def _user_thread_work(self, duration: float, stats: Optional[TransferStats],
-                          rapf: Optional[tuple[int, RAPFMessage]]) -> None:
+                          rapf: Optional[tuple[int, RAPFMessage, int]]) -> None:
         _, end = self.user_cpu.reserve(duration)
         if stats:
             stats.user_us += duration
         if rapf is not None:
-            self.loop.at(end, self._send_rapf, rapf[0], rapf[1], stats)
+            self.loop.at(end, self._send_rapf, rapf[0], rapf[1], stats,
+                         rapf[2])
 
     def _send_rapf(self, src_node_id: int, msg: RAPFMessage,
-                   stats: Optional[TransferStats]) -> None:
+                   stats: Optional[TransferStats], gen: int = 0) -> None:
         target = self.peer.get(src_node_id)
         if target is None:
             return
@@ -376,7 +443,7 @@ class Node:
             # topologies, reserve) the full routed distance — the seed
             # charged one hop_latency_us however far the initiator was
             delay += self.path_to(src_node_id).send_ctrl(8)
-        self.loop.schedule(delay, target.r5.on_mailbox, msg, stats)
+        self.loop.schedule(delay, target.r5.on_mailbox, msg, stats, gen)
 
     # ============================================================== receive
     def recv_page(self, block: Block, page_idx: int, round_id: int,
@@ -394,12 +461,11 @@ class Node:
         if block.state is BlockState.DONE or round_id != block.round_id:
             return  # stale packets from a superseded round
         # two outstanding blocks streaming together -> their NACK packets
-        # interleave and defeat the FIFO's consecutive-dedup (§ Fig 4.2)
-        interleaved = interleaved or any(
-            b is not block and b.state in (BlockState.IN_FLIGHT,
-                                           BlockState.PAUSED_SRC,
-                                           BlockState.PAUSED_DST)
-            for b in block.transfer.blocks)
+        # interleave and defeat the FIFO's consecutive-dedup (§ Fig 4.2).
+        # live_blocks counts this transfer's IN_FLIGHT/PAUSED_* blocks —
+        # including this one — so "any other live block" is a counter
+        # compare instead of a per-page scan over every block.
+        interleaved = interleaved or block.transfer.live_blocks > 1
         pd = block.transfer.pd
         vpn = A.page_index(block.dst_va) + page_idx
         res = self.smmu.translate(pd % A.NUM_CONTEXT_BANKS, vpn, Access.WRITE)
@@ -425,7 +491,7 @@ class Node:
         # outstanding blocks breaks the "same as last pushed" check.
         n_pushes = max(1, nbytes // A.MTU) if interleaved else 1
         for _ in range(n_pushes):
-            pushed = self.fifo.push(entry)
+            pushed = self.fifo.push(entry, gen=block.gen)
             if not interleaved and not pushed:
                 break
             if interleaved:
@@ -447,14 +513,98 @@ class Node:
 
 
 class R5Scheduler:
-    """The Cortex-R5 firmware model (thesis §1.3.2 + §3.2.3.3)."""
+    """The Cortex-R5 firmware model (thesis §1.3.2 + §3.2.3.3).
 
-    def __init__(self, node: Node):
+    Owns the node's 14-bit tr_ID space: IDs are allocated fresh until the
+    space has been fully issued once, then recycled from a free list fed
+    **only by block completions** — a paused block keeps its ID until it
+    is ACKed, so launching 2^14+ blocks can never alias ``pending``.
+    Every allocation bumps the ID's host-side generation tag, the
+    disambiguator RAPF matching and driver dedup use once IDs recycle.
+    """
+
+    def __init__(self, node: Node, tr_id_space: Optional[int] = None):
         self.node = node
         self.loop = node.loop
         self.cost = node.cost
-        self._tr_counter = 0
+        space = int(tr_id_space) if tr_id_space is not None else A.TR_ID_SPACE
+        if not 1 <= space <= A.TR_ID_SPACE:
+            raise ValueError(
+                f"tr_id_space must be in [1, {A.TR_ID_SPACE}] (the 14-bit "
+                f"wire field, Table 3.2), got {space}")
+        self.tr_id_space = space
+        self._fresh_next = 0                  # next never-issued ID
+        self._free: deque[int] = deque()      # IDs recycled on completion
+        self._gen: dict[int, int] = {}        # ID -> current generation
+        self._starved: deque[Transfer] = deque()   # deferred launches
         self.pending: dict[int, Block] = {}   # tr_id -> block
+        # per-(pd, src vpn) index over pending blocks, launch-ordered:
+        # the O(1) replacement for the per-fault O(pending) scan in
+        # find_block_by_src_page (maintained on launch/completion)
+        self._src_index: dict[tuple[int, int], list[Block]] = {}
+        self.id_stats = TrIdStats(space=space)
+
+    # ----------------------------------------------------------- tr_ID pool
+    def tr_ids_free(self) -> int:
+        """IDs available to new launches right now (fresh + recycled)."""
+        return (self.tr_id_space - self._fresh_next) + len(self._free)
+
+    def _alloc_tr_id(self) -> Optional[int]:
+        """Allocate a tr_ID, or None when all are owned by pending blocks.
+
+        Fresh IDs are issued in order first (bit-identical to the seed's
+        counter below one wrap); after that, completions feed the FIFO
+        free list.  The ID's generation is bumped on every allocation.
+        """
+        st = self.id_stats
+        if self._fresh_next < self.tr_id_space:
+            tid = self._fresh_next
+            self._fresh_next += 1
+            st.fresh += 1
+        elif self._free:
+            tid = self._free.popleft()
+            st.recycled += 1
+        else:
+            return None
+        self._gen[tid] = self._gen.get(tid, 0) + 1
+        st.allocated += 1
+        st.in_flight += 1
+        if st.in_flight > st.max_in_flight:
+            st.max_in_flight = st.in_flight
+        return tid
+
+    def _free_tr_id(self, tid: int) -> None:
+        """Recycle a completed block's ID (the ONLY way IDs come back)."""
+        self._free.append(tid)
+        self.id_stats.in_flight -= 1
+
+    # ------------------------------------------------------ src-fault index
+    def _index_add(self, block: Block) -> None:
+        pd = block.transfer.pd
+        idx = self._src_index
+        first = block.src_va >> 12
+        last = (block.src_va + block.nbytes - 1) >> 12
+        for vpn in range(first, last + 1):
+            lst = idx.get((pd, vpn))
+            if lst is None:
+                idx[(pd, vpn)] = [block]
+            else:
+                lst.append(block)
+
+    def _index_remove(self, block: Block) -> None:
+        pd = block.transfer.pd
+        idx = self._src_index
+        first = block.src_va >> 12
+        last = (block.src_va + block.nbytes - 1) >> 12
+        for vpn in range(first, last + 1):
+            lst = idx.get((pd, vpn))
+            if lst is not None:
+                try:
+                    lst.remove(block)
+                except ValueError:          # pragma: no cover - defensive
+                    pass
+                if not lst:
+                    del idx[(pd, vpn)]
 
     # ---------------------------------------------------------------- user
     def submit(self, transfer: Transfer) -> None:
@@ -472,11 +622,20 @@ class R5Scheduler:
     def _launch_next(self, transfer: Transfer) -> None:
         if transfer.next_block >= len(transfer.blocks):
             return
+        tid = self._alloc_tr_id()
+        if tid is None:
+            # every ID is owned by a pending block: defer this launch.
+            # Each completion frees an ID and redeems one ticket (FIFO),
+            # so deferred traffic drains in launch order.
+            self.id_stats.stalls += 1
+            self._starved.append(transfer)
+            return
         block = transfer.blocks[transfer.next_block]
         transfer.next_block += 1
-        block.tr_id = self._tr_counter & A.TR_ID_MASK
-        self._tr_counter += 1
-        self.pending[block.tr_id] = block
+        block.tr_id = tid
+        block.gen = self._gen[tid]
+        self.pending[tid] = block
+        self._index_add(block)
         # blocks no longer go straight to the PLDMA: the fault-aware
         # arbiter grants slots per service class / DRR across domains
         self.node.arbiter.enqueue(block)
@@ -488,16 +647,25 @@ class R5Scheduler:
             return
         node = self.node
         transfer = block.transfer
+        prev_wire_bytes = block.wire_bytes
         block.round_id += 1
         block.attempts += 1
         block.delivered.clear()
+        block.wire_bytes = 0
+        if block.state is BlockState.PENDING:
+            transfer.live_blocks += 1
         block.state = BlockState.IN_FLIGHT
-        if is_retransmit:
+        if is_retransmit and prev_wire_bytes:
+            # only rounds that put bytes on the wire are *re*-transmitted;
+            # a re-dispatch after a PAUSED_SRC-at-first-page round (zero
+            # bytes streamed) is this data's first transmission
             transfer.stats.retransmissions += 1
 
         pd = transfer.pd
         bank = pd % A.NUM_CONTEXT_BANKS
-        src_pages = pages_spanned(block.src_va, block.nbytes)
+        first_vpn = block.src_va >> 12
+        src_pages = range(first_vpn,
+                          ((block.src_va + block.nbytes - 1) >> 12) + 1)
         # PLDMA reads/packetizes pages in order; a source fault stops the
         # stream (pages already read remain in flight).
         path = node.path_to(transfer.dst_node.node_id)
@@ -519,6 +687,7 @@ class R5Scheduler:
             nbytes = pg_end - pg_start
             delay, interleaved = path.stream_page(
                 nbytes, id(block), latency_class=latency_class)
+            block.wire_bytes += nbytes
             self.loop.schedule(delay, transfer.dst_node.recv_page, block, i,
                                block.round_id, interleaved, nbytes)
         self._arm_timeout(block)
@@ -532,7 +701,14 @@ class R5Scheduler:
     def _on_timeout(self, block: Block, round_id: int) -> None:
         if block.state is BlockState.DONE or round_id != block.round_id:
             return
-        block.transfer.stats.timeouts += 1
+        stats = block.transfer.stats
+        stats.timeouts += 1
+        if block.wire_bytes == 0:
+            # the round paused PAUSED_SRC before any packet left the node:
+            # the R5 timer still fires (source-fault recovery is by timeout
+            # only in the prototype) but nothing was on the wire to lose —
+            # accounted separately so phantom rounds are subtractable
+            stats.phantom_timeouts += 1
         # re-enter at the BACK of the block's class queue: a faulting
         # tenant's retransmits do not jump other tenants' fresh traffic
         self.node.arbiter.requeue(block)
@@ -541,19 +717,36 @@ class R5Scheduler:
     def on_ack(self, block: Block, round_id: int) -> None:
         if block.state is BlockState.DONE or round_id != block.round_id:
             return
+        transfer = block.transfer
         block.state = BlockState.DONE
+        transfer.live_blocks -= 1
         if block.timeout_event is not None:
             block.timeout_event.cancel()
-        self.pending.pop(block.tr_id, None)
+        if self.pending.pop(block.tr_id, None) is block:
+            self._index_remove(block)
+            self._free_tr_id(block.tr_id)   # recycle ONLY on completion
         self.node.arbiter.on_block_done(block)
-        transfer = block.transfer
         transfer.done_blocks += 1
-        self._launch_next(transfer)
+        # the freed ID may unblock launches deferred at exhaustion; the
+        # completing transfer's own next block takes its turn BEHIND any
+        # already-deferred work, so deferral tickets really are redeemed
+        # in launch order (no self-refill priority inversion)
+        if self._starved:
+            self._starved.append(transfer)
+        else:
+            self._launch_next(transfer)
+        while self._starved and self.tr_ids_free() > 0:
+            self._launch_next(self._starved.popleft())
         if transfer.complete:
             transfer.stats.t_complete = (self.loop.now
                                          + self.cost.completion_poll_us)
             if transfer.on_complete is not None:
-                transfer.on_complete(transfer)
+                # the user observes the completion when the PLDMA
+                # status-register poll returns — fire the callback AT
+                # t_complete, not completion_poll_us before it (which
+                # handed callbacks a timestamp from the future)
+                self.loop.schedule(self.cost.completion_poll_us,
+                                   transfer.on_complete, transfer)
 
     def on_nack(self, block: Block, round_id: int) -> None:
         # thesis firmware change: pause instead of instant retransmit
@@ -562,15 +755,24 @@ class R5Scheduler:
         block.state = BlockState.PAUSED_DST
         self.node.arbiter.on_block_paused(block)
 
-    def on_mailbox(self, msg: RAPFMessage, stats: Optional[TransferStats]) -> None:
+    def on_mailbox(self, msg: RAPFMessage, stats: Optional[TransferStats],
+                   gen: int = 0) -> None:
         if msg.opcode != A.OPCODE_RAPF:
             return
         self.loop.schedule(self.cost.mailbox_poll_us, self._rapf_body, msg,
-                           stats)
+                           stats, gen)
 
-    def _rapf_body(self, msg: RAPFMessage, stats) -> None:
+    def _rapf_body(self, msg: RAPFMessage, stats, gen: int = 0) -> None:
         block = self.pending.get(msg.tr_id)
         if block is None or block.state is BlockState.DONE:
+            return
+        if gen and block.gen != gen:
+            # the tr_ID was recycled between the fault and this RAPF: the
+            # request addresses a finished incarnation, not this block —
+            # without the generation check a wrapped seq_num could force
+            # a spurious retransmit of (or steal the timeout of) a
+            # brand-new block that inherited the ID
+            self.id_stats.stale_rapf_drops += 1
             return
         if msg.seq_num != (block.seq_num & 0xFFF):
             return  # stale/forged: dropped, as in the firmware listing
@@ -583,11 +785,10 @@ class R5Scheduler:
 
     # ----------------------------------------------------------- utilities
     def find_block_by_src_page(self, pd: int, vpn: int) -> Optional[Block]:
-        for block in self.pending.values():
-            if block.transfer.pd != pd:
-                continue
-            first = A.page_index(block.src_va)
-            last = A.page_index(block.src_va + block.nbytes - 1)
-            if first <= vpn <= last:
-                return block
-        return None
+        """Earliest-launched pending block covering source page ``vpn``.
+
+        O(1) via the per-(pd, vpn) index — the seed scanned every pending
+        block per source fault, O(pending) on the driver's critical path.
+        """
+        lst = self._src_index.get((pd, vpn))
+        return lst[0] if lst else None

@@ -69,7 +69,13 @@ class FrameAllocator:
 
     def __init__(self, total_frames: int = 1 << 22):  # 16 GB default
         self.total_frames = total_frames
-        self.free: list[int] = list(range(total_frames - 1, -1, -1))
+        # lazy free pool: frames >= _next_fresh have never been handed
+        # out, released frames recycle LIFO — allocation order is
+        # identical to the seed's materialized descending list, without
+        # building (total_frames) ints per node at fabric construction
+        # (64-node fabrics paid seconds of setup for untouched frames)
+        self._next_fresh = 0
+        self._released: list[int] = []
         self.owner: dict[int, tuple[int, int]] = {}   # frame -> (pd, vpn)
         self.refcount: dict[int, int] = {}
 
@@ -77,10 +83,18 @@ class FrameAllocator:
     def used(self) -> int:
         return len(self.owner)
 
+    @property
+    def free_frames(self) -> int:
+        return self.total_frames - self._next_fresh + len(self._released)
+
     def alloc(self, pd: int, vpn: int) -> int:
-        if not self.free:
+        if self._released:
+            f = self._released.pop()
+        elif self._next_fresh < self.total_frames:
+            f = self._next_fresh
+            self._next_fresh += 1
+        else:
             raise OutOfFramesError("frame pool exhausted")
-        f = self.free.pop()
         self.owner[f] = (pd, vpn)
         self.refcount[f] = 1
         return f
@@ -93,7 +107,7 @@ class FrameAllocator:
         if rc <= 1:
             self.owner.pop(frame, None)
             self.refcount.pop(frame, None)
-            self.free.append(frame)
+            self._released.append(frame)
         else:
             self.refcount[frame] = rc - 1
 

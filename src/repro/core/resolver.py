@@ -21,10 +21,38 @@ from __future__ import annotations
 
 import dataclasses
 import enum
+from collections import deque
 
 from repro.core.addresses import PAGES_PER_BLOCK
 from repro.core.costmodel import CostModel
 from repro.core.pagetable import PageTable, SegmentationFault
+
+
+class DriverDedupCache:
+    """The driver's last-two-transactions cache (§3.2.3.2 / Fig 4.2).
+
+    The ``pf_rcv_tasklet`` skips FIFO entries it has just handled — the
+    window that absorbs the interleaving duplicates the hardware's
+    consecutive-dedup lets through.  Keys are the wire identity
+    ``(src_ID, tr_ID, seq_num, vpage)`` *plus* the host-side generation
+    tag of the tr_ID: once a node has launched 2^14 blocks and tr_IDs
+    recycle, the wire identity alone aliases across incarnations, and an
+    un-tagged cache would skip a *fresh* fault because a previous life of
+    the same tr_ID faulted on the same page.  Membership tests are O(1)
+    in the (constant, =2) depth — this cache is on the critical path of
+    every FIFO entry drained.
+    """
+
+    __slots__ = ("_entries",)
+
+    def __init__(self, depth: int = 2):
+        self._entries: deque[tuple] = deque(maxlen=depth)
+
+    def seen(self, key: tuple) -> bool:
+        return key in self._entries
+
+    def note(self, key: tuple) -> None:
+        self._entries.append(key)
 
 
 class Strategy(enum.Enum):

@@ -121,19 +121,23 @@ class Link:
         only) queue behind LATENCY traffic alone and push the BULK
         backlog back by the wire time they steal.
         """
-        if self.drained:
+        # (hot path: one call per page per hop of a routed stream — locals
+        # bound once, the drained check inlined instead of the property)
+        now = self.loop.now
+        st = self.stats
+        if self.busy_until <= now and self.lat_busy_until <= now:
             # the wire went idle since the previous reservation: whatever
             # streamed last finished long ago and must not be mistaken
             # for a live interleaving stream by the next data packet
             self.last_user = None
-        floor = max(self.loop.now, earliest)
+        floor = earliest if earliest > now else now
         if latency_class and self.qos:
             start = max(floor, self.lat_busy_until)
             end = start + wire_us
             self.lat_busy_until = end
             if self.busy_until > start:          # jumped a BULK backlog
                 if wire_us > 0:
-                    self.stats.latency_overtakes += 1
+                    st.latency_overtakes += 1
                 self.busy_until += wire_us       # stolen wire time
             else:
                 self.busy_until = end
@@ -144,10 +148,11 @@ class Link:
             self.busy_until = end
         waited = start - floor
         if waited > 0:
-            self.stats.queued += 1
-            self.stats.queue_us += waited
-            self.stats.max_queue_us = max(self.stats.max_queue_us, waited)
-        self.stats.busy_us += wire_us
+            st.queued += 1
+            st.queue_us += waited
+            if waited > st.max_queue_us:
+                st.max_queue_us = waited
+        st.busy_us += wire_us
         return start, end
 
     # ----------------------------------------------------------- data path
@@ -160,16 +165,18 @@ class Link:
         # a stream that finished long ago cannot interleave with us: the
         # drained check (mirrored inside reserve for control bookings)
         # forgets it before the comparison
-        interleaved = (not self.drained
-                       and self.last_user is not None
-                       and self.last_user != block_key)
+        now = self.loop.now
+        live = self.busy_until > now or self.lat_busy_until > now
+        lu = self.last_user
+        interleaved = live and lu is not None and lu != block_key
         _, end = self.reserve(self.cost.packet_wire_us(nbytes), earliest,
                               latency_class=latency_class)
         self.last_user = block_key
-        self.stats.data_packets += 1
-        self.stats.data_bytes += nbytes
+        st = self.stats
+        st.data_packets += 1
+        st.data_bytes += nbytes
         if interleaved:
-            self.stats.interleaves += 1
+            st.interleaves += 1
         return end, interleaved
 
     # -------------------------------------------------------- control path
@@ -201,7 +208,8 @@ class Path:
     and everything queued behind it.
     """
 
-    __slots__ = ("loop", "cost", "route", "links", "n_hops", "ledger")
+    __slots__ = ("loop", "cost", "route", "links", "n_hops", "ledger",
+                 "_ledger_rec")
 
     def __init__(self, loop: EventLoop, cost: CostModel,
                  route: tuple[int, ...], links: tuple[Link, ...],
@@ -215,6 +223,7 @@ class Path:
         #: scales its single direct link instead)
         self.n_hops = sum(l.hops for l in links)
         self.ledger = ledger            # (src, dst) -> [data, ctrl] counts
+        self._ledger_rec = None         # this path's entry, bound lazily
 
     @property
     def src(self) -> int:
@@ -235,16 +244,16 @@ class Path:
         Returns ``(arrival_delay_from_now, interleaved)`` — the same
         contract the seed's single :class:`Link` offered the PLDMA model.
         """
-        t = self.loop.now
+        now = self.loop.now
+        t = now
         interleaved = False
         for link in self.links:
             t, il = link.stream_page(nbytes, block_key, earliest=t,
                                      latency_class=latency_class)
             interleaved = interleaved or il
         if self.ledger is not None:
-            rec = self.ledger.setdefault((self.src, self.dst), [0, 0])
-            rec[0] += 1
-        return (t - self.loop.now) + self.latency_us, interleaved
+            self._ledger()[0] += 1
+        return (t - now) + self.latency_us, interleaved
 
     def send_ctrl(self, nbytes: int = 0,
                   latency_class: bool = True) -> float:
@@ -255,11 +264,20 @@ class Path:
         control-packet distance-accounting fix (the seed charged a single
         ``hop_latency_us`` however far apart the nodes were).
         """
-        t = self.loop.now
+        now = self.loop.now
+        t = now
         for link in self.links:
             t = link.send_ctrl(nbytes, earliest=t,
                                latency_class=latency_class)
         if self.ledger is not None:
-            rec = self.ledger.setdefault((self.src, self.dst), [0, 0])
-            rec[1] += 1
-        return (t - self.loop.now) + self.latency_us
+            self._ledger()[1] += 1
+        return (t - now) + self.latency_us
+
+    def _ledger(self) -> list:
+        """This path's ``[data, ctrl]`` ledger record (bound on first use
+        — a dict probe per packet is measurable on million-block soaks)."""
+        rec = self._ledger_rec
+        if rec is None:
+            rec = self._ledger_rec = self.ledger.setdefault(
+                (self.src, self.dst), [0, 0])
+        return rec

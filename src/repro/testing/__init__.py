@@ -18,15 +18,17 @@ from repro.testing.invariants import (check_arbiter_consistency,
                                       check_link_conservation,
                                       check_pinned_resident,
                                       check_route_sanity,
+                                      check_tr_id_lifecycle,
                                       check_vmem_frame_conservation,
                                       check_vmem_pins)
 from repro.testing.soak import SoakResult, soak
-from repro.testing.traffic import FaultInjection, TenantSpec
+from repro.testing.traffic import FaultInjection, TenantSpec, scale_mix
 
 __all__ = [
     "FaultInjection", "SoakResult", "TenantSpec",
     "check_arbiter_consistency", "check_completion_conservation",
     "check_link_conservation", "check_pinned_resident",
-    "check_route_sanity", "check_vmem_frame_conservation",
-    "check_vmem_pins", "soak",
+    "check_route_sanity", "check_tr_id_lifecycle",
+    "check_vmem_frame_conservation", "check_vmem_pins", "scale_mix",
+    "soak",
 ]

@@ -84,6 +84,60 @@ def check_route_sanity(fabric) -> List[str]:
     return out
 
 
+def check_tr_id_lifecycle(fabric) -> List[str]:
+    """The tr_ID free-list/index invariants on every node's R5:
+
+    * no ID is simultaneously free and owned by a pending block;
+    * the free list holds no duplicates;
+    * the accounting identity ``fresh_issued == pending + free`` holds
+      (every issued ID is either owned or recyclable);
+    * the per-(pd, vpn) source-fault index contains exactly the pending
+      blocks, in launch order — the O(1) lookup must answer precisely
+      what the seed's O(pending) scan would have;
+    * once the fabric drained: nothing pending, no deferred launches.
+    """
+    out = []
+    for node in fabric.nodes:
+        r5 = node.r5
+        tag = f"node {node.node_id}"
+        free = list(r5._free)
+        if len(set(free)) != len(free):
+            out.append(f"{tag}: duplicate tr_ids on the free list")
+        overlap = set(free) & set(r5.pending)
+        if overlap:
+            out.append(f"{tag}: tr_ids both free and pending: "
+                       f"{sorted(overlap)[:8]}")
+        issued = r5._fresh_next
+        if len(r5.pending) + len(free) != issued:
+            out.append(
+                f"{tag}: {len(r5.pending)} pending + {len(free)} free != "
+                f"{issued} ids issued (leaked or double-freed)")
+        for tid, block in r5.pending.items():
+            if block.tr_id != tid:
+                out.append(f"{tag}: pending[{tid}] holds block with "
+                           f"tr_id={block.tr_id}")
+        # rebuild the src index from pending (launch order == dict order)
+        expect: dict = {}
+        for block in r5.pending.values():
+            pd = block.transfer.pd
+            first = block.src_va >> 12
+            last = (block.src_va + block.nbytes - 1) >> 12
+            for vpn in range(first, last + 1):
+                expect.setdefault((pd, vpn), []).append(block)
+        if expect != r5._src_index:
+            missing = set(expect) ^ set(r5._src_index)
+            out.append(f"{tag}: src-fault index diverged from pending "
+                       f"({len(missing)} keys differ)")
+        if fabric.loop.idle:
+            if r5.pending:
+                out.append(f"{tag}: {len(r5.pending)} blocks still pending "
+                           f"after drain")
+            if r5._starved:
+                out.append(f"{tag}: {len(r5._starved)} deferred launches "
+                           f"left after drain")
+    return out
+
+
 def check_arbiter_consistency(fabric) -> List[str]:
     """Arbiter telemetry and end-state sanity:
 
@@ -105,6 +159,7 @@ def check_arbiter_consistency(fabric) -> List[str]:
                     f"node {node.node_id}: arbiter stats field {field!r} "
                     f"total {total} != per-domain sum {per_dom}")
         out.extend(arb.deficit_bound_violations())
+        out.extend(arb.depth_counter_violations())
         if fabric.loop.idle:
             if arb.in_flight != 0:
                 out.append(f"node {node.node_id}: {arb.in_flight} blocks "

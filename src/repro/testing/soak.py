@@ -22,13 +22,21 @@ from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_completion_conservation,
                                       check_link_conservation,
-                                      check_pinned_resident)
+                                      check_pinned_resident,
+                                      check_tr_id_lifecycle)
 from repro.testing.traffic import (FaultInjection, TenantRun, TenantSpec,
                                    schedule_injection)
 
 #: hard ceiling on loop events per soak — a run that trips it is reported
 #: as a liveness violation instead of hanging the test suite
 MAX_SOAK_EVENTS = 5_000_000
+
+#: events stepped between completion checks: testing every tenant's done
+#: flag per event made the driver loop O(tenants x events) — at million-
+#: block scale the *harness* dominated the simulation.  Overshooting a
+#: chunk is harmless: the post-loop drain runs the same tail events the
+#: chunk would have, so final stats are identical.
+CHECK_INTERVAL = 2048
 
 
 def default_tenants() -> list[TenantSpec]:
@@ -70,10 +78,21 @@ def soak(seed: int,
          config: Optional[FabricConfig] = None,
          injection: Optional[FaultInjection] = None,
          poll_period_us: float = 200.0,
-         max_events: int = MAX_SOAK_EVENTS) -> SoakResult:
-    """Run one seeded soak to completion and check every invariant."""
+         max_events: int = MAX_SOAK_EVENTS,
+         n_nodes: Optional[int] = None,
+         max_duration_us: Optional[float] = None) -> SoakResult:
+    """Run one seeded soak to completion and check every invariant.
+
+    ``n_nodes`` is a convenience knob for the scale tiers: it builds a
+    default :class:`FabricConfig` of that size (mutually exclusive with
+    ``config``).  ``max_duration_us`` bounds *virtual* time the way
+    ``max_events`` bounds work — exceeding either is reported as a
+    liveness violation rather than hanging the harness.
+    """
+    if n_nodes is not None and config is not None:
+        raise ValueError("pass either config= or n_nodes=, not both")
     rng = random.Random(seed)
-    fabric = Fabric.build(config or FabricConfig(n_nodes=2))
+    fabric = Fabric.build(config or FabricConfig(n_nodes=n_nodes or 2))
     specs = list(tenants) if tenants is not None else default_tenants()
     runs = [TenantRun(fabric, spec, rng, poll_period_us=poll_period_us)
             for spec in specs]
@@ -83,20 +102,30 @@ def soak(seed: int,
         schedule_injection(fabric, runs, injection, rng)
 
     violations: list[str] = []
-    start_events = fabric.loop.events_processed
+    loop = fabric.loop
+    start_events = loop.events_processed
     while not all(r.done for r in runs):
-        if fabric.loop.peek_time() is None:
+        if loop.peek_time() is None:
             violations.append(
                 "event loop drained before all tenants completed: "
                 + ", ".join(f"{r.spec.label()} {len(r.completions)}/"
                             f"{r.spec.n_requests}"
                             for r in runs if not r.done))
             break
-        fabric.loop.step()
-        if fabric.loop.events_processed - start_events > max_events:
+        # step a chunk of events between done-checks (harness overhead
+        # stays O(events), not O(tenants x events))
+        for _ in range(CHECK_INTERVAL):
+            if not loop.step():
+                break
+        if loop.events_processed - start_events > max_events:
             violations.append(
                 f"soak exceeded {max_events} events without completing "
                 f"— livelock or starvation")
+            break
+        if max_duration_us is not None and fabric.now > max_duration_us:
+            violations.append(
+                f"soak exceeded {max_duration_us} us of virtual time "
+                f"without completing — livelock or starvation")
             break
     if all(r.done for r in runs):
         # drain the tail (stops once the pumps see every tenant done);
@@ -112,6 +141,7 @@ def soak(seed: int,
     violations += check_pinned_resident(fabric)
     violations += check_arbiter_consistency(fabric)
     violations += check_link_conservation(fabric)
+    violations += check_tr_id_lifecycle(fabric)
 
     # ---- deterministic report -------------------------------------------
     stats = {
@@ -119,6 +149,9 @@ def soak(seed: int,
         "tenants": [r.stats_dict() for r in runs],
         "arbiter": _arbiter_dict(fabric),
         "net": fabric.net_stats().as_dict(),
+        "r5": {f"node{nid}": s.as_dict()
+               for nid, s in sorted(fabric.protocol_stats().items())
+               if s.allocated},
         "makespan_us": round(fabric.now, 6),
         "events": fabric.loop.events_processed,
         "violations": sorted(violations),

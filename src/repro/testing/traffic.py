@@ -53,6 +53,15 @@ class TenantSpec:
     fresh_dst: bool = True
     src_node: int = 0
     dst_node: int = 1
+    # open the domain only on these nodes (None = every node).  Scoping is
+    # what lets a 64-node scale soak run 64+ tenants: SMMU context banks
+    # (pd % 16) need only be unique per *node*, not fabric-wide.
+    open_on: Optional[tuple] = None
+    # cycle requests through this many memory-region slots instead of a
+    # region per request (None = per-request regions).  Bounds page-table
+    # and frame footprint on million-block soaks; after the first lap
+    # every slot is warm, so reused regions stop faulting.
+    region_slots: Optional[int] = None
 
     def label(self) -> str:
         return self.name or f"pd{self.pd}"
@@ -93,7 +102,8 @@ class TenantRun:
                 strategy=spec.strategy,
                 service_class=spec.service_class,
                 arb_weight=spec.arb_weight,
-                max_outstanding_blocks=spec.max_outstanding_blocks))
+                max_outstanding_blocks=spec.max_outstanding_blocks),
+            nodes=(list(spec.open_on) if spec.open_on is not None else None))
         self.cq = fabric.create_cq(depth=cq_depth)
         self._mrs: dict[int, tuple] = {}      # request idx -> (src, dst)
         self.regions: list[tuple[int, int, int, int]] = []  # node, pd, vpn, n
@@ -131,25 +141,28 @@ class TenantRun:
     # -------------------------------------------------------------- posting
     def _regions_for(self, i: int):
         spec = self.spec
-        if i in self._mrs:
-            return self._mrs[i]
+        # with region_slots set, request i reuses slot i % region_slots —
+        # the MR pair (and its residency) persists across laps
+        key = i if spec.region_slots is None else i % spec.region_slots
+        if key in self._mrs:
+            return self._mrs[key]
         size = self.rng.choice(spec.size_choices)
-        src_va = SRC_BASE + spec.pd * TENANT_STRIDE + i * REQUEST_STRIDE
+        src_va = SRC_BASE + spec.pd * TENANT_STRIDE + key * REQUEST_STRIDE
         # fresh_dst: a brand-new (cold, faulting) landing region per
         # request; otherwise all requests share one warm region
-        slot = i if spec.fresh_dst else 0
+        slot = key if spec.fresh_dst else 0
         dst_va = DST_BASE + spec.pd * TENANT_STRIDE + slot * REQUEST_STRIDE
         src = self.domain.register_memory(spec.src_node, src_va, size,
                                           prep=spec.src_prep)
         dst = (self._mrs[0][1] if not spec.fresh_dst and self._mrs
                else self.domain.register_memory(spec.dst_node, dst_va,
                                                 size, prep=spec.dst_prep))
-        self._mrs[i] = (src, dst)
+        self._mrs[key] = (src, dst)
         self.regions.append((spec.src_node, spec.pd, src_va >> 12,
                              A.num_pages(src_va, size)))
         self.regions.append((spec.dst_node, spec.pd, dst_va >> 12,
                              A.num_pages(dst_va, size)))
-        return self._mrs[i]
+        return self._mrs[key]
 
     def _try_post(self, reschedule_on_reject: bool = False) -> None:
         if self.next_req >= self.spec.n_requests:
@@ -223,6 +236,93 @@ class TenantRun:
             "latency_max_us": round(lat[-1], 6) if lat else 0.0,
             **agg,
         }
+
+
+def scale_mix(n_nodes: int,
+              total_blocks: int = 1_000_000,
+              hot_node: int = 0,
+              hot_blocks: int = 2 * A.TR_ID_SPACE + 4096,
+              request_bytes: int = 256 * 1024,
+              fault_requests: int = 256,
+              inflight: int = 4) -> list[TenantSpec]:
+    """The scale-soak tenant layout: ``n_nodes`` tenants driving
+    ``total_blocks`` 16 KB blocks through the fabric, with ``hot_node``
+    concentrated enough to wrap its 14-bit tr_ID space at least twice.
+
+    * one *ring* tenant per node ``k`` (pd ``k``, nodes ``{k, k+1}``):
+      closed-loop clean writes over ``region_slots`` reused regions —
+      the bulk of the block count, spread across every link;
+    * a *hot* clean tenant on ``hot_node`` sized to ``hot_blocks``
+      launches (>= 2 wraps plus the ring share), and a *hot faulting*
+      tenant (fresh cold destinations, ``fault_requests`` requests) so
+      NACK/RAPF/FIFO recovery is exercised before, across and after the
+      wrap boundary.
+
+    Domains are node-scoped (``open_on``), so SMMU context banks
+    (pd % 16) stay collision-free: tenants 16 apart never share a node
+    for ``n_nodes > 17``, and the hot pds are chosen off the banks used
+    on their two nodes.
+    """
+    if n_nodes < 18:
+        raise ValueError(f"scale_mix needs >= 18 nodes for bank-collision-"
+                         f"free pd assignment, got {n_nodes}")
+    blocks_per_request = request_bytes // A.BLOCK_SIZE
+    specs: list[TenantSpec] = []
+    # hot tenants: node hot_node -> hot_node + 8 (several routed hops on a
+    # torus).  pd banks: ring pds on those nodes are {hot, hot+8} and their
+    # predecessors {hot-1, hot+7}; +2/+3 off those banks mod 16.
+    hot_pd = n_nodes + 2
+    hot_dst = (hot_node + 8) % n_nodes
+    used_banks = {hot_node % 16, (hot_node - 1) % 16, hot_dst % 16,
+                  (hot_dst - 1) % 16}
+    while hot_pd % 16 in used_banks:
+        hot_pd += 1
+    hot_fault_pd = hot_pd + 1
+    while hot_fault_pd % 16 in used_banks or hot_fault_pd % 16 == hot_pd % 16:
+        hot_fault_pd += 1
+    fault_blocks = fault_requests * (65536 // A.BLOCK_SIZE)
+    hot_clean_requests = max(1, (hot_blocks - fault_blocks)
+                             // blocks_per_request)
+    specs.append(TenantSpec(
+        pd=hot_pd, name="hot-wrap", mode="closed", inflight=inflight,
+        n_requests=hot_clean_requests, size_choices=(request_bytes,),
+        src_prep=BufferPrep.TOUCHED, dst_prep=BufferPrep.TOUCHED,
+        fresh_dst=False, region_slots=4,
+        src_node=hot_node, dst_node=hot_dst,
+        open_on=(hot_node, hot_dst)))
+    specs.append(TenantSpec(
+        pd=hot_fault_pd, name="hot-fault", mode="closed", inflight=2,
+        n_requests=fault_requests, size_choices=(65536,),
+        src_prep=BufferPrep.TOUCHED, dst_prep=BufferPrep.FAULTING,
+        fresh_dst=True,
+        src_node=hot_node, dst_node=hot_dst,
+        open_on=(hot_node, hot_dst)))
+    # ring tenants carry the remaining block budget evenly (rounded UP:
+    # the tier's contract is ">= total_blocks", never a few short)
+    ring_blocks = max(0, total_blocks - hot_blocks)
+    ring_requests = -(-ring_blocks // (n_nodes * blocks_per_request))
+    for k in range(n_nodes):
+        if ring_requests <= 0:
+            break
+        specs.append(TenantSpec(
+            pd=k, name=f"ring{k}", mode="closed", inflight=inflight,
+            n_requests=ring_requests, size_choices=(request_bytes,),
+            src_prep=BufferPrep.TOUCHED, dst_prep=BufferPrep.TOUCHED,
+            fresh_dst=False, region_slots=4,
+            src_node=k, dst_node=(k + 1) % n_nodes,
+            open_on=(k, (k + 1) % n_nodes)))
+    # SMMU context banks (pd % 16) must be unique per node
+    banks: dict[tuple[int, int], int] = {}
+    for s in specs:
+        for node in s.open_on:
+            key = (node, s.pd % 16)
+            if key in banks:
+                raise ValueError(
+                    f"scale_mix bank collision on node {node}: pd {s.pd} "
+                    f"and pd {banks[key]} share SMMU bank {s.pd % 16} "
+                    f"(pick an n_nodes with (n_nodes - 1) % 16 != 0)")
+            banks[key] = s.pd
+    return specs
 
 
 def schedule_injection(fabric: Fabric, runs: list[TenantRun],

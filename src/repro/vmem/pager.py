@@ -342,12 +342,18 @@ class Pager:
 
     def pin(self, space: AddressSpace, vpages,
             victims: Optional[Sequence[AddressSpace]] = None) -> None:
-        """Page in and pin; enforces the FaultPolicy pin budget."""
+        """Page in and pin; enforces the FaultPolicy pin budget.
+
+        Duplicate vpages pin (and charge ``pin_us`` for) one page, not
+        one per occurrence: the budget check counts *distinct* new pins,
+        so ``pin([v, v])`` with one page of headroom succeeds.
+        """
         vp = np.atleast_1d(vpages)
+        uniq = list(dict.fromkeys(map(int, vp)))   # dedup, order-preserving
         pol = self.policy_of(space)
         if pol.pin_limit_bytes is not None:
             would = (int(space.pinned.sum())
-                     + sum(1 for v in vp if not space.pinned[v]))
+                     + sum(1 for v in uniq if not space.pinned[v]))
             if would * self.page_bytes > pol.pin_limit_bytes:
                 self._acct(space, pin_violations=1)
                 raise MemoryError(
@@ -355,18 +361,19 @@ class Pager:
                     f"{self.page_bytes} B > pin_limit_bytes="
                     f"{pol.pin_limit_bytes} (tenant {space.name!r})")
         self._tick()
-        for v in map(int, vp):
+        for v in uniq:
             self._map_page(space, v, victims)
             space.pinned[v] = True
         self._acct(space,
-                   simulated_us=self.cost.pin_us(len(vp) * self.page_bytes))
+                   simulated_us=self.cost.pin_us(len(uniq) * self.page_bytes))
 
     def unpin(self, space: AddressSpace, vpages) -> None:
         vp = np.atleast_1d(vpages)
-        for v in map(int, vp):
+        uniq = list(dict.fromkeys(map(int, vp)))
+        for v in uniq:
             space.pinned[v] = False
         self._acct(space, simulated_us=self.cost.unpin_us(
-            len(vp) * self.page_bytes))
+            len(uniq) * self.page_bytes))
 
 
 def _runs(pages: Sequence[int]) -> list[tuple[int, int]]:

@@ -1,0 +1,396 @@
+"""tr_ID/seq_num wraparound regression suite (ISSUE-5 tentpole).
+
+The wire protocol's 14-bit tr_ID (Table 3.2) makes ID reuse a protocol
+property: these tests pin the free-list allocator (recycle ONLY on
+completion), the host-side generation tags that keep RAPF matching and
+driver dedup correct across incarnations, the O(1) per-(pd, vpn) fault
+index, typed TrIdExhausted backpressure, and the satellite fixes
+(completion-timestamp skew, phantom-timeout accounting, pin dedup).
+
+Most tests shrink the ID space via ``FabricConfig.tr_id_space`` — a
+host-side scale-model knob; the wire encoding is untouched — so wraps
+happen in milliseconds.  One test drives a genuine >2^14-block wrap
+through a node while an early block sits paused across the boundary.
+"""
+
+import numpy as np
+import pytest
+
+from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                       Strategy, TrIdExhausted, WorkQueueFull, WROpcode)
+from repro.core import addresses as A
+from repro.core.addresses import RAPFMessage
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.core.fault_fifo import FaultFIFO, FIFOEntry
+from repro.core.resolver import DriverDedupCache
+from repro.testing import (FaultInjection, TenantSpec,
+                           check_tr_id_lifecycle, soak)
+
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+UNMAPPED_DST = 0x66_0000_0000
+
+
+def make_fabric(**kw):
+    return Fabric.build(FabricConfig(n_nodes=2, **kw))
+
+
+def paused_write(fab, pd, nbytes=4096, src=SRC):
+    """A write whose destination VA is never mmap'd: every round NACKs,
+    the Touch-A-Page resolver SEGFAULTs (recovered), the block pauses and
+    retries on timeout forever — its tr_ID stays pending indefinitely."""
+    dom = fab.domains[pd]
+    mr = dom.register_memory(0, src, nbytes, prep=BufferPrep.TOUCHED)
+    cq = fab.create_cq()
+    cq.on_post()
+    t = fab._start_write(pd, 0, src, 1, UNMAPPED_DST, nbytes)
+    return fab._track(fab._next_wr_id(), WROpcode.WRITE, cq, t), mr
+
+
+class TestFullSpaceWrap:
+    """The honest >2^14-block test: no shrunken ID space."""
+
+    @pytest.mark.slow
+    def test_paused_block_survives_wrap_and_no_aliasing(self):
+        fab = make_fabric(default_policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        fab.open_domain(1)
+        fab.open_domain(2)
+        # tenant A: one block that pauses (unmapped dst) and holds its
+        # early tr_ID across the whole wrap
+        wr_a, _ = paused_write(fab, pd=1)
+        fab.progress(until=5_000.0)
+        r5 = fab.nodes[0].r5
+        a_block = wr_a.transfer.blocks[0]
+        assert a_block.tr_id >= 0 and r5.pending[a_block.tr_id] is a_block
+        assert wr_a.stats.dst_faults > 0         # it faulted and paused
+
+        # tenant B: >2^14 clean blocks through the same node.  On the
+        # seed, launch 16384 + a_block.tr_id would alias A's pending
+        # entry and orphan the paused block forever.
+        dom_b = fab.domains[2]
+        cq = fab.create_cq(depth=512)
+        blocks_per_wr = 256                       # 4 MB -> 256 blocks
+        n_wr = (A.TR_ID_SPACE // blocks_per_wr) + 2       # 16.9k blocks
+        for i in range(n_wr):
+            size = blocks_per_wr * A.BLOCK_SIZE
+            s = dom_b.register_memory(0, SRC + 0x1000_0000 + i * 0x80_0000,
+                                      size, prep=BufferPrep.TOUCHED)
+            d = dom_b.register_memory(1, DST + 0x1000_0000 + i * 0x80_0000,
+                                      size, prep=BufferPrep.TOUCHED)
+            wc = dom_b.post_write(s, d, cq=cq).result(deadline_us=1e9)
+            assert wc.stats.retransmissions == 0
+        st = r5.id_stats
+        assert st.fresh == A.TR_ID_SPACE          # full space issued once
+        assert st.allocated > A.TR_ID_SPACE       # and wrapped
+        assert st.recycled == st.allocated - st.fresh
+        assert st.wraps >= 1
+        # A's ID was never recycled out from under the paused block
+        assert r5.pending.get(a_block.tr_id) is a_block
+        assert a_block.tr_id not in list(r5._free)
+
+        # resolve A: map the destination, then displace A's entry from
+        # the driver's last-2 dedup cache with an unrelated faulting
+        # write (as real mixed traffic would) so the next NACK round is
+        # handled, touched in, RAPF'd — and the transfer lands
+        fab.nodes[1].pt(1).mmap(UNMAPPED_DST, 4096)
+        for j in range(2):                       # 2 keys evict A's from
+            s = dom_b.register_memory(0, SRC + 0x7000_0000 + j * 0x100000,
+                                      4096, prep=BufferPrep.TOUCHED)
+            d = dom_b.register_memory(1, DST + 0x7000_0000 + j * 0x100000,
+                                      4096, prep=BufferPrep.FAULTING)
+            dom_b.post_write(s, d, cq=cq).result(deadline_us=1e7)
+        wc_a = wr_a.result(deadline_us=1e7)
+        assert wc_a.stats.rapf_retransmits >= 1
+        assert r5.pending == {}
+        assert check_tr_id_lifecycle(fab) == []
+
+
+class TestShrunkenSpace:
+    def test_exhaustion_defers_and_conserves(self):
+        """Launches beyond the ID space defer (FIFO) and drain to
+        completion as IDs free — nothing lost, nothing duplicated."""
+        fab = make_fabric(tr_id_space=4)
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        wrs = []
+        for i in range(3):                       # 3 x 4 blocks, 4 IDs
+            s = dom.register_memory(0, SRC + i * 0x100000, 65536,
+                                    prep=BufferPrep.TOUCHED)
+            d = dom.register_memory(1, DST + i * 0x100000, 65536,
+                                    prep=BufferPrep.TOUCHED)
+            wrs.append(dom.post_write(s, d, cq=cq))
+        for wr in wrs:
+            wr.result(deadline_us=1e7)
+        st = fab.nodes[0].r5.id_stats
+        assert st.stalls > 0                     # deferral really happened
+        assert st.max_in_flight <= 4
+        assert st.recycled > 0
+        assert check_tr_id_lifecycle(fab) == []
+
+    def test_deferred_launch_redeemed_fifo_before_self_refill(self):
+        """A freed ID goes to the earlier-deferred tenant, not straight
+        back to the completing transfer's own next block — deferral
+        tickets are redeemed in launch order."""
+        fab = make_fabric(tr_id_space=2)
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        big_s = dom.register_memory(0, SRC, 16 * A.BLOCK_SIZE,
+                                    prep=BufferPrep.TOUCHED)
+        big_d = dom.register_memory(1, DST, 16 * A.BLOCK_SIZE,
+                                    prep=BufferPrep.TOUCHED)
+        wr_a = dom.post_write(big_s, big_d, cq=cq)   # claims both IDs
+        s = dom.register_memory(0, SRC + 0x100000, 4096,
+                                prep=BufferPrep.TOUCHED)
+        d = dom.register_memory(1, DST + 0x100000, 4096,
+                                prep=BufferPrep.TOUCHED)
+        wr_b = dom.post_write(s, d, cq=cq)           # launch defers
+        wr_b.result(deadline_us=1e6)
+        assert not wr_a.done          # B overtook A's remaining backlog
+        assert fab.nodes[0].r5.id_stats.stalls >= 1
+        wr_a.result(deadline_us=1e7)
+        assert check_tr_id_lifecycle(fab) == []
+
+    def test_post_raises_typed_trid_exhausted(self):
+        fab = make_fabric(tr_id_space=2,
+                          default_policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        dom = fab.open_domain(1)
+        paused_write(fab, 1, src=SRC)
+        paused_write(fab, 1, src=SRC + 0x100000)
+        fab.progress(until=3_000.0)              # both IDs now pending
+        assert fab.nodes[0].r5.tr_ids_free() == 0
+        s = dom.register_memory(0, SRC + 0x200000, 4096,
+                                prep=BufferPrep.TOUCHED)
+        d = dom.register_memory(1, DST + 0x200000, 4096,
+                                prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        with pytest.raises(TrIdExhausted) as ei:
+            dom.post_write(s, d, cq=cq)
+        assert isinstance(ei.value, WorkQueueFull)   # generic backpressure
+        assert fab.nodes[0].r5.id_stats.exhausted_posts == 1
+
+    def test_stale_rapf_generation_dropped(self):
+        """A RAPF addressed to a previous incarnation of a recycled tr_ID
+        must not retransmit the block that inherited the ID."""
+        fab = make_fabric(tr_id_space=1,
+                          default_policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        dom = fab.open_domain(1)
+        # incarnation 1: completes cleanly, recycling ID 0
+        s = dom.register_memory(0, SRC, 4096, prep=BufferPrep.TOUCHED)
+        d = dom.register_memory(1, DST, 4096, prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        dom.post_write(s, d, cq=cq).result(deadline_us=1e7)
+        # incarnation 2: pends forever on ID 0
+        wr2, _ = paused_write(fab, 1, src=SRC + 0x100000)
+        fab.progress(until=8_000.0)
+        r5 = fab.nodes[0].r5
+        block = wr2.transfer.blocks[0]
+        assert block.tr_id == 0 and block.gen == 2
+        before = wr2.stats.rapf_retransmits
+        msg = RAPFMessage(wired_pdid=1, rcved_pdid=1, tr_id=0, seq_num=0)
+        r5.on_mailbox(msg, None, gen=1)          # stale incarnation
+        fab.progress(until=fab.now + 10.0)
+        assert wr2.stats.rapf_retransmits == before
+        assert r5.id_stats.stale_rapf_drops == 1
+        r5.on_mailbox(msg, None, gen=2)          # current incarnation
+        fab.progress(until=fab.now + 10.0)
+        assert wr2.stats.rapf_retransmits == before + 1
+        # untagged RAPFs (legacy/forged path) still pass the gen check
+        r5.on_mailbox(msg, None)
+        fab.progress(until=fab.now + 10.0)
+        assert wr2.stats.rapf_retransmits == before + 2
+
+    def test_wrapped_soak_with_faults_and_churn_holds_invariants(self):
+        """Recycled-ID regime under fault storms + reclaim churn: every
+        soak invariant (conservation, arbiter, tr_id lifecycle) holds and
+        the run is seed-deterministic."""
+        tenants = [
+            TenantSpec(pd=1, name="fault", mode="closed", inflight=3,
+                       n_requests=24, size_choices=(65536,),
+                       dst_prep=BufferPrep.FAULTING, fresh_dst=True),
+            TenantSpec(pd=2, name="clean", mode="closed", inflight=2,
+                       n_requests=24, size_choices=(16384,),
+                       dst_prep=BufferPrep.TOUCHED),
+        ]
+        churn = FaultInjection(khugepaged_period_us=500.0,
+                               reclaim_period_us=700.0, reclaim_pages=8)
+        cfg = FabricConfig(n_nodes=2, tr_id_space=8)
+        a = soak(99, tenants=tenants, config=cfg, injection=churn)
+        assert a.violations == []
+        hot = a.fabric.nodes[0].r5.id_stats
+        assert hot.wraps >= 2 and hot.recycled > 0
+        b = soak(99, tenants=tenants,
+                 config=FabricConfig(n_nodes=2, tr_id_space=8),
+                 injection=churn)
+        assert a.json() == b.json()              # byte-identical
+
+
+class TestSrcFaultIndex:
+    def test_index_matches_linear_scan_mid_flight(self):
+        """The O(1) (pd, vpn) index answers exactly what the seed's
+        O(pending) scan did, at every point of a faulting run."""
+
+        def ref_scan(r5, pd, vpn):
+            for block in r5.pending.values():
+                if block.transfer.pd != pd:
+                    continue
+                first = block.src_va >> 12
+                last = (block.src_va + block.nbytes - 1) >> 12
+                if first <= vpn <= last:
+                    return block
+            return None
+
+        fab = make_fabric()
+        dom1 = fab.open_domain(1)
+        dom2 = fab.open_domain(2)
+        cqs = []
+        for i, dom in enumerate((dom1, dom2, dom1, dom2)):
+            s = dom.register_memory(0, SRC + i * 0x100000, 65536,
+                                    prep=BufferPrep.TOUCHED)
+            d = dom.register_memory(1, DST + i * 0x100000, 65536,
+                                    prep=BufferPrep.FAULTING)
+            cq = fab.create_cq()
+            dom.post_write(s, d, cq=cq)
+            cqs.append(cq)
+        checked = 0
+        while fab.loop.step():
+            if fab.loop.events_processed % 40 == 0:
+                for node in fab.nodes:
+                    r5 = node.r5
+                    for block in r5.pending.values():
+                        pd = block.transfer.pd
+                        first = block.src_va >> 12
+                        last = (block.src_va + block.nbytes - 1) >> 12
+                        for vpn in (first, last, first - 1, last + 1):
+                            assert (r5.find_block_by_src_page(pd, vpn)
+                                    is ref_scan(r5, pd, vpn))
+                            checked += 1
+        assert checked > 100
+        assert check_tr_id_lifecycle(fab) == []
+
+
+class TestIndexNeutrality:
+    def test_soak_byte_identical_with_reference_scan(self, monkeypatch):
+        """The per-(pd, vpn) index is a pure lookup-structure swap: a
+        same-seed soak with the seed's O(pending) linear scan patched
+        back in produces byte-identical stats."""
+        from repro.core.node import R5Scheduler
+
+        def linear_scan(self, pd, vpn):
+            for block in self.pending.values():
+                if block.transfer.pd != pd:
+                    continue
+                first = block.src_va >> 12
+                last = (block.src_va + block.nbytes - 1) >> 12
+                if first <= vpn <= last:
+                    return block
+            return None
+
+        churn = FaultInjection(khugepaged_period_us=600.0,
+                               reclaim_period_us=900.0, reclaim_pages=16)
+        fast = soak(7, injection=churn)
+        monkeypatch.setattr(R5Scheduler, "find_block_by_src_page",
+                            linear_scan)
+        slow = soak(7, injection=churn)
+        assert fast.json() == slow.json()
+        assert fast.violations == []
+
+
+class TestGenerationDedup:
+    def test_fifo_dedup_is_generation_aware(self):
+        fifo = FaultFIFO()
+        e = FIFOEntry(src_id=3, tr_id=0, seq_num=0, pdid=1, iova_field=42)
+        assert fifo.push(e, gen=1)
+        assert not fifo.push(e, gen=1)           # hardware dedup
+        assert fifo.stats.dedup_skips == 1
+        assert fifo.push(e, gen=2)               # new incarnation logs
+        assert fifo.pop_entry() == e
+        assert fifo.last_popped_gen == 1
+        assert fifo.pop_entry() == e
+        assert fifo.last_popped_gen == 2
+
+    def test_fifo_wire_words_unchanged_by_gen(self):
+        """The generation sidecar never reaches the 128-bit entry."""
+        e = FIFOEntry(src_id=5, tr_id=77, seq_num=9, pdid=2, iova_field=7)
+        a, b = FaultFIFO(), FaultFIFO()
+        a.push(e)                                # untagged
+        b.push(e, gen=12345)
+        assert (a.read64(0), a.read64(1)) == (b.read64(0), b.read64(1))
+
+    def test_driver_dedup_cache_distinguishes_incarnations(self):
+        cache = DriverDedupCache()
+        key = (3, 0, 0, 42)
+        cache.note(key + (1,))
+        assert cache.seen(key + (1,))
+        assert not cache.seen(key + (2,))        # fresh incarnation handled
+
+
+class TestSatelliteFixes:
+    def test_completion_callback_runs_at_t_complete(self):
+        """on_complete fires AT stats.t_complete (the status-poll return),
+        not completion_poll_us earlier with a future timestamp."""
+        fab = make_fabric()
+        dom = fab.open_domain(1)
+        s = dom.register_memory(0, SRC, 4096, prep=BufferPrep.TOUCHED)
+        d = dom.register_memory(1, DST, 4096, prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        wr = dom.post_write(s, d, cq=cq)
+        seen = {}
+        inner = wr.transfer.on_complete
+
+        def probe(t):
+            seen["now"] = fab.now
+            seen["t_complete"] = t.stats.t_complete
+            inner(t)
+
+        wr.transfer.on_complete = probe
+        wr.result(deadline_us=1e6)
+        assert seen["now"] == pytest.approx(seen["t_complete"])
+
+    def test_phantom_timeout_accounting(self):
+        """A round that pauses PAUSED_SRC before any packet leaves counts
+        a phantom timeout; its re-dispatch is NOT a retransmission (there
+        was nothing on the wire to re-send).  Total `timeouts` keeps the
+        thesis' Fig 4.6 semantics (every fired R5 timer)."""
+        fab = make_fabric(default_policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        dom = fab.open_domain(1)
+        s = dom.register_memory(0, SRC, 4096, prep=BufferPrep.FAULTING)
+        d = dom.register_memory(1, DST, 4096, prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        wc = dom.post_write(s, d, cq=cq).result(deadline_us=1e7)
+        assert wc.stats.src_faults == 1
+        assert wc.stats.timeouts == 1            # thesis-calibrated count
+        assert wc.stats.phantom_timeouts == 1    # ...but zero-byte round
+        assert wc.stats.retransmissions == 0     # nothing was re-sent
+
+    def test_streamed_round_timeout_not_phantom(self):
+        """Faults beyond the first page stream bytes first: those rounds'
+        timeouts are real and their re-dispatches are retransmissions."""
+        fab = make_fabric(default_policy=FaultPolicy(Strategy.TOUCH_A_PAGE))
+        dom = fab.open_domain(1)
+        # 2 pages: page 0 resident, page 1 faulting at the source
+        pt = fab.nodes[0].pt(1)
+        s = dom.register_memory(0, SRC, 8192, prep=BufferPrep.FAULTING)
+        pt.touch(SRC >> 12)                      # only page 0 resident
+        d = dom.register_memory(1, DST, 8192, prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        wc = dom.post_write(s, d, cq=cq).result(deadline_us=1e7)
+        assert wc.stats.timeouts == 1
+        assert wc.stats.phantom_timeouts == 0    # page 0 hit the wire
+        assert wc.stats.retransmissions == 1
+
+    def test_pin_duplicates_counted_once(self):
+        from repro.vmem import HostFramePool, Pager
+        pool = HostFramePool(4, 8)
+        pager = Pager(pool, policy=FaultPolicy(
+            Strategy.TOUCH_A_PAGE, pin_limit_bytes=1 * 4096))
+        sp = pager.create_space(8, name="t")
+        for v in range(8):
+            sp.write(v, np.zeros(8, np.float32))
+        base = pager.stats.simulated_us
+        sp.pin([3, 3])                           # one page of headroom: OK
+        assert bool(sp.pinned[3])
+        charged = pager.stats.simulated_us - base
+        assert charged == pytest.approx(DEFAULT_COST_MODEL.pin_us(4096))
+        assert pager.stats.pin_violations == 0
+        with pytest.raises(MemoryError):
+            sp.pin([4])                          # budget genuinely full
