@@ -1,11 +1,41 @@
-"""Shared benchmark plumbing: CSV emit + claim checks + JSON results."""
+"""Shared benchmark plumbing: CSV emit + claim checks + JSON results,
+plus the ``--backend`` replay flag shared by every sweep driver."""
 
 from __future__ import annotations
 
+import argparse
 import json
 
 CHECKS: list[tuple[str, bool, str]] = []
 RESULTS: dict[str, float] = {}
+
+
+def add_backend_arg(ap: argparse.ArgumentParser) -> argparse.ArgumentParser:
+    """Register ``--backend {rapf,np_rdma,pin,pre_fault}`` on a parser."""
+    from repro.core import experiments
+    ap.add_argument(
+        "--backend", choices=experiments.BACKENDS, default=None,
+        help="replay every sweep under this fault-handling backend "
+             "(default: each figure's own configuration)")
+    return ap
+
+
+def apply_backend(name) -> None:
+    """Make ``name`` the process-wide default backend (no-op on None).
+
+    Claim checks assert the *thesis* datapath's behaviour, so replaying
+    under a different backend demotes check failures to informational
+    lines instead of CI failures.
+    """
+    if name is None:
+        return
+    from repro.core import experiments
+    experiments.set_default_backend(name)
+    global _REPLAY_BACKEND
+    _REPLAY_BACKEND = name if name != "rapf" else None
+
+
+_REPLAY_BACKEND = None
 
 
 def emit(name: str, us_per_call: float, derived: str = "") -> None:
@@ -14,6 +44,11 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 
 def check(claim: str, ok: bool, detail: str = "") -> None:
+    if _REPLAY_BACKEND is not None:
+        # replaying under a non-thesis backend: thesis claims don't apply
+        print(f"# CHECK (info, backend={_REPLAY_BACKEND}) "
+              f"{'PASS' if ok else 'FAIL'}: {claim}  {detail}")
+        return
     CHECKS.append((claim, ok, detail))
     print(f"# CHECK {'PASS' if ok else 'FAIL'}: {claim}  {detail}")
 

@@ -14,9 +14,10 @@ import sys
 
 from benchmarks import (arbiter_qos, fig_2_3_firehose, fig_4_1, fig_4_2,
                         fig_4_3, fig_4_4, fig_4_6, fig_4_7, net_congestion,
-                        scale_soak, table_4_1, thp_study, timeout_sweep,
-                        verbs_async, vmem_remote)
-from benchmarks.common import summary, write_json
+                        npr_compare, scale_soak, table_4_1, thp_study,
+                        timeout_sweep, verbs_async, vmem_remote)
+from benchmarks.common import (add_backend_arg, apply_backend, summary,
+                               write_json)
 
 MODULES = (
     ("Table 4.1 (OS-call overheads)", table_4_1),
@@ -35,6 +36,8 @@ MODULES = (
     ("DMA-arbiter QoS (multi-tenant fault isolation)", arbiter_qos),
     ("Interconnect topology (routed control packets, torus congestion)",
      net_congestion),
+    ("NP-RDMA backend head-to-head (MTT speculation vs RAPF vs pinning)",
+     npr_compare),
     ("Scale soak (64-128 nodes, 1M blocks, tr_id wraparound)", scale_soak),
 )
 
@@ -43,7 +46,9 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write {name: us_per_call} results as JSON")
+    add_backend_arg(ap)
     args = ap.parse_args()
+    apply_backend(args.backend)
     for title, mod in MODULES:
         print(f"\n### {title}")
         mod.main()

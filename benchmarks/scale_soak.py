@@ -52,7 +52,7 @@ def run_tier(n_nodes: int, topology: str, dims: tuple, total_blocks: int,
 
 
 def report(tag: str, result, wall: float) -> dict:
-    launched = sum(s.allocated for s in
+    launched = sum(s.tr_id.allocated for s in
                    result.fabric.protocol_stats().values())
     events = result.stats["events"]
     eps = events / wall if wall > 0 else 0.0
@@ -81,7 +81,7 @@ def main() -> None:
     # ------------------- 64-node torus, >= 1M blocks, >= 2 wraps ---------
     r64, wall64 = run_tier(64, "torus_2d", (8, 8), blocks_64, hot_64)
     m64 = report("64n_torus", r64, wall64)
-    hot = r64.fabric.protocol_stats()[0]
+    hot = r64.fabric.protocol_stats()[0].tr_id
     check("scale: 64-node torus soak completes with ZERO invariant "
           "violations (WR + per-link packet conservation, arbiter, "
           "tr_id lifecycle)", r64.ok, "; ".join(r64.violations[:3]))

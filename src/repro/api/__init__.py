@@ -102,7 +102,37 @@ control at protocol limits)       verbs when every tr_ID is in flight;
                                   internal launches defer FIFO until
                                   completions free IDs
                                   (``TrIdStats.stalls``).
+NP-RDMA MTT cache (competing      ``repro.npr.MTTCache`` — per-domain
+design: NIC-cached VA→PA vs the   VA→PA entries filled host-side and
+SMMU's page-table walks +         invalidated by the same munmap /
+fault FIFO)                       reclaim / khugepaged hooks that feed
+                                  the SMMU path; ``Strategy.NP_RDMA``
+                                  + ``FabricConfig.mtt_entries``.
+NP-RDMA DMA-able pool             ``repro.npr.DMAPool`` — bounded
+(competing design: pre-           pre-registered landing frames
+registered landing frames vs      (``FabricConfig.dma_pool_frames``)
+RAPF's retransmit-into-the-       with watermark-driven re-registration;
+real-buffer)                      sizing is the crossover lever vs RAPF
+                                  (pool dry → 1 ms timeout fallback).
+NP-RDMA speculate / abort /       ``repro.npr.NPREngine`` — launches on
+redirect (competing design: the   cached translations, verifies at the
+thesis instead pauses in the      destination, aborts stale rounds and
+fault FIFO and RAPF-retransmits)  re-issues through the pool; counters
+                                  in ``WorkCompletion.stats`` (``mtt_*``,
+                                  ``npr_aborts``) and
+                                  ``Fabric.protocol_stats()`` →
+                                  ``ProtocolStats.npr``.
 ===============================  ========================================
+
+**When to use which backend** (``benchmarks/npr_compare.py`` measures
+the crossovers): the thesis path (``TOUCH_AHEAD``/``KERNEL_RAPF``) wins
+when destination faults dominate and memory is too tight to dedicate a
+DMA pool — RAPF retransmits need no reserved frames.  ``NP_RDMA`` wins
+when *source* faults occur (host fixup in microseconds vs the thesis'
+1 ms timeout-only recovery) and under warm-cache/THP-churn destination
+regimes with an adequately-provisioned pool (abort+redirect beats the
+retransmit round-trip).  Pinning (``BufferPrep.PINNED``) still wins raw
+transfer latency if you can afford the pin cost and the working set.
 
 Quick tour::
 
@@ -128,12 +158,13 @@ from repro.api.completion import (CompletionQueue, CQStats,
                                   WCStatus, WorkCompletion, WorkQueueFull,
                                   WorkRequest, WROpcode)
 from repro.api.config import FabricConfig
-from repro.api.fabric import Fabric, ProtectionDomain
+from repro.api.fabric import Fabric, ProtectionDomain, ProtocolStats
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import DEFAULT_POLICY, FaultPolicy
 from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
 from repro.core.node import FabricError, TrIdStats
-from repro.core.resolver import Strategy
+from repro.core.resolver import Strategy, coerce_strategy
+from repro.npr.stats import NPRStats
 from repro.net import (FabricStats, LinkStats, Router, Topology,
                        TopologyError, TopologyKind, build_topology)
 
@@ -141,9 +172,10 @@ __all__ = [
     "ArbiterStats", "BufferPrep", "CompletionQueue", "CQStats",
     "DEFAULT_POLICY", "DMAArbiter", "DomainQuotaExceeded", "Fabric",
     "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
-    "LinkStats", "MemoryRegion", "PrepCost", "ProtectionDomain",
-    "RegionError", "Router", "ServiceClass", "Strategy", "Topology",
-    "TopologyError", "TopologyKind", "TrIdExhausted", "TrIdStats",
-    "WCStatus", "WorkCompletion", "WorkQueueFull", "WorkRequest",
-    "WROpcode", "build_topology",
+    "LinkStats", "MemoryRegion", "NPRStats", "PrepCost",
+    "ProtectionDomain", "ProtocolStats", "RegionError", "Router",
+    "ServiceClass", "Strategy", "Topology", "TopologyError",
+    "TopologyKind", "TrIdExhausted", "TrIdStats", "WCStatus",
+    "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
+    "build_topology", "coerce_strategy",
 ]

@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
-from repro.core.addresses import BLOCK_SIZE, TR_ID_SPACE
+from repro.core.addresses import BLOCK_SIZE, PAGES_PER_BLOCK, TR_ID_SPACE
 from repro.core.arbiter import DEFAULT_PLDMA_SLOTS
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
 from repro.core.fault import FaultModel
@@ -61,6 +61,12 @@ class FabricConfig:
       scale-model knob: shrinking it makes ID exhaustion and recycling
       reachable in seconds for tests, while the wire encoding stays
       bit-exact (every allocated ID still fits the 14-bit field).
+    * ``mtt_entries`` / ``dma_pool_frames`` / ``speculation`` — the
+      NP-RDMA backend (``repro.npr``, selected per domain via
+      ``FaultPolicy(strategy=Strategy.NP_RDMA)``): memory-translation-
+      table capacity, pre-registered DMA-able pool frames per node, and
+      whether transfers launch speculatively on cached translations
+      (``False`` = bounce-buffer mode: every block lands in the pool).
     """
 
     n_nodes: int = 2
@@ -77,6 +83,9 @@ class FabricConfig:
     pldma_slots: int = DEFAULT_PLDMA_SLOTS
     arb_quantum_bytes: int = BLOCK_SIZE
     tr_id_space: Optional[int] = None
+    mtt_entries: int = 4096
+    dma_pool_frames: int = 64
+    speculation: bool = True
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
@@ -89,6 +98,14 @@ class FabricConfig:
             raise ValueError(
                 f"tr_id_space must be in [1, {TR_ID_SPACE}] (the 14-bit "
                 f"tr_ID wire field), got {self.tr_id_space}")
+        if self.mtt_entries < 1:
+            raise ValueError(
+                f"mtt_entries must be >= 1, got {self.mtt_entries}")
+        if self.dma_pool_frames < PAGES_PER_BLOCK:
+            raise ValueError(
+                f"dma_pool_frames must be >= {PAGES_PER_BLOCK} (one 16 KB "
+                f"block of 4 KB pages, or a redirected block could never "
+                f"reserve its landing frames), got {self.dma_pool_frames}")
         self.topology = coerce_kind(self.topology)
         if self.hops < 1:
             raise ValueError(f"hops must be >= 1, got {self.hops}")

@@ -16,6 +16,7 @@ Data-path verbs live on the domain: ``register_memory`` returns
 
 from __future__ import annotations
 
+import dataclasses
 from typing import Optional
 
 from repro.core import addresses as A
@@ -23,6 +24,7 @@ from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.core.node import FabricError, Node, Transfer, TrIdStats
 from repro.core.pagetable import FrameAllocator
 from repro.core.simulator import EventLoop
+from repro.npr.stats import NPRStats
 from repro.net.interconnect import FabricStats, Interconnect
 from repro.api.completion import (CompletionQueue, DomainQuotaExceeded,
                                   TrIdExhausted, WCStatus, WorkCompletion,
@@ -30,6 +32,19 @@ from repro.api.completion import (CompletionQueue, DomainQuotaExceeded,
 from repro.api.config import FabricConfig
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import FaultPolicy
+
+
+@dataclasses.dataclass
+class ProtocolStats:
+    """One node's protocol telemetry, both datapaths side by side:
+    the 14-bit tr_ID lifecycle (:class:`~repro.core.node.TrIdStats`)
+    and the NP-RDMA backend (:class:`~repro.npr.stats.NPRStats`)."""
+
+    tr_id: TrIdStats
+    npr: NPRStats
+
+    def as_dict(self) -> dict:
+        return {"tr_id": self.tr_id.as_dict(), "npr": self.npr.as_dict()}
 
 
 class ProtectionDomain:
@@ -200,7 +215,10 @@ class Fabric:
                         hupcf=config.hupcf, fault_model=config.fault_model,
                         pldma_slots=config.pldma_slots,
                         arb_quantum_bytes=config.arb_quantum_bytes,
-                        tr_id_space=config.tr_id_space)
+                        tr_id_space=config.tr_id_space,
+                        mtt_entries=config.mtt_entries,
+                        dma_pool_frames=config.dma_pool_frames,
+                        speculation=config.speculation)
             self.nodes.append(node)
         # the routed interconnect: per-direction links along the physical
         # adjacencies of config.topology (ALL_TO_ALL keeps the seed's
@@ -303,14 +321,19 @@ class Fabric:
         return self.interconnect.stats()
 
     def protocol_stats(self) -> dict:
-        """Per-node tr_ID-lifecycle telemetry: ``{node_id: TrIdStats}``.
+        """Per-node protocol telemetry: ``{node_id: ProtocolStats}``.
 
-        Allocation/recycle/wrap counts, exhaustion backpressure events and
-        stale-control drops (generation mismatches) — the observability
-        surface the scale soak and the wraparound regression tests assert
-        against.
+        ``.tr_id`` — the tr_ID lifecycle (allocation/recycle/wrap counts,
+        exhaustion backpressure, stale-control drops): the surface the
+        scale soak and the wraparound regression tests assert against.
+        ``.npr`` — the NP-RDMA backend (MTT hit/miss/stale, aborts,
+        redirects, pool occupancy), all-zero unless a domain selected
+        ``Strategy.NP_RDMA``.  Both are real fields — no getattr
+        fallbacks — so stats consumers fail loudly if a section moves.
         """
-        return {n.node_id: n.r5.id_stats for n in self.nodes}
+        return {n.node_id: ProtocolStats(tr_id=n.r5.id_stats,
+                                         npr=n.npr.stats)
+                for n in self.nodes}
 
     def link_stats(self, src_node: int, dst_node: int):
         """One directed physical link's :class:`~repro.net.link.LinkStats`.

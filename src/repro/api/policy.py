@@ -17,7 +17,7 @@ from typing import Optional
 from repro.core.addresses import PAGES_PER_BLOCK
 from repro.core.arbiter import ServiceClass
 from repro.core.costmodel import CostModel
-from repro.core.resolver import Resolver, Strategy
+from repro.core.resolver import Resolver, Strategy, coerce_strategy
 
 
 @dataclasses.dataclass(frozen=True)
@@ -25,8 +25,12 @@ class FaultPolicy:
     """How one protection domain's page faults are resolved — and how its
     DMA traffic is scheduled while they are being resolved.
 
-    * ``strategy`` — the thesis resolution strategy (Touch-A-Page,
-      Touch-Ahead, ...; see :class:`~repro.core.resolver.Strategy`).
+    * ``strategy`` — the fault-handling datapath: a thesis resolution
+      strategy (Touch-A-Page, Touch-Ahead, ...) or ``NP_RDMA`` (the
+      ``repro.npr`` no-pinning backend); see
+      :class:`~repro.core.resolver.Strategy`.  A member, its name or its
+      value is accepted; anything else raises ``ValueError`` naming the
+      valid members.
     * ``lookahead`` — pages paged in per fault event for the
       ``TOUCH_AHEAD_N`` / ``STREAM`` strategies.
     * ``pin_limit_bytes`` — the domain's pinnable-memory budget M (the
@@ -49,6 +53,11 @@ class FaultPolicy:
     service_class: Optional[ServiceClass] = None
     arb_weight: int = 1
     max_outstanding_blocks: Optional[int] = None
+
+    def __post_init__(self) -> None:
+        # strict: an unknown strategy spelling used to slip through here
+        # and surface later as an opaque error deep in resolver dispatch
+        object.__setattr__(self, "strategy", coerce_strategy(self.strategy))
 
     def make_resolver(self, cost: CostModel) -> Resolver:
         """Instantiate the resolver this policy describes."""

@@ -98,6 +98,13 @@ class CostModel:
     # --- major faults (future-work knob in the paper; off by default) ------
     major_fault_extra_us: float = 150.0         # NVMe-class page-in
 
+    # --- NP-RDMA backend (repro.npr; arXiv 2310.11062 scale) ---------------
+    mtt_fill_us: float = 0.3                    # host installs one MTT entry
+    npr_abort_ctrl_us: float = 0.3              # abort control message build
+    npr_fixup_base_us: float = 1.5              # host fix-up handler entry
+    pool_copy_page_us: float = 0.9              # pool frame -> app page copy
+    pool_refill_us: float = 6.0                 # re-register a retired batch
+
     # ------------------------------------------------------------------ OS
     def mmap_us(self, nbytes: int) -> float:
         return _interp("mmap", nbytes)

@@ -30,6 +30,49 @@ SIZES = (16, 64, 256, 1024, 4096, 16384, 32768, 65536)
 SRC_BASE = 0x10_0000_0000
 DST_BASE = 0x20_0000_0000
 
+#: fault-handling backends a sweep can be replayed under (``--backend``):
+#: * ``rapf``      — the thesis datapath with whatever strategy the sweep
+#:                   configured (SMMU faults + RAPF/timeout retransmission);
+#: * ``np_rdma``   — the ``repro.npr`` no-pinning backend (MTT speculation
+#:                   + DMA-pool abort-and-redirect);
+#: * ``pin``       — pin every buffer up front (no faults; pin cost charged);
+#: * ``pre_fault`` — pre-touch every buffer (no faults; touch cost charged).
+BACKENDS = ("rapf", "np_rdma", "pin", "pre_fault")
+
+_default_backend = "rapf"
+
+
+def set_default_backend(name: str) -> None:
+    """Set the process-wide default backend every sweep inherits (the
+    ``--backend`` flag of ``benchmarks/run.py``; per-file edits stay
+    unnecessary because :func:`run_remote_write` consults this)."""
+    global _default_backend
+    if name not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {name!r}; valid backends: {', '.join(BACKENDS)}")
+    _default_backend = name
+
+
+def default_backend() -> str:
+    return _default_backend
+
+
+def _apply_backend(backend: Optional[str], src_prep: BufferPrep,
+                   dst_prep: BufferPrep, strategy: Strategy):
+    """Resolve a backend name into (src_prep, dst_prep, strategy)."""
+    backend = backend or _default_backend
+    if backend not in BACKENDS:
+        raise ValueError(
+            f"unknown backend {backend!r}; valid backends: "
+            f"{', '.join(BACKENDS)}")
+    if backend == "np_rdma":
+        strategy = Strategy.NP_RDMA
+    elif backend == "pin":
+        src_prep = dst_prep = BufferPrep.PINNED
+    elif backend == "pre_fault":
+        src_prep = dst_prep = BufferPrep.TOUCHED
+    return src_prep, dst_prep, strategy
+
 
 @dataclasses.dataclass
 class RunResult:
@@ -47,14 +90,27 @@ def run_remote_write(size: int,
                      cost: Optional[CostModel] = None,
                      n_nodes: int = 1,
                      lookahead: int = A.PAGES_PER_BLOCK,
-                     hupcf: bool = True) -> RunResult:
-    """One remote write with the given buffer preparation, to completion."""
+                     hupcf: bool = True,
+                     backend: Optional[str] = None,
+                     config_overrides: Optional[dict] = None) -> RunResult:
+    """One remote write with the given buffer preparation, to completion.
+
+    ``backend`` (default: the process-wide :func:`default_backend`)
+    replays the run under a different fault-handling datapath — see
+    :data:`BACKENDS`.  ``config_overrides`` merges extra
+    :class:`FabricConfig` kwargs (e.g. ``dma_pool_frames``,
+    ``speculation``) for backend-sizing studies.
+    """
     if cost is None:
         cost = (cost_model_with_timeout(timeout_us) if timeout_us is not None
                 else DEFAULT_COST_MODEL)
-    fabric = Fabric.build(FabricConfig(
+    src_prep, dst_prep, strategy = _apply_backend(
+        backend, src_prep, dst_prep, strategy)
+    cfg_kw = dict(
         n_nodes=max(1, n_nodes), cost=cost, hupcf=hupcf,
-        default_policy=FaultPolicy(strategy=strategy, lookahead=lookahead)))
+        default_policy=FaultPolicy(strategy=strategy, lookahead=lookahead))
+    cfg_kw.update(config_overrides or {})
+    fabric = Fabric.build(FabricConfig(**cfg_kw))
     dst_node = 0 if n_nodes <= 1 else 1
     dom = fabric.open_domain(1)
     src = dom.register_memory(0, SRC_BASE, size, prep=src_prep)

@@ -94,6 +94,7 @@ class TrIdStats:
     max_in_flight: int = 0       # high-water mark of the above
     stale_rapf_drops: int = 0    # RAPFs for a previous incarnation dropped
     stale_fifo_entries: int = 0  # FIFO entries outliving their incarnation
+    stale_npr_aborts: int = 0    # NP-RDMA aborts for a dead incarnation/round
 
     @property
     def wraps(self) -> int:
@@ -109,6 +110,7 @@ class TrIdStats:
             "max_in_flight": self.max_in_flight, "wraps": self.wraps,
             "stale_rapf_drops": self.stale_rapf_drops,
             "stale_fifo_entries": self.stale_fifo_entries,
+            "stale_npr_aborts": self.stale_npr_aborts,
         }
 
 
@@ -129,6 +131,12 @@ class TransferStats:
     fifo_entries_skipped: int = 0
     segfaults_recovered: int = 0
     major_faults: int = 0
+    # NP-RDMA backend (repro.npr) — zero for thesis-datapath transfers
+    mtt_hits: int = 0
+    mtt_misses: int = 0
+    mtt_stale: int = 0
+    npr_aborts: int = 0
+    pool_redirect_pages: int = 0
 
     @property
     def latency_us(self) -> float:
@@ -140,7 +148,7 @@ class Block:
                  "gen", "seq_num", "state", "attempts", "round_id",
                  "delivered", "nacked_round", "timeout_event", "n_pages",
                  "wire_bytes", "service_class", "queued", "holds_slot",
-                 "grant_pending", "is_retransmit")
+                 "grant_pending", "is_retransmit", "npr_redirect")
 
     def __init__(self, transfer: "Transfer", index: int, src_va: int,
                  dst_va: int, nbytes: int):
@@ -166,6 +174,8 @@ class Block:
         self.holds_slot = False      # occupying a PLDMA slot
         self.grant_pending = False   # slot granted, _dispatch not yet run
         self.is_retransmit = False
+        # NP-RDMA: an abort redirected this block into the DMA pool
+        self.npr_redirect = False
 
 
 class Transfer:
@@ -206,7 +216,10 @@ class Node:
                  fault_model: FaultModel = FaultModel.TERMINATE,
                  pldma_slots: int = DEFAULT_PLDMA_SLOTS,
                  arb_quantum_bytes: int = A.BLOCK_SIZE,
-                 tr_id_space: Optional[int] = None):
+                 tr_id_space: Optional[int] = None,
+                 mtt_entries: int = 4096,
+                 dma_pool_frames: int = 64,
+                 speculation: bool = True):
         self.loop = loop
         self.cost = cost
         self.node_id = node_id
@@ -231,6 +244,13 @@ class Node:
         # data pages AND control packets — travels through
         self.interconnect: Optional[Interconnect] = None
         self.peer: dict[int, "Node"] = {}
+        # NP-RDMA backend (competing datapath; engages only for domains
+        # whose FaultPolicy selects Strategy.NP_RDMA).  Function-level
+        # import: repro.npr.engine imports this module at its top level.
+        from repro.npr.engine import NPREngine
+        self.npr = NPREngine(self, mtt_entries=mtt_entries,
+                             dma_pool_frames=dma_pool_frames,
+                             speculation=speculation)
         # demo/bench hook: blocks by (pd, src vpn) for source-fault attribution
         self.netlink_log: list[NetlinkMessage] = []
 
@@ -262,6 +282,10 @@ class Node:
         self.page_tables[pd] = pt
         if resolver is not None:
             self.domain_resolvers[pd] = resolver
+        if self.resolver_for(pd).strategy is Strategy.NP_RDMA:
+            # the domain's traffic goes through the NP-RDMA datapath:
+            # MTT-translated sends, verified receives, pool redirects
+            self.npr.register_domain(pd, pt)
         self.arbiter.register_domain(
             pd, service_class=service_class, weight=arb_weight,
             max_outstanding_blocks=max_outstanding_blocks)
@@ -460,6 +484,11 @@ class Node:
         """
         if block.state is BlockState.DONE or round_id != block.round_id:
             return  # stale packets from a superseded round
+        if self.npr.owns(block):
+            # NP-RDMA domain: host-side verification instead of the SMMU
+            # translate -> NACK -> fault-FIFO path
+            self.npr.recv_page(block, page_idx, round_id, nbytes)
+            return
         # two outstanding blocks streaming together -> their NACK packets
         # interleave and defeat the FIFO's consecutive-dedup (§ Fig 4.2).
         # live_blocks counts this transfer's IN_FLIGHT/PAUSED_* blocks —
@@ -673,6 +702,13 @@ class R5Scheduler:
         # LATENCY blocks overtake BULK backlogs on congested shared hops
         latency_class = (block.service_class is not None
                          and block.service_class.wire_priority)
+        if node.npr.owns(block):
+            # NP-RDMA domain: the engine translates through its MTT (and
+            # fixes source misses up host-side) instead of the SMMU loop
+            # below; the R5 timeout stays armed as the common backstop
+            node.npr.dispatch(block, path, latency_class)
+            self._arm_timeout(block)
+            return
         for i, vpn in enumerate(src_pages):
             res = node.smmu.translate(bank, vpn, Access.READ)
             if res.disposition is not Disposition.OK:
@@ -779,6 +815,25 @@ class R5Scheduler:
         if msg.wired_pdid != block.transfer.pd:
             return  # security check: wired PDID mismatch
         block.transfer.stats.rapf_retransmits += 1
+        if block.timeout_event is not None:
+            block.timeout_event.cancel()
+        self.node.arbiter.requeue(block)
+
+    def on_npr_abort(self, tr_id: int, gen: int, round_id: int) -> None:
+        """NP-RDMA abort-and-redirect request from the destination host.
+
+        Validated exactly like a RAPF: the (generation, round) pair must
+        match the live incarnation of the tr_ID — an abort that raced a
+        completion (or a recycled ID) is dropped, not acted on, so it can
+        never redirect a block it was not issued against.
+        """
+        block = self.pending.get(tr_id)
+        if block is None or block.state is BlockState.DONE:
+            return
+        if (gen and block.gen != gen) or round_id != block.round_id:
+            self.id_stats.stale_npr_aborts += 1
+            return
+        block.npr_redirect = True
         if block.timeout_event is not None:
             block.timeout_event.cancel()
         self.node.arbiter.requeue(block)

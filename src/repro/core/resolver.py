@@ -15,6 +15,13 @@
 * **STREAM** *(beyond paper)* — sequential-stream prediction: on a fault at
   page *p* of a transfer, also page in the first page of the *next* block so
   the following block's fault never happens on the critical path.
+* **NP_RDMA** *(beyond paper — NP-RDMA, arXiv 2310.11062)* — selects the
+  ``repro.npr`` no-pinning backend: speculative VA→PA translation through a
+  host-managed :class:`~repro.npr.mtt.MTTCache` with abort-and-redirect
+  through a :class:`~repro.npr.pool.DMAPool` of pre-registered frames.  The
+  datapath bypasses the SMMU fault FIFO entirely; this resolver is only the
+  defensive fallback for stray SMMU faults in an NP_RDMA domain (it behaves
+  like KERNEL_RAPF so such a fault still resolves).
 """
 
 from __future__ import annotations
@@ -61,6 +68,32 @@ class Strategy(enum.Enum):
     TOUCH_AHEAD_N = "touch_ahead_n"
     KERNEL_RAPF = "kernel_rapf"
     STREAM = "stream"
+    NP_RDMA = "np_rdma"
+
+
+def coerce_strategy(value) -> Strategy:
+    """Resolve ``value`` into a :class:`Strategy` member, strictly.
+
+    Accepts a member, its name (``"NP_RDMA"``) or its value
+    (``"np_rdma"``), case-insensitively.  Anything else raises a typed
+    ``ValueError`` naming every valid member — the seed accepted
+    arbitrary spellings loosely and failed later with an opaque
+    ``raise ValueError(s)`` deep in the resolver dispatch.
+    """
+    if isinstance(value, Strategy):
+        return value
+    if isinstance(value, str):
+        try:
+            return Strategy[value.upper()]
+        except KeyError:
+            try:
+                return Strategy(value.lower())
+            except ValueError:
+                pass
+    valid = ", ".join(f"{m.name} ({m.value!r})" for m in Strategy)
+    raise ValueError(
+        f"unknown fault-handling strategy {value!r}; valid Strategy "
+        f"members: {valid}")
 
 
 @dataclasses.dataclass
@@ -105,6 +138,13 @@ class Resolver:
         if s is Strategy.STREAM:
             return self._touch_ahead(pt, vpn, is_dst, self.lookahead,
                                      kernel_rapf=True, stream=True)
+        if s is Strategy.NP_RDMA:
+            # NP_RDMA traffic normally never reaches the SMMU fault path
+            # (repro.npr verifies translations host-side); a stray fault
+            # resolves like KERNEL_RAPF so the domain cannot wedge
+            return self._touch_ahead(pt, vpn, is_dst,
+                                     min(PAGES_PER_BLOCK, block_pages_remaining),
+                                     kernel_rapf=True, stream=False)
         raise ValueError(s)
 
     # ------------------------------------------------------------------

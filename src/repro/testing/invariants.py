@@ -138,6 +138,59 @@ def check_tr_id_lifecycle(fabric) -> List[str]:
     return out
 
 
+def check_npr_consistency(fabric) -> List[str]:
+    """NP-RDMA backend invariants, on every node serving NP_RDMA domains:
+
+    * a *fresh* (non-stale) MTT entry never maps a reclaimed or moved
+      frame: its page must be RESIDENT with exactly that frame — i.e.
+      the page-table invalidation hooks staled every dying translation;
+    * no page ever completed through a stale translation
+      (``stats.stale_completions == 0`` — the backend's safety property);
+    * DMA-pool frame conservation: ``free + reserved + retired`` equals
+      the registered capacity and no frame sits in two lifecycle sets;
+    * once the fabric drained: no pool reservation outstanding (every
+      redirect retired its frames, every superseded one was cancelled).
+    """
+    out = []
+    for node in fabric.nodes:
+        eng = node.npr
+        if not eng.domains:
+            continue
+        tag = f"node {node.node_id}"
+        for (pd, vpn), e in eng.mtt.entries():
+            if e.stale:
+                continue
+            pt = eng.domains.get(pd)
+            if pt is None:
+                out.append(f"{tag}: MTT entry for unregistered pd={pd}")
+                continue
+            pte = pt.lookup(vpn)
+            if pte.state.name != "RESIDENT":
+                out.append(
+                    f"{tag} pd={pd} vpn={vpn:#x}: fresh MTT entry maps a "
+                    f"{pte.state.name} page (missed invalidation)")
+            elif pte.frame != e.frame:
+                out.append(
+                    f"{tag} pd={pd} vpn={vpn:#x}: fresh MTT entry frame "
+                    f"{e.frame} != page-table frame {pte.frame}")
+        if eng.stats.stale_completions:
+            out.append(f"{tag}: {eng.stats.stale_completions} pages "
+                       f"completed through a stale translation")
+        pool = eng.pool
+        frames = list(pool.free) + list(pool.retired)
+        for held in pool.reserved.values():
+            frames.extend(held)
+        if len(frames) != pool.capacity:
+            out.append(f"{tag}: DMA pool accounts {len(frames)} frames, "
+                       f"capacity {pool.capacity}")
+        if len(set(frames)) != len(frames):
+            out.append(f"{tag}: DMA-pool frame in two lifecycle sets")
+        if fabric.loop.idle and pool.reserved:
+            out.append(f"{tag}: {len(pool.reserved)} DMA-pool reservations "
+                       f"outstanding after drain")
+    return out
+
+
 def check_arbiter_consistency(fabric) -> List[str]:
     """Arbiter telemetry and end-state sanity:
 

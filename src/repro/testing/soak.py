@@ -22,6 +22,7 @@ from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_completion_conservation,
                                       check_link_conservation,
+                                      check_npr_consistency,
                                       check_pinned_resident,
                                       check_tr_id_lifecycle)
 from repro.testing.traffic import (FaultInjection, TenantRun, TenantSpec,
@@ -142,6 +143,7 @@ def soak(seed: int,
     violations += check_arbiter_consistency(fabric)
     violations += check_link_conservation(fabric)
     violations += check_tr_id_lifecycle(fabric)
+    violations += check_npr_consistency(fabric)
 
     # ---- deterministic report -------------------------------------------
     stats = {
@@ -149,9 +151,12 @@ def soak(seed: int,
         "tenants": [r.stats_dict() for r in runs],
         "arbiter": _arbiter_dict(fabric),
         "net": fabric.net_stats().as_dict(),
-        "r5": {f"node{nid}": s.as_dict()
+        "r5": {f"node{nid}": s.tr_id.as_dict()
                for nid, s in sorted(fabric.protocol_stats().items())
-               if s.allocated},
+               if s.tr_id.allocated},
+        "npr": {f"node{nid}": s.npr.as_dict()
+                for nid, s in sorted(fabric.protocol_stats().items())
+                if s.npr.active},
         "makespan_us": round(fabric.now, 6),
         "events": fabric.loop.events_processed,
         "violations": sorted(violations),

@@ -217,7 +217,10 @@ class TenantRun:
             return lat[min(len(lat) - 1, int(p * len(lat)))]
 
         agg = {"timeouts": 0, "rapf_retransmits": 0, "retransmissions": 0,
-               "src_faults": 0, "dst_faults": 0}
+               "src_faults": 0, "dst_faults": 0,
+               # NP-RDMA backend (zero for thesis-datapath tenants)
+               "mtt_hits": 0, "mtt_misses": 0, "mtt_stale": 0,
+               "npr_aborts": 0, "pool_redirect_pages": 0}
         for wc in self.completions:
             for k in agg:
                 agg[k] += getattr(wc.stats, k)

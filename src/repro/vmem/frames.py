@@ -32,6 +32,11 @@ class PageInReceipt:
     rapf_retransmits: int = 0
     dst_faults: int = 0
     bytes_in: int = 0
+    # NP-RDMA backend counters (zero when the domain runs the thesis path)
+    mtt_hits: int = 0
+    mtt_misses: int = 0
+    mtt_stale: int = 0
+    pool_redirects: int = 0
 
 
 class FramePool:

@@ -274,7 +274,11 @@ class Pager:
                            remote_reads=r.remote_reads,
                            rapf_retransmits=r.rapf_retransmits,
                            remote_dst_faults=r.dst_faults,
-                           remote_bytes_in=r.bytes_in)
+                           remote_bytes_in=r.bytes_in,
+                           mtt_hits=r.mtt_hits,
+                           mtt_misses=r.mtt_misses,
+                           mtt_stale=r.mtt_stale,
+                           pool_redirects=r.pool_redirects)
         return len(paged) + len(streamed)
 
     def fault_in(self, space: AddressSpace, vpage: int,

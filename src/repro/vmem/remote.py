@@ -98,7 +98,11 @@ class RemoteFramePool(FramePool):
         return PageInReceipt(us=wc.latency_us, remote_reads=1,
                              rapf_retransmits=wc.stats.rapf_retransmits,
                              dst_faults=wc.stats.dst_faults,
-                             bytes_in=nbytes)
+                             bytes_in=nbytes,
+                             mtt_hits=wc.stats.mtt_hits,
+                             mtt_misses=wc.stats.mtt_misses,
+                             mtt_stale=wc.stats.mtt_stale,
+                             pool_redirects=wc.stats.pool_redirect_pages)
 
     # telemetry ----------------------------------------------------------
     @property

@@ -34,6 +34,11 @@ class PagingStats:
     remote_bytes_in: int = 0
     remote_dst_faults: int = 0   # destination faults of those reads
     rapf_retransmits: int = 0    # RAPF-triggered retransmits of those reads
+    # ---- NP-RDMA backend (reads through a Strategy.NP_RDMA domain) -------
+    mtt_hits: int = 0            # translations served by a fresh MTT entry
+    mtt_misses: int = 0          # uncached translations (filled host-side)
+    mtt_stale: int = 0           # stale entries caught by verification
+    pool_redirects: int = 0      # pages redirected through the DMA pool
     # ---- streaming consumers (block-wise optimizer offload) --------------
     blocks_streamed: int = 0
     prefetch_overlapped: int = 0

@@ -1,0 +1,269 @@
+"""NP-RDMA backend (repro.npr): MTT cache, DMA pool, speculation,
+strategy coercion, and the unified stats surfaces."""
+
+import dataclasses
+import json
+
+import pytest
+
+from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                       Strategy)
+from repro.api.fabric import ProtocolStats
+from repro.core.costmodel import DEFAULT_COST_MODEL
+from repro.core.experiments import run_remote_write
+from repro.core.node import TrIdStats
+from repro.core.resolver import coerce_strategy
+from repro.core.simulator import EventLoop
+from repro.npr import DMAPool, MTTCache, NPRStats
+from repro.testing import TenantSpec, soak
+from repro.vmem.stats import PagingStats
+
+SRC, DST, PD = 0x10_0000_0000, 0x20_0000_0000, 1
+
+
+# --------------------------------------------------------------------- MTT
+class TestMTTCache:
+    def test_miss_fill_hit(self):
+        stats = NPRStats()
+        mtt = MTTCache(4, stats)
+        assert mtt.lookup(1, 100) is None
+        mtt.install(1, 100, frame=7)
+        e = mtt.lookup(1, 100)
+        assert e is not None and e.frame == 7 and not e.stale
+        assert stats.mtt_fills == 1
+
+    def test_invalidate_marks_stale_once(self):
+        stats = NPRStats()
+        mtt = MTTCache(4, stats)
+        mtt.install(1, 100, frame=7)
+        mtt.invalidate(1, 100)
+        mtt.invalidate(1, 100)              # idempotent
+        assert mtt.lookup(1, 100).stale
+        assert stats.mtt_invalidations == 1
+        # refresh clears staleness
+        mtt.install(1, 100, frame=9)
+        e = mtt.lookup(1, 100)
+        assert e.frame == 9 and not e.stale
+
+    def test_lru_eviction_order(self):
+        stats = NPRStats()
+        mtt = MTTCache(2, stats)
+        mtt.install(1, 1, frame=1)
+        mtt.install(1, 2, frame=2)
+        mtt.lookup(1, 1)                    # 1 becomes most-recent
+        mtt.install(1, 3, frame=3)          # evicts vpn 2, not vpn 1
+        assert mtt.lookup(1, 2) is None
+        assert mtt.lookup(1, 1) is not None
+        assert stats.mtt_evictions == 1
+
+    def test_domains_isolated(self):
+        mtt = MTTCache(8, NPRStats())
+        mtt.install(1, 100, frame=7)
+        assert mtt.lookup(2, 100) is None
+
+
+# ---------------------------------------------------------------- DMA pool
+class _FakeBlock:
+    def __init__(self, n_pages=4):
+        self.n_pages = n_pages
+
+
+class TestDMAPool:
+    def _pool(self, n_frames=8, on_frames_available=None):
+        loop = EventLoop()
+        stats = NPRStats()
+        pool = DMAPool(loop, DEFAULT_COST_MODEL, n_frames, stats,
+                       on_frames_available=on_frames_available)
+        pool.materialize()
+        return loop, stats, pool
+
+    def test_reserve_cancel_conserves_frames(self):
+        _, _, pool = self._pool()
+        b = _FakeBlock()
+        assert pool.reserve(b)
+        assert pool.reserve(b)              # idempotent
+        assert pool.frames_accounted() == 8
+        pool.cancel(b)
+        assert len(pool.free) == 8
+
+    def test_exhaustion_then_refill(self):
+        loop, stats, pool = self._pool(n_frames=4)
+        b1, b2 = _FakeBlock(), _FakeBlock()
+        assert pool.reserve(b1)
+        assert not pool.reserve(b2)         # all-or-nothing: pool dry
+        assert stats.pool_reserve_failures == 1
+        pool.retire(b1)                     # below watermark -> refill
+        assert pool.frames_accounted() == 4
+        loop.run()
+        assert stats.pool_refills == 1
+        assert len(pool.free) == 4
+        assert pool.reserve(b2)
+
+    def test_waiters_woken_in_fifo_order(self):
+        woken = []
+        loop, _, pool = self._pool(n_frames=4,
+                                   on_frames_available=woken.append)
+        b1, b2, b3 = _FakeBlock(), _FakeBlock(), _FakeBlock()
+        assert pool.reserve(b1)
+        pool.add_waiter(b2)
+        pool.add_waiter(b3)
+        pool.add_waiter(b2)                 # dedup
+        pool.retire(b1)
+        loop.run()
+        assert woken == [b2, b3]
+
+    def test_reserved_peak_tracked(self):
+        _, stats, pool = self._pool(n_frames=8)
+        pool.reserve(_FakeBlock())
+        pool.reserve(_FakeBlock())
+        assert stats.pool_reserved_peak == 8
+
+
+# ------------------------------------------------------- strategy coercion
+class TestStrategyCoercion:
+    def test_member_passthrough(self):
+        assert coerce_strategy(Strategy.NP_RDMA) is Strategy.NP_RDMA
+
+    @pytest.mark.parametrize("spelling", ["np_rdma", "NP_RDMA", "Np_Rdma"])
+    def test_string_spellings(self, spelling):
+        assert coerce_strategy(spelling) is Strategy.NP_RDMA
+
+    def test_error_names_valid_members(self):
+        with pytest.raises(ValueError) as ei:
+            coerce_strategy("smmu_magic")
+        msg = str(ei.value)
+        for member in Strategy:
+            assert member.name in msg
+
+    def test_fault_policy_coerces(self):
+        assert (FaultPolicy(strategy="np_rdma").strategy
+                is Strategy.NP_RDMA)
+
+    def test_fault_policy_rejects_unknown(self):
+        with pytest.raises(ValueError) as ei:
+            FaultPolicy(strategy="bogus")
+        assert "NP_RDMA" in str(ei.value)
+        assert "TOUCH_AHEAD" in str(ei.value)
+
+    def test_fault_policy_rejects_wrong_type(self):
+        with pytest.raises(ValueError):
+            FaultPolicy(strategy=3.14)
+
+
+# -------------------------------------------------------------- end-to-end
+def _npr_fabric(**over):
+    cfg = dict(n_nodes=1,
+               default_policy=FaultPolicy(strategy=Strategy.NP_RDMA))
+    cfg.update(over)
+    return Fabric.build(FabricConfig(**cfg))
+
+
+class TestNPRDatapath:
+    def test_src_fault_fixup_beats_timeout(self):
+        """Source faults recover host-side in us — no 1 ms timeout."""
+        npr = run_remote_write(16384, BufferPrep.FAULTING,
+                               BufferPrep.TOUCHED, backend="np_rdma")
+        rapf = run_remote_write(16384, BufferPrep.FAULTING,
+                                BufferPrep.TOUCHED, backend="rapf")
+        assert npr.stats.src_faults > 0
+        assert npr.stats.timeouts == 0
+        assert rapf.stats.timeouts > 0
+        assert npr.latency_us < rapf.latency_us
+
+    def test_dst_fault_abort_and_redirect(self):
+        r = run_remote_write(16384, BufferPrep.TOUCHED,
+                             BufferPrep.FAULTING, backend="np_rdma")
+        assert r.stats.npr_aborts > 0
+        assert r.stats.pool_redirect_pages > 0
+        assert r.stats.timeouts == 0
+
+    def test_mtt_warms_across_transfers(self):
+        fabric = _npr_fabric()
+        dom = fabric.open_domain(PD)
+        src = dom.register_memory(0, SRC, 16384, prep=BufferPrep.TOUCHED)
+        dst = dom.register_memory(0, DST, 16384, prep=BufferPrep.TOUCHED)
+        cq = fabric.create_cq(depth=4)
+        first = dom.post_write(src, dst, cq=cq).result()
+        second = dom.post_write(src, dst, cq=cq).result()
+        assert first.stats.mtt_misses > 0
+        assert second.stats.mtt_misses == 0
+        assert second.stats.mtt_hits > 0
+        assert second.latency_us <= first.latency_us
+
+    def test_bounce_mode_without_speculation(self):
+        """speculation=False: every block rides the pool, no aborts."""
+        r = run_remote_write(16384, BufferPrep.TOUCHED,
+                             BufferPrep.FAULTING, backend="np_rdma",
+                             config_overrides={"speculation": False})
+        assert r.stats.npr_aborts == 0
+        assert r.stats.pool_redirect_pages > 0
+        assert r.stats.timeouts == 0
+
+    def test_no_stale_completions_under_collapse(self):
+        """khugepaged between writes: verification catches every stale
+        MTT entry; the engine counter stays zero."""
+        from repro.core import addresses as A
+        fabric = _npr_fabric()
+        dom = fabric.open_domain(PD)
+        src = dom.register_memory(0, SRC, 65536, prep=BufferPrep.TOUCHED)
+        dst = dom.register_memory(0, DST, 65536, prep=BufferPrep.TOUCHED)
+        cq = fabric.create_cq(depth=4)
+        pt = fabric.nodes[0].pt(PD)
+        stale = 0
+        for _ in range(4):
+            pt.khugepaged_collapse(A.page_index(DST))
+            wr = dom.post_write(src, dst, cq=cq)
+            wr.result()
+            stale += wr.stats.mtt_stale
+        eng = fabric.protocol_stats()[0].npr
+        assert stale > 0
+        assert eng.stale_completions == 0
+        assert eng.aborts_sent > 0
+
+    def test_pool_frames_validated(self):
+        with pytest.raises(ValueError):
+            FabricConfig(n_nodes=1, dma_pool_frames=1)
+
+
+# ------------------------------------------------------------ stats seams
+class TestStatsSurfaces:
+    def test_protocol_stats_typed_sections(self):
+        """No getattr fallbacks: both sections are real dataclasses."""
+        fabric = _npr_fabric()
+        ps = fabric.protocol_stats()[0]
+        assert isinstance(ps, ProtocolStats)
+        assert isinstance(ps.tr_id, TrIdStats)
+        assert isinstance(ps.npr, NPRStats)
+        d = ps.as_dict()
+        assert set(d) == {"tr_id", "npr"}
+        assert d["npr"]["stale_completions"] == 0
+
+    def test_paging_stats_merge_includes_npr_fields(self):
+        a = PagingStats(mtt_hits=3, mtt_misses=2, mtt_stale=1,
+                        pool_redirects=4)
+        b = PagingStats(mtt_hits=1, pool_redirects=1, faults=2)
+        a.merge(b)
+        assert (a.mtt_hits, a.mtt_misses, a.mtt_stale,
+                a.pool_redirects) == (4, 2, 1, 5)
+        assert a.faults == 2
+        a.reset()
+        assert all(getattr(a, f.name) == f.default
+                   for f in dataclasses.fields(a))
+
+    def test_soak_npr_section_round_trips(self):
+        """The deterministic soak dict carries the NPR counters and
+        survives a JSON round-trip unchanged (satellite: stats seams)."""
+        tenants = [TenantSpec(pd=1, strategy=Strategy.NP_RDMA,
+                              mode="closed", inflight=2, n_requests=6,
+                              dst_prep=BufferPrep.FAULTING)]
+        a = soak(31, tenants=tenants)
+        b = soak(31, tenants=tenants)
+        assert a.violations == []
+        assert a.json() == b.json()
+        decoded = json.loads(a.json())
+        assert decoded["npr"]                 # NPR nodes were active
+        for node_stats in decoded["npr"].values():
+            assert node_stats["stale_completions"] == 0
+        # round-trip: re-encoding the decoded dict is byte-identical
+        assert (json.dumps(decoded, sort_keys=True)
+                == json.dumps(json.loads(b.json()), sort_keys=True))

@@ -4,7 +4,9 @@ import dataclasses
 
 import pytest
 
-from repro.api import BufferPrep, FabricConfig, ServiceClass
+import json
+
+from repro.api import BufferPrep, FabricConfig, ServiceClass, Strategy
 from repro.testing import FaultInjection, TenantSpec, soak
 
 CHURN = FaultInjection(khugepaged_period_us=600.0,
@@ -90,3 +92,48 @@ class TestDeterminism:
                  injection=CHURN)
         assert a.json() == b.json()
         assert a.violations == [] and b.violations == []
+
+
+def _npr_churn_tenants():
+    """NP-RDMA tenants whose warm MTT entries race reclaim/khugepaged:
+    re-used (non-fresh) destinations keep translations cached so churn
+    invalidations hit *in-flight* speculative transfers."""
+    return [
+        TenantSpec(pd=1, name="npr-warm", strategy=Strategy.NP_RDMA,
+                   mode="closed", inflight=2, n_requests=10,
+                   size_choices=(16384, 65536),
+                   dst_prep=BufferPrep.TOUCHED, fresh_dst=False,
+                   region_slots=2),
+        TenantSpec(pd=2, name="npr-cold", strategy=Strategy.NP_RDMA,
+                   mode="closed", inflight=2, n_requests=8,
+                   dst_prep=BufferPrep.FAULTING),
+        TenantSpec(pd=3, name="thesis", mode="closed", inflight=2,
+                   n_requests=8, dst_prep=BufferPrep.FAULTING),
+    ]
+
+
+class TestNPRChurnSoak:
+    """MTT invalidation under churn: reclaim/khugepaged race in-flight
+    speculative transfers; no stale translation may ever complete."""
+
+    @pytest.mark.parametrize("seed", [40, 48, 49])
+    def test_zero_stale_completions_under_churn(self, seed):
+        r = soak(seed, tenants=_npr_churn_tenants(), injection=CHURN)
+        assert r.violations == []
+        for t in r.stats["tenants"]:
+            assert t["completed"] == t["posted"]
+        npr = r.stats["npr"]
+        assert npr                            # NPR engines were active
+        for node_stats in npr.values():
+            assert node_stats["stale_completions"] == 0
+        # the race actually happened: churn invalidated cached entries,
+        # and at least one invalidation landed on an in-flight round
+        # (verification caught it as a stale hit)
+        assert sum(s["mtt_invalidations"] for s in npr.values()) > 0
+        assert sum(s["mtt_stale_hits"] for s in npr.values()) > 0
+
+    def test_churn_soak_byte_identical_per_seed(self):
+        a = soak(47, tenants=_npr_churn_tenants(), injection=CHURN)
+        b = soak(47, tenants=_npr_churn_tenants(), injection=CHURN)
+        assert a.json().encode() == b.json().encode()
+        assert json.loads(a.json())["npr"] == json.loads(b.json())["npr"]
