@@ -1,0 +1,216 @@
+"""Tenancy control plane at scale: 10k tenants, bank-steal crossover,
+GOLD isolation under thrash (ISSUE-7 acceptance tier).
+
+Three experiments:
+
+* **Admission** — 10k protection domains (mixed GOLD/SILVER/BEST_EFFORT
+  tiers) opened across a 128-node DRAGONFLY fabric, two nodes each.
+  Emits admission throughput (tenants/s) and proves the new
+  ``check_bank_conservation`` / ``check_tenant_isolation`` invariants on
+  the fully-loaded fabric, plus ``TenantQuotaExceeded`` rejection once a
+  node's ``tenants_per_node`` cap is hit.
+* **Steal-rate crossover** — the same 2-node fabric driven by <= 16 hot
+  domains binds every tenant eagerly (zero steals, seed-identical
+  banks); 3x overcommitted, the LRU stealer kicks in (steals > 0) and
+  the shootdown + rebind cost is visible in mean transfer latency.
+* **GOLD isolation** — one GOLD tenant's p99 under full bank thrash
+  stays within 2x its uncontended baseline: its bank is steal-immune
+  and its blocks ride the LATENCY arbiter class.
+
+Determinism: the thrash soak runs twice with the same seed and must be
+byte-identical (the ``"tenancy"`` stats section included).
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import check, emit
+from repro.api import (Fabric, FabricConfig, SLOClass, TenantQuotaExceeded)
+from repro.core import addresses as A
+from repro.testing import (TenantSpec, check_bank_conservation,
+                           check_tenant_isolation, soak)
+
+SEED = 2026
+
+
+# --------------------------------------------------------- 10k admission
+def slo_for(k: int) -> str:
+    """Deterministic tier mix: sparse GOLD (the per-node GOLD cap keeps
+    one bank stealable; the stride is prime and coprime to the node
+    count, so GOLD tenants spread instead of clustering on one node),
+    ~30% SILVER, the rest BEST_EFFORT."""
+    if k % 97 == 0:
+        return "gold"
+    return "silver" if k % 10 < 3 else "best_effort"
+
+
+def admission_tier(n_tenants: int) -> None:
+    n_nodes = 128
+    fab = Fabric.build(FabricConfig(
+        n_nodes=n_nodes, topology="dragonfly", dims=(8, 16),
+        frames_per_node=1 << 16, tenants_per_node=max(
+            64, 4 * n_tenants // n_nodes)))
+    t0 = time.perf_counter()
+    golds = 0
+    for k in range(n_tenants):
+        slo = slo_for(k)
+        golds += slo == "gold"
+        fab.open_domain(k, slo=slo,
+                        nodes=[k % n_nodes, (k + 1) % n_nodes])
+    wall = time.perf_counter() - t0
+    tps = n_tenants / wall if wall > 0 else 0.0
+    emit("tenancy/admitted_tenants", n_tenants, f"{golds} GOLD")
+    emit("tenancy/admission_tenants_per_s", round(tps, 1), "host rate")
+    check(f"tenancy: {n_tenants} tenants admitted onto {n_nodes} nodes "
+          f"(16 context banks each)", len(fab.domains) == n_tenants, "")
+    bound = sum(n.tenancy.banks.bound_count() for n in fab.nodes)
+    check("tenancy: every physical bank bound at full load "
+          f"({n_nodes} nodes x 16)", bound == n_nodes * A.NUM_CONTEXT_BANKS,
+          f"{bound}")
+    v = check_bank_conservation(fab) + check_tenant_isolation(fab)
+    check("tenancy: bank-conservation + tenant-isolation invariants hold "
+          "on the fully-loaded fabric", v == [], "; ".join(v[:3]))
+
+    # the admission cap actually rejects: hammer one node pair
+    cap_fab = Fabric.build(FabricConfig(n_nodes=2, tenants_per_node=32))
+    admitted = 0
+    rejected = 0
+    for k in range(40):
+        try:
+            cap_fab.open_domain(k)
+            admitted += 1
+        except TenantQuotaExceeded:
+            rejected += 1
+    check("tenancy: tenants_per_node cap rejects with "
+          "TenantQuotaExceeded and admits exactly to the cap",
+          admitted == 32 and rejected == 8,
+          f"admitted={admitted} rejected={rejected}")
+    check("tenancy: rejections are counted in admission telemetry",
+          cap_fab.nodes[0].tenancy.admission_rejections == 8,
+          f"{cap_fab.nodes[0].tenancy.admission_rejections}")
+
+
+# ------------------------------------------------- steal-rate crossover
+def tenant_specs(n: int, n_requests: int, gold_pd: int = 0):
+    """n closed-loop tenants on a 2-node fabric; pd ``gold_pd`` is GOLD,
+    the rest BEST_EFFORT.  Touched destinations: transfers exercise the
+    bank-binding datapath without page-fault noise."""
+    from repro.api import BufferPrep
+    out = []
+    for pd in range(n):
+        out.append(TenantSpec(
+            pd=pd, name=("gold" if pd == gold_pd else f"be{pd}"),
+            slo=(SLOClass.GOLD if pd == gold_pd else SLOClass.BEST_EFFORT),
+            mode="closed", inflight=1, n_requests=n_requests,
+            size_choices=(16384,), dst_prep=BufferPrep.TOUCHED,
+            fresh_dst=False, region_slots=2,
+            src_node=pd % 2, dst_node=(pd + 1) % 2))
+    return out
+
+
+def bank_counters(result):
+    binds = hits = steals = shootdowns = 0
+    for node in result.fabric.nodes:
+        st = node.tenancy.banks.stats
+        binds += st.binds
+        hits += st.hits
+        steals += st.steals
+        shootdowns += st.shootdowns
+    return binds, hits, steals, shootdowns
+
+
+def gold_stats(result):
+    return next(t for t in result.stats["tenants"] if t["tenant"] == "gold")
+
+
+def crossover_tier(n_requests: int) -> None:
+    # LATENCY-class wire QoS on: the SLO contract is end-to-end, so
+    # GOLD packets overtake BULK backlogs on the shared 2-node link
+    cfg = lambda: FabricConfig(n_nodes=2, link_qos=True)
+    # uncontended baseline: the GOLD tenant alone
+    base = soak(SEED, tenants=tenant_specs(1, n_requests), config=cfg())
+    base_gold = gold_stats(base)
+    check("tenancy: uncontended baseline soak is clean", base.ok,
+          "; ".join(base.violations[:3]))
+
+    # <= 16 hot domains: eager seed-style binding, ZERO steals
+    fit = soak(SEED, tenants=tenant_specs(14, n_requests), config=cfg())
+    _, _, fit_steals, _ = bank_counters(fit)
+    check("tenancy: <= 16 hot domains per node -> zero bank steals "
+          "(seed-parity eager binding)", fit.ok and fit_steals == 0,
+          f"steals={fit_steals}")
+
+    # 3x overcommit: the LRU stealer must kick in
+    thrash = soak(SEED, tenants=tenant_specs(48, n_requests),
+                  config=cfg())
+    binds, hits, steals, shootdowns = bank_counters(thrash)
+    steal_rate = steals / binds if binds else 0.0
+    emit("tenancy/thrash_steals", steals, f"of {binds} binds")
+    emit("tenancy/thrash_steal_rate", round(steal_rate, 4),
+         "steals per bind")
+    check("tenancy: 3x bank overcommit -> steals > 0 with one shootdown "
+          "per steal", thrash.ok and steals > 0 and shootdowns == steals,
+          f"steals={steals} shootdowns={shootdowns}")
+
+    # shootdown + rebind cost is visible in mean latency
+    fit_mean = _mean_latency(fit, exclude="gold")
+    thrash_mean = _mean_latency(thrash, exclude="gold")
+    emit("tenancy/fit_mean_latency_us", round(fit_mean, 3),
+         "14 tenants, no steals")
+    emit("tenancy/thrash_mean_latency_us", round(thrash_mean, 3),
+         "48 tenants, bank thrash")
+    check("tenancy: bank thrash raises mean transfer latency "
+          "(shootdown + rebind on the datapath)",
+          thrash_mean > fit_mean,
+          f"{thrash_mean:.2f} vs {fit_mean:.2f} us")
+
+    # GOLD isolation: p99 within 2x uncontended under full thrash
+    thrash_gold = gold_stats(thrash)
+    emit("tenancy/gold_p99_base_us", base_gold["latency_p99_us"],
+         "uncontended")
+    emit("tenancy/gold_p99_thrash_us", thrash_gold["latency_p99_us"],
+         "48-tenant bank thrash")
+    check("tenancy: GOLD p99 under bank thrash <= 2x uncontended "
+          "baseline (steal-immune bank + LATENCY class)",
+          thrash_gold["latency_p99_us"]
+          <= 2 * base_gold["latency_p99_us"],
+          f"{thrash_gold['latency_p99_us']:.2f} vs "
+          f"{base_gold['latency_p99_us']:.2f} us")
+    check("tenancy: GOLD lost zero banks to stealing",
+          all(n.tenancy.banks.stats.immune_steals == 0
+              for n in thrash.fabric.nodes), "")
+
+    # determinism: same seed -> byte-identical stats (tenancy included)
+    again = soak(SEED, tenants=tenant_specs(48, n_requests), config=cfg())
+    check("tenancy: thrash soak is byte-identical per seed",
+          thrash.json() == again.json(), "")
+    check("tenancy: thrash soak stats carry the tenancy section",
+          "tenancy" in thrash.stats
+          and thrash.stats["tenancy"]["node0"]["banks"]["steals"] > 0, "")
+
+
+def _mean_latency(result, exclude: str) -> float:
+    ts = [t for t in result.stats["tenants"] if t["tenant"] != exclude]
+    lats = [t["latency_mean_us"] for t in ts if t["completed"]]
+    return sum(lats) / len(lats) if lats else 0.0
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--tenants", type=int, default=10_000,
+                    help="admission-tier tenant count")
+    ap.add_argument("--quick", action="store_true",
+                    help="small local iteration sizes (NOT the CI tier)")
+    args, _ = ap.parse_known_args()
+    n_tenants = 2_000 if args.quick else args.tenants
+    n_requests = 6 if args.quick else 24
+
+    print("name,value,derived")
+    admission_tier(n_tenants)
+    crossover_tier(n_requests)
+
+
+if __name__ == "__main__":
+    main()

@@ -122,6 +122,28 @@ fault FIFO and RAPF-retransmits)  re-issues through the pool; counters
                                   ``npr_aborts``) and
                                   ``Fabric.protocol_stats()`` →
                                   ``ProtocolStats.npr``.
+SMMU context bank as a            ``repro.tenancy.BankManager`` — the 16
+*virtualized* resource (beyond    banks (§1.3.1.4) are overcommitted:
+paper: RDMAvisor-style NIC/MMU    domains bind on demand,
+virtualization, the "beyond 16    ``Fabric.close_domain`` releases, and
+domains" north star)              10k+ tenants/node admit behind
+                                  ``tenants_per_node`` /
+                                  ``TenantQuotaExceeded``.
+Bank steal = TLB shootdown cost   LRU bank stealing evicts a cold
+(an SMMU driver rebinding a       domain's bank: ``tlb_invalidate_all``
+context bank must shoot down      + page-table rebind, charged as
+its cached walks)                 ``CostModel.bank_shootdown_us`` +
+                                  ``bank_rebind_us`` on the fault path;
+                                  telemetry in ``BankStats``
+                                  (``Fabric.protocol_stats()`` →
+                                  ``ProtocolStats.tenancy``).
+SLO class mapping (beyond         ``repro.tenancy.SLOClass`` — GOLD /
+paper: tenant tiers over one      SILVER / BEST_EFFORT maps onto
+fault-handling datapath)          ``ServiceClass`` + DRR weight + bank
+                                  steal immunity (GOLD) + the SRQ's
+                                  ``srq_gold_reserve``; threaded through
+                                  ``FaultPolicy.slo`` /
+                                  ``open_domain(slo=...)``.
 ===============================  ========================================
 
 **When to use which backend** (``benchmarks/npr_compare.py`` measures
@@ -154,28 +176,33 @@ Quick tour::
 """
 
 from repro.api.completion import (CompletionQueue, CQStats,
-                                  DomainQuotaExceeded, TrIdExhausted,
-                                  WCStatus, WorkCompletion, WorkQueueFull,
-                                  WorkRequest, WROpcode)
+                                  DomainQuotaExceeded, TenantQuotaExceeded,
+                                  TrIdExhausted, WCStatus, WorkCompletion,
+                                  WorkQueueFull, WorkRequest, WROpcode)
 from repro.api.config import FabricConfig
 from repro.api.fabric import Fabric, ProtectionDomain, ProtocolStats
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import DEFAULT_POLICY, FaultPolicy
 from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
-from repro.core.node import FabricError, TrIdStats
+from repro.core.node import (BankCollision, DomainClosed, DomainExists,
+                             FabricError, TrIdStats)
 from repro.core.resolver import Strategy, coerce_strategy
 from repro.npr.stats import NPRStats
+from repro.tenancy import (BankManager, BankStats, SLOClass, TenancyManager,
+                           coerce_slo)
 from repro.net import (FabricStats, LinkStats, Router, Topology,
                        TopologyError, TopologyKind, build_topology)
 
 __all__ = [
-    "ArbiterStats", "BufferPrep", "CompletionQueue", "CQStats",
-    "DEFAULT_POLICY", "DMAArbiter", "DomainQuotaExceeded", "Fabric",
-    "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
+    "ArbiterStats", "BankCollision", "BankManager", "BankStats",
+    "BufferPrep", "CompletionQueue", "CQStats", "DEFAULT_POLICY",
+    "DMAArbiter", "DomainClosed", "DomainExists", "DomainQuotaExceeded",
+    "Fabric", "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
     "LinkStats", "MemoryRegion", "NPRStats", "PrepCost",
     "ProtectionDomain", "ProtocolStats", "RegionError", "Router",
-    "ServiceClass", "Strategy", "Topology", "TopologyError",
-    "TopologyKind", "TrIdExhausted", "TrIdStats", "WCStatus",
-    "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
-    "build_topology", "coerce_strategy",
+    "SLOClass", "ServiceClass", "Strategy", "TenancyManager",
+    "TenantQuotaExceeded", "Topology", "TopologyError", "TopologyKind",
+    "TrIdExhausted", "TrIdStats", "WCStatus", "WorkCompletion",
+    "WorkQueueFull", "WorkRequest", "WROpcode", "build_topology",
+    "coerce_slo", "coerce_strategy",
 ]

@@ -65,6 +65,20 @@ class DomainQuotaExceeded(WorkQueueFull):
     """
 
 
+class TenantQuotaExceeded(WorkQueueFull):
+    """Posting (or opening a domain) would exceed a node's shared tenancy
+    resources (``repro.tenancy``).
+
+    Raised by the posting verbs when the destination node's shared
+    receive queue (SRQ) cannot grant the transfer's receive entries —
+    ``FabricConfig(srq_entries=...)``, with ``srq_gold_reserve`` entries
+    usable only by GOLD tenants — and by ``Fabric.open_domain`` when a
+    node is at its ``tenants_per_node`` admission cap (or its GOLD-bank
+    ceiling).  Subclasses :class:`WorkQueueFull` so generic backpressure
+    handlers retry it like any other quota signal.
+    """
+
+
 class TrIdExhausted(WorkQueueFull):
     """Posting would launch blocks with no free 14-bit transaction ID.
 

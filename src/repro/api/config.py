@@ -67,6 +67,14 @@ class FabricConfig:
       table capacity, pre-registered DMA-able pool frames per node, and
       whether transfers launch speculatively on cached translations
       (``False`` = bounce-buffer mode: every block lands in the pool).
+    * ``bank_overcommit`` / ``srq_entries`` / ``srq_gold_reserve`` /
+      ``tenants_per_node`` — the tenancy control plane
+      (``repro.tenancy``): virtualize the 16 SMMU context banks with
+      LRU bank stealing (``False`` restores the seed's hard
+      ``BankCollision`` ceiling), bound the per-node shared receive
+      queue (``None`` = unbounded; ``srq_gold_reserve`` entries usable
+      only by GOLD tenants), and cap tenants admitted per node
+      (``Fabric.open_domain`` raises ``TenantQuotaExceeded`` beyond it).
     """
 
     n_nodes: int = 2
@@ -86,6 +94,10 @@ class FabricConfig:
     mtt_entries: int = 4096
     dma_pool_frames: int = 64
     speculation: bool = True
+    bank_overcommit: bool = True
+    srq_entries: Optional[int] = None
+    srq_gold_reserve: int = 0
+    tenants_per_node: Optional[int] = None
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
@@ -106,6 +118,23 @@ class FabricConfig:
                 f"dma_pool_frames must be >= {PAGES_PER_BLOCK} (one 16 KB "
                 f"block of 4 KB pages, or a redirected block could never "
                 f"reserve its landing frames), got {self.dma_pool_frames}")
+        if self.srq_entries is not None and self.srq_entries < 1:
+            raise ValueError(
+                f"srq_entries must be >= 1 (or None = unbounded), got "
+                f"{self.srq_entries}")
+        if self.srq_gold_reserve < 0:
+            raise ValueError(
+                f"srq_gold_reserve must be >= 0, got "
+                f"{self.srq_gold_reserve}")
+        if (self.srq_entries is not None
+                and self.srq_gold_reserve > self.srq_entries):
+            raise ValueError(
+                f"srq_gold_reserve={self.srq_gold_reserve} exceeds "
+                f"srq_entries={self.srq_entries}")
+        if self.tenants_per_node is not None and self.tenants_per_node < 1:
+            raise ValueError(
+                f"tenants_per_node must be >= 1 (or None = unbounded), "
+                f"got {self.tenants_per_node}")
         self.topology = coerce_kind(self.topology)
         if self.hops < 1:
             raise ValueError(f"hops must be >= 1, got {self.hops}")

@@ -21,14 +21,18 @@ from typing import Optional
 
 from repro.core import addresses as A
 from repro.core.arbiter import ArbiterStats, ServiceClass
-from repro.core.node import FabricError, Node, Transfer, TrIdStats
+from repro.core.node import (BankCollision, DomainClosed, DomainExists,
+                             FabricError, Node, Transfer, TrIdStats)
 from repro.core.pagetable import FrameAllocator
 from repro.core.simulator import EventLoop
 from repro.npr.stats import NPRStats
 from repro.net.interconnect import FabricStats, Interconnect
-from repro.api.completion import (CompletionQueue, DomainQuotaExceeded,
+from repro.tenancy import SLOClass, TenancyManager, coerce_slo
+from repro.api.completion import (MAX_WAIT_EVENTS, CompletionQueue,
+                                  DomainQuotaExceeded, TenantQuotaExceeded,
                                   TrIdExhausted, WCStatus, WorkCompletion,
-                                  WorkRequest, WROpcode)
+                                  WorkQueueFull, WorkRequest, WROpcode,
+                                  _advance_until)
 from repro.api.config import FabricConfig
 from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import FaultPolicy
@@ -36,25 +40,34 @@ from repro.api.policy import FaultPolicy
 
 @dataclasses.dataclass
 class ProtocolStats:
-    """One node's protocol telemetry, both datapaths side by side:
-    the 14-bit tr_ID lifecycle (:class:`~repro.core.node.TrIdStats`)
-    and the NP-RDMA backend (:class:`~repro.npr.stats.NPRStats`)."""
+    """One node's protocol telemetry, all datapaths side by side:
+    the 14-bit tr_ID lifecycle (:class:`~repro.core.node.TrIdStats`),
+    the NP-RDMA backend (:class:`~repro.npr.stats.NPRStats`) and the
+    tenancy control plane (:class:`~repro.tenancy.TenancyManager` —
+    ``.tenancy.bank_stats`` is the node's
+    :class:`~repro.tenancy.BankStats`)."""
 
     tr_id: TrIdStats
     npr: NPRStats
+    tenancy: TenancyManager
 
     def as_dict(self) -> dict:
-        return {"tr_id": self.tr_id.as_dict(), "npr": self.npr.as_dict()}
+        return {"tr_id": self.tr_id.as_dict(), "npr": self.npr.as_dict(),
+                "tenancy": self.tenancy.as_dict()}
 
 
 class ProtectionDomain:
     """One tenant: a PDID spanning its nodes, with its own fault policy."""
 
     def __init__(self, fabric: "Fabric", pd: int, policy: FaultPolicy,
-                 node_policies: Optional[dict] = None):
+                 node_policies: Optional[dict] = None,
+                 slo: Optional[SLOClass] = None):
         self.fabric = fabric
         self.pd = pd
         self.policy = policy
+        # tenant SLO tier (repro.tenancy): GOLD rides the SRQ gold
+        # reserve and its context banks are steal-immune
+        self.slo = slo
         # default arbiter class of this domain's work requests (None ->
         # the class each node registered for the pd); consulted by the
         # posting verbs, so reassigning it retargets subsequent posts
@@ -62,6 +75,11 @@ class ProtectionDomain:
         # node index -> the policy actually governing this domain there
         # (per-node FabricConfig overrides when no domain policy was given)
         self._node_policies = node_policies or {}
+        # lifecycle: Fabric.close_domain flips this and every posting
+        # verb / registration afterwards raises DomainClosed
+        self.closed = False
+        # regions handed out, so close_domain can deregister them
+        self._regions: list[MemoryRegion] = []
 
     def policy_for(self, node_idx: int) -> FaultPolicy:
         """The effective fault policy of this domain on ``node_idx``."""
@@ -83,6 +101,8 @@ class ProtectionDomain:
         for warm-up registrations, as in the thesis' methodology).
         """
         fabric = self.fabric
+        if self.closed:
+            raise DomainClosed(f"domain pd={self.pd} is closed")
         if node_idx not in self._node_policies:
             raise RegionError(
                 f"domain pd={self.pd} is not open on node {node_idx} "
@@ -102,8 +122,10 @@ class ProtectionDomain:
         if not charge:
             cost = PrepCost()
         fabric._rkey_counter += 1
-        return MemoryRegion(self, node_idx, va, nbytes, prep, cost,
-                            rkey=fabric._rkey_counter)
+        mr = MemoryRegion(self, node_idx, va, nbytes, prep, cost,
+                          rkey=fabric._rkey_counter)
+        self._regions.append(mr)
+        return mr
 
     # -------------------------------------------------------------- verbs
     def post_write(self, src: MemoryRegion, dst: MemoryRegion,
@@ -116,6 +138,8 @@ class ProtectionDomain:
 
         ``service_class`` overrides the domain's arbiter class for this
         work request only (e.g. a BULK tenant posting one urgent WR)."""
+        if self.closed:
+            raise DomainClosed(f"domain pd={self.pd} is closed")
         self._check_regions(src, dst)
         nbytes = nbytes if nbytes is not None else min(src.length, dst.length)
         src_va = src.addr + src_offset
@@ -126,12 +150,21 @@ class ProtectionDomain:
             "fabric requires equally page-aligned src/dst (as in the thesis runs)"
         fabric = self.fabric
         self._check_quota(src.node_id)     # blocks launch on the src node
-        cq.on_post()
+        # SRQ admission: each block consumes one shared receive entry on
+        # the destination node for the transfer's lifetime
+        n_blocks = len(A.split_blocks(src_va, nbytes))
+        self._srq_acquire(dst.node_id, n_blocks)
+        try:
+            cq.on_post()
+        except WorkQueueFull:
+            fabric.nodes[dst.node_id].tenancy.srq.release(n_blocks)
+            raise
         wr_id = wr_id if wr_id is not None else fabric._next_wr_id()
         t = fabric._start_write(self.pd, src.node_id, src_va,
                                 dst.node_id, dst_va, nbytes,
                                 service_class=service_class
                                 or self.service_class)
+        t.srq_held, t.srq_node = n_blocks, dst.node_id
         return fabric._track(wr_id, WROpcode.WRITE, cq, t)
 
     def post_read(self, target: MemoryRegion, local: MemoryRegion,
@@ -145,6 +178,8 @@ class ProtectionDomain:
 
         ``service_class`` overrides the domain's arbiter class for this
         work request only (demand page-ins post LATENCY, prefetch BULK)."""
+        if self.closed:
+            raise DomainClosed(f"domain pd={self.pd} is closed")
         self._check_regions(target, local)
         nbytes = nbytes if nbytes is not None else min(target.length,
                                                       local.length)
@@ -157,12 +192,21 @@ class ProtectionDomain:
             "fabric requires equally page-aligned target/local (as in the thesis runs)"
         fabric = self.fabric
         self._check_quota(target.node_id)  # blocks launch on the target node
-        cq.on_post()
+        # the read's data lands on the LOCAL node: that is where the
+        # shared receive entries are consumed
+        n_blocks = len(A.split_blocks(target_va, nbytes))
+        self._srq_acquire(local.node_id, n_blocks)
+        try:
+            cq.on_post()
+        except WorkQueueFull:
+            fabric.nodes[local.node_id].tenancy.srq.release(n_blocks)
+            raise
         wr_id = wr_id if wr_id is not None else fabric._next_wr_id()
         t = fabric._start_read(self.pd, target.node_id, target_va,
                                local.node_id, local_va, nbytes,
                                service_class=service_class
                                or self.service_class)
+        t.srq_held, t.srq_node = n_blocks, local.node_id
         return fabric._track(wr_id, WROpcode.READ, cq, t)
 
     def _check_quota(self, sending_node: int) -> None:
@@ -183,6 +227,20 @@ class ProtectionDomain:
             raise TrIdExhausted(
                 f"all {r5.tr_id_space} tr_IDs in flight on node "
                 f"{sending_node}; drain completions first")
+
+    def _srq_acquire(self, recv_node: int, n_blocks: int) -> None:
+        """Claim shared receive entries on the landing node, or raise
+        :class:`TenantQuotaExceeded` — GOLD tenants may dip into the
+        ``srq_gold_reserve`` slice best-effort traffic cannot touch."""
+        srq = self.fabric.nodes[recv_node].tenancy.srq
+        if not srq.try_acquire(n_blocks, gold=self.slo is SLOClass.GOLD):
+            raise TenantQuotaExceeded(
+                f"domain pd={self.pd}: node {recv_node}'s shared receive "
+                f"queue cannot grant {n_blocks} entries "
+                f"({srq.held}/{srq.entries} held"
+                + (f", {srq.gold_reserve} GOLD-reserved"
+                   if srq.gold_reserve else "")
+                + "); drain completions first")
 
     def arbiter_stats(self, node_idx: int) -> ArbiterStats:
         """This domain's DMA-arbiter telemetry on ``node_idx``."""
@@ -218,7 +276,11 @@ class Fabric:
                         tr_id_space=config.tr_id_space,
                         mtt_entries=config.mtt_entries,
                         dma_pool_frames=config.dma_pool_frames,
-                        speculation=config.speculation)
+                        speculation=config.speculation,
+                        bank_overcommit=config.bank_overcommit,
+                        srq_entries=config.srq_entries,
+                        srq_gold_reserve=config.srq_gold_reserve,
+                        tenants_per_node=config.tenants_per_node)
             self.nodes.append(node)
         # the routed interconnect: per-direction links along the physical
         # adjacencies of config.topology (ALL_TO_ALL keeps the seed's
@@ -254,7 +316,8 @@ class Fabric:
                     nodes: Optional[list[int]] = None,
                     service_class: Optional[ServiceClass] = None,
                     arb_weight: Optional[int] = None,
-                    max_outstanding_blocks: Optional[int] = None
+                    max_outstanding_blocks: Optional[int] = None,
+                    slo: Optional[SLOClass] = None
                     ) -> ProtectionDomain:
         """Create protection domain ``pd`` on ``nodes`` (default: all).
 
@@ -266,23 +329,58 @@ class Fabric:
         override the policy's DMA-arbiter parameters for this domain
         (class of its blocks, DRR bandwidth weight, outstanding-block
         quota enforced by the posting verbs).
+
+        ``slo`` sets the tenant's service tier (GOLD / SILVER /
+        BEST_EFFORT — a :class:`~repro.tenancy.SLOClass`, its name or
+        value), overriding the policy's ``slo``.  It derives the arbiter
+        class/weight unless those are given explicitly, and GOLD makes
+        the domain's context banks steal-immune under bank overcommit.
+
+        Raises :class:`DomainExists` for a duplicate pd,
+        :class:`BankCollision` for a ``pd % 16`` clash when
+        ``FabricConfig(bank_overcommit=False)``, and
+        :class:`~repro.api.completion.TenantQuotaExceeded` when a node
+        is at its admission cap.
         """
         if pd in self.domains:
-            raise ValueError(f"domain pd={pd} already open")
+            raise DomainExists(f"domain pd={pd} already open")
+        slo = coerce_slo(slo)
+        if slo is None and policy is not None:
+            slo = policy.slo
+        if slo is None:
+            slo = self.config.default_policy.slo
+        if slo is not None:
+            if service_class is None and (policy is None
+                                          or policy.service_class is None):
+                service_class = slo.service_class
+            if arb_weight is None and (policy is None
+                                       or policy.arb_weight == 1):
+                arb_weight = slo.arb_weight
         node_idxs = list(nodes) if nodes is not None \
             else list(range(len(self.nodes)))
-        # Each domain owns one SMMU context bank (pd % NUM_CONTEXT_BANKS).
-        # A second pd landing on an in-use bank would silently overwrite the
-        # bank's page table — cross-tenant corruption — so reject it here.
-        bank = pd % A.NUM_CONTEXT_BANKS
+        # With overcommit disabled, each domain owns its seed-style bank
+        # (pd % NUM_CONTEXT_BANKS) forever: a second pd landing on an
+        # in-use bank would overwrite the bank's page table — cross-
+        # tenant corruption — so reject it here, across all its nodes,
+        # before any node state is created.
+        if not self.config.bank_overcommit:
+            bank = pd % A.NUM_CONTEXT_BANKS
+            for i in node_idxs:
+                clash = [q for q in self.nodes[i].page_tables
+                         if q % A.NUM_CONTEXT_BANKS == bank]
+                if clash:
+                    raise BankCollision(
+                        f"pd={pd} maps to SMMU context bank {bank}, "
+                        f"already claimed by domain pd={clash[0]} on node "
+                        f"{i} (bank = pd % {A.NUM_CONTEXT_BANKS})")
+        # tenancy admission: check every node before creating on any,
+        # so a rejection cannot leave the domain half-open
         for i in node_idxs:
-            clash = [q for q in self.nodes[i].page_tables
-                     if q % A.NUM_CONTEXT_BANKS == bank]
-            if clash:
-                raise FabricError(
-                    f"pd={pd} maps to SMMU context bank {bank}, already "
-                    f"claimed by domain pd={clash[0]} on node {i} "
-                    f"(bank = pd % {A.NUM_CONTEXT_BANKS})")
+            reason = self.nodes[i].tenancy.admission_error(slo)
+            if reason is not None:
+                self.nodes[i].tenancy.admission_rejections += 1
+                raise TenantQuotaExceeded(
+                    f"open_domain(pd={pd}) refused: {reason} (node {i})")
         effective = {i: policy or self.config.policy_for_node(i)
                      for i in node_idxs}
         for i in node_idxs:
@@ -297,14 +395,61 @@ class Fabric:
                             else eff.arb_weight),
                 max_outstanding_blocks=(
                     max_outstanding_blocks if max_outstanding_blocks
-                    is not None else eff.max_outstanding_blocks))
+                    is not None else eff.max_outstanding_blocks),
+                slo=slo)
         dom = ProtectionDomain(self, pd,
                                policy or self.config.default_policy,
-                               node_policies=effective)
+                               node_policies=effective, slo=slo)
         if service_class is not None:     # explicit override beats policy
             dom.service_class = service_class
         self.domains[pd] = dom
         return dom
+
+    def close_domain(self, pd: int, deadline_us: float = 5e6,
+                     max_events: int = MAX_WAIT_EVENTS) -> None:
+        """Tear down protection domain ``pd`` (the lifecycle the seed
+        never had: domains could only accumulate).
+
+        Semantics, in order:
+
+        1. the domain stops accepting work — posting verbs and
+           ``register_memory`` raise :class:`DomainClosed`;
+        2. in-flight work requests DRAIN (the loop advances until every
+           node's arbiter reports zero outstanding blocks for the pd, up
+           to ``deadline_us`` of virtual time — a ``FabricError`` if it
+           expires);
+        3. every node releases the domain: SMMU bank detached (full TLB
+           shootdown), NP-RDMA MTT entries dropped, all frames returned
+           to the shared pool, SRQ/QP/admission slots freed;
+        4. the domain's memory regions are marked deregistered and the
+           pd becomes reusable by a later ``open_domain``.
+        """
+        dom = self.domains.get(pd)
+        if dom is None:
+            raise FabricError(f"domain pd={pd} is not open")
+        dom.closed = True
+        node_idxs = dom.nodes
+
+        def drained() -> bool:
+            return all(self.nodes[i].arbiter.outstanding(pd) == 0
+                       for i in node_idxs)
+
+        if not _advance_until(self.loop, drained, deadline_us, max_events):
+            dom.closed = False        # give the caller a retry path
+            pending = {i: self.nodes[i].arbiter.outstanding(pd)
+                       for i in node_idxs
+                       if self.nodes[i].arbiter.outstanding(pd)}
+            raise FabricError(
+                f"close_domain(pd={pd}): {sum(pending.values())} blocks "
+                f"still in flight after {deadline_us} us (per node: "
+                f"{pending}); raise deadline_us or drain completions")
+        for i in node_idxs:
+            self.nodes[i].release_domain(pd)
+        for mr in dom._regions:
+            # frames were already released wholesale by release_domain;
+            # the handle just becomes invalid for future verbs
+            mr.registered = False
+        del self.domains[pd]
 
     def domain(self, pd: int) -> Optional[ProtectionDomain]:
         return self.domains.get(pd)
@@ -328,11 +473,14 @@ class Fabric:
         scale soak and the wraparound regression tests assert against.
         ``.npr`` — the NP-RDMA backend (MTT hit/miss/stale, aborts,
         redirects, pool occupancy), all-zero unless a domain selected
-        ``Strategy.NP_RDMA``.  Both are real fields — no getattr
-        fallbacks — so stats consumers fail loudly if a section moves.
+        ``Strategy.NP_RDMA``.  ``.tenancy`` — the tenancy control plane
+        (bank binds/steals/shootdowns, SRQ admission, QP multiplexing,
+        tenant counts).  All are real fields — no getattr fallbacks — so
+        stats consumers fail loudly if a section moves.
         """
         return {n.node_id: ProtocolStats(tr_id=n.r5.id_stats,
-                                         npr=n.npr.stats)
+                                         npr=n.npr.stats,
+                                         tenancy=n.tenancy)
                 for n in self.nodes}
 
     def link_stats(self, src_node: int, dst_node: int):
@@ -403,6 +551,10 @@ class Fabric:
         wr = WorkRequest(wr_id, opcode, cq, transfer, t_posted=self.loop.now)
 
         def _on_complete(t: Transfer) -> None:
+            if t.srq_held:
+                # the completion frees the destination's receive entries
+                self.nodes[t.srq_node].tenancy.srq.release(t.srq_held)
+                t.srq_held = 0
             wc = WorkCompletion(wr_id=wr.wr_id, opcode=wr.opcode,
                                 status=WCStatus.SUCCESS, pd=t.pd,
                                 nbytes=t.nbytes, t_posted=wr.t_posted,

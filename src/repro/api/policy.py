@@ -18,6 +18,7 @@ from repro.core.addresses import PAGES_PER_BLOCK
 from repro.core.arbiter import ServiceClass
 from repro.core.costmodel import CostModel
 from repro.core.resolver import Resolver, Strategy, coerce_strategy
+from repro.tenancy.slo import SLOClass, coerce_slo
 
 
 @dataclasses.dataclass(frozen=True)
@@ -45,6 +46,14 @@ class FaultPolicy:
       not-yet-completed blocks; the posting verbs raise
       :class:`~repro.api.completion.DomainQuotaExceeded` beyond it.
       ``None`` = no quota.
+    * ``slo`` — the tenant's service tier
+      (:class:`~repro.tenancy.SLOClass`: GOLD / SILVER / BEST_EFFORT, a
+      member, name or value).  Setting it derives ``service_class`` and
+      ``arb_weight`` when those are left at their defaults (GOLD →
+      LATENCY weight 4, SILVER → BULK weight 2, BEST_EFFORT → BULK
+      weight 1) and makes GOLD domains' SMMU context banks steal-immune
+      under bank overcommit.  Explicit ``service_class``/``arb_weight``
+      values always win over the derivation.
     """
 
     strategy: Strategy = Strategy.TOUCH_AHEAD
@@ -53,11 +62,21 @@ class FaultPolicy:
     service_class: Optional[ServiceClass] = None
     arb_weight: int = 1
     max_outstanding_blocks: Optional[int] = None
+    slo: Optional[SLOClass] = None
 
     def __post_init__(self) -> None:
         # strict: an unknown strategy spelling used to slip through here
         # and surface later as an opaque error deep in resolver dispatch
         object.__setattr__(self, "strategy", coerce_strategy(self.strategy))
+        object.__setattr__(self, "slo", coerce_slo(self.slo))
+        if self.slo is not None:
+            # the SLO tier implies arbiter parameters unless the caller
+            # pinned them explicitly (defaults: None / 1)
+            if self.service_class is None:
+                object.__setattr__(self, "service_class",
+                                   self.slo.service_class)
+            if self.arb_weight == 1:
+                object.__setattr__(self, "arb_weight", self.slo.arb_weight)
 
     def make_resolver(self, cost: CostModel) -> Resolver:
         """Instantiate the resolver this policy describes."""

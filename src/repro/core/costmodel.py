@@ -98,6 +98,10 @@ class CostModel:
     # --- major faults (future-work knob in the paper; off by default) ------
     major_fault_extra_us: float = 150.0         # NVMe-class page-in
 
+    # --- tenancy control plane (context-bank overcommit) -------------------
+    bank_shootdown_us: float = 3.0              # tlb_invalidate_all broadcast
+    bank_rebind_us: float = 1.5                 # TTBR0/SCTLR rewrite + sync
+
     # --- NP-RDMA backend (repro.npr; arXiv 2310.11062 scale) ---------------
     mtt_fill_us: float = 0.3                    # host installs one MTT entry
     npr_abort_ctrl_us: float = 0.3              # abort control message build

@@ -78,6 +78,9 @@ class ContextBank:
     far_high: int = 0     # high bits
     fsynr: int = 0        # bit 4 = WNR
     stalled_vpn: int = -1
+    # the TLB-invalidation hook attach_domain registered on the bank's
+    # page table, kept so detach_domain can unhook it on a bank steal
+    invalidation_hook: Optional[Callable[[int], None]] = None
 
     @property
     def hupcf(self) -> bool:
@@ -137,8 +140,25 @@ class SMMU:
             bank.sctlr |= SCTLR_CFCFG
         else:
             bank.sctlr &= ~SCTLR_CFCFG
-        page_table.invalidation_hooks.append(
-            lambda vpn, b=bank_index: self.tlb_invalidate(b, vpn))
+        hook = lambda vpn, b=bank_index: self.tlb_invalidate(b, vpn)
+        page_table.invalidation_hooks.append(hook)
+        bank.invalidation_hook = hook
+
+    def detach_domain(self, bank_index: int) -> None:
+        """Unbind a bank (bank steal / close_domain): full TLB shootdown,
+        fault registers cleared, invalidation hook unhooked."""
+        bank = self.banks[bank_index]
+        if bank.page_table is not None and bank.invalidation_hook is not None:
+            try:
+                bank.page_table.invalidation_hooks.remove(
+                    bank.invalidation_hook)
+            except ValueError:
+                pass
+        bank.invalidation_hook = None
+        self.tlb_invalidate_all(bank_index)
+        self.clear_fault(bank_index)
+        bank.stalled_vpn = -1
+        bank.page_table = None
 
     # ----------------------------------------------------------------- TLB
     def tlb_invalidate(self, bank_index: int, vpn: int) -> None:

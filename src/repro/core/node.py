@@ -54,6 +54,8 @@ from repro.core.fault_fifo import FaultFIFO, FIFOEntry
 from repro.core.pagetable import FrameAllocator, PageTable
 from repro.core.resolver import DriverDedupCache, Resolver, Strategy
 from repro.core.simulator import EventLoop, Resource
+from repro.tenancy import TenancyManager
+from repro.tenancy.slo import SLOClass
 
 if TYPE_CHECKING:                                    # pragma: no cover
     # type-only: importing repro.net at runtime here would make the two
@@ -65,6 +67,21 @@ if TYPE_CHECKING:                                    # pragma: no cover
 class FabricError(ValueError):
     """A fabric-level configuration or wiring error (e.g. two live
     protection domains colliding on one SMMU context bank)."""
+
+
+class DomainExists(FabricError):
+    """``open_domain``/``create_domain`` for a pd that is already live."""
+
+
+class BankCollision(FabricError):
+    """Two live protection domains map to one SMMU context bank — only
+    raised when bank overcommit is disabled
+    (``FabricConfig(bank_overcommit=False)``); with the tenancy control
+    plane enabled the BankManager multiplexes the banks instead."""
+
+
+class DomainClosed(FabricError):
+    """A verb was posted against a domain after ``Fabric.close_domain``."""
 
 
 class BlockState(enum.Enum):
@@ -194,6 +211,10 @@ class Transfer:
         self.nbytes = nbytes
         self.on_complete = on_complete
         self.stats = TransferStats()
+        # SRQ receive entries held on the destination node (repro.tenancy):
+        # acquired at post time, released when the completion fires
+        self.srq_held = 0
+        self.srq_node = -1
         # R5 16 KB-aligned segmentation; src/dst assumed equally page-aligned.
         self.blocks = [Block(self, i, sva, dst_va + (sva - src_va), n)
                        for i, (sva, n) in enumerate(split_blocks(src_va, nbytes))]
@@ -219,7 +240,11 @@ class Node:
                  tr_id_space: Optional[int] = None,
                  mtt_entries: int = 4096,
                  dma_pool_frames: int = 64,
-                 speculation: bool = True):
+                 speculation: bool = True,
+                 bank_overcommit: bool = True,
+                 srq_entries: Optional[int] = None,
+                 srq_gold_reserve: int = 0,
+                 tenants_per_node: Optional[int] = None):
         self.loop = loop
         self.cost = cost
         self.node_id = node_id
@@ -251,6 +276,12 @@ class Node:
         self.npr = NPREngine(self, mtt_entries=mtt_entries,
                              dma_pool_frames=dma_pool_frames,
                              speculation=speculation)
+        # tenancy control plane: context-bank virtualization + SRQ/QP
+        # multiplexing + per-node tenant admission (repro.tenancy)
+        self.bank_overcommit = bank_overcommit
+        self.tenancy = TenancyManager(
+            srq_entries=srq_entries, srq_gold_reserve=srq_gold_reserve,
+            tenants_per_node=tenants_per_node)
         # demo/bench hook: blocks by (pd, src vpn) for source-fault attribution
         self.netlink_log: list[NetlinkMessage] = []
 
@@ -259,25 +290,37 @@ class Node:
                       resolver: Optional[Resolver] = None,
                       service_class: Optional[ServiceClass] = None,
                       arb_weight: int = 1,
-                      max_outstanding_blocks: Optional[int] = None
+                      max_outstanding_blocks: Optional[int] = None,
+                      slo: Optional[SLOClass] = None
                       ) -> PageTable:
         """Create protection domain ``pd``, optionally with its own fault
-        resolver (per-domain :class:`~repro.api.policy.FaultPolicy`) and
-        DMA-arbiter parameters (service class, DRR weight, block quota).
+        resolver (per-domain :class:`~repro.api.policy.FaultPolicy`),
+        DMA-arbiter parameters (service class, DRR weight, block quota)
+        and SLO class (GOLD banks are steal-immune).
 
-        Raises :class:`FabricError` if the domain's SMMU context bank
-        (``pd % NUM_CONTEXT_BANKS``) is already live for another pd:
-        attaching the new page table would silently overwrite the bank
-        and corrupt the other tenant's translations.
+        With bank overcommit (the default) the BankManager binds the
+        domain to a free context bank eagerly when one exists — byte
+        identical to the seed's ``pd % 16`` for workloads that fit —
+        and otherwise defers binding to first SMMU use, where an LRU
+        bank steal (shootdown + rebind, cost-modeled) makes room.
+        With ``bank_overcommit=False`` the seed's hard ceiling applies:
+        a ``pd % NUM_CONTEXT_BANKS`` clash raises :class:`BankCollision`.
         """
-        bank = pd % A.NUM_CONTEXT_BANKS
-        owner = self.pd_for_bank(bank)
-        if owner is not None and owner != pd:
-            raise FabricError(
-                f"pd={pd} maps to SMMU context bank {bank}, already live "
-                f"for domain pd={owner} on node {self.node_id} "
-                f"(bank = pd % {A.NUM_CONTEXT_BANKS}); only "
-                f"{A.NUM_CONTEXT_BANKS} concurrent domains fit one node")
+        if pd in self.page_tables:
+            raise DomainExists(
+                f"pd={pd} already live on node {self.node_id}")
+        if not self.bank_overcommit:
+            bank = pd % A.NUM_CONTEXT_BANKS
+            owner = self.pd_for_bank(bank)
+            if owner is not None and owner != pd:
+                raise BankCollision(
+                    f"pd={pd} maps to SMMU context bank {bank}, already "
+                    f"live for domain pd={owner} on node {self.node_id} "
+                    f"(bank = pd % {A.NUM_CONTEXT_BANKS}); only "
+                    f"{A.NUM_CONTEXT_BANKS} concurrent domains fit one "
+                    f"node with bank_overcommit=False")
+        # admission control: per-node tenant cap + the GOLD-bank ceiling
+        self.tenancy.register(pd, slo)
         pt = PageTable(pd, self.allocator, pin_limit_bytes=pin_limit_bytes)
         self.page_tables[pd] = pt
         if resolver is not None:
@@ -289,9 +332,59 @@ class Node:
         self.arbiter.register_domain(
             pd, service_class=service_class, weight=arb_weight,
             max_outstanding_blocks=max_outstanding_blocks)
-        self.smmu.attach_domain(bank, pt, hupcf=self.hupcf,
-                                fault_model=self.fault_model)
+        bound = self.tenancy.banks.try_bind(pd)
+        if bound is not None:
+            self.smmu.attach_domain(bound, pt, hupcf=self.hupcf,
+                                    fault_model=self.fault_model)
         return pt
+
+    def release_domain(self, pd: int) -> int:
+        """Tear down every per-domain resource (``Fabric.close_domain``):
+        detach + shoot down the SMMU bank, drop NP-RDMA MTT entries,
+        release all frames back to the shared pool, forget resolvers.
+        Returns the number of frames released.
+        """
+        bank = self.tenancy.banks.bank_of(pd)
+        if bank is not None:
+            self.smmu.detach_domain(bank)
+        self.tenancy.release(pd)
+        self.npr.unregister_domain(pd)
+        self.domain_resolvers.pop(pd, None)
+        pt = self.page_tables.pop(pd, None)
+        return 0 if pt is None else pt.release_all()
+
+    def bank_of_pd(self, pd: int) -> tuple[int, float]:
+        """The physical context bank serving ``pd``, binding on demand.
+
+        Returns ``(bank, penalty_us)``.  A hit costs nothing.  A lazy
+        bind to a free bank charges the page-table rebind; a bank steal
+        additionally charges the victim's full-TLB shootdown — both
+        reserved on the driver CPU (they are SMMU driver work) and
+        returned so the caller can delay the datapath by the same amount
+        (the cost shows up in fault latency, not just CPU accounting).
+        Stealing detaches the victim from the SMMU and invalidates the
+        victim's NP-RDMA MTT entries: zero stale completions.
+        """
+        tn = self.tenancy
+        binding = tn.bind_bank(
+            pd, fault_active=lambda b: self.smmu.banks[b].fault_active)
+        if binding.hit:
+            return binding.bank, 0.0
+        penalty = self.cost.bank_rebind_us
+        if binding.stolen:
+            self.smmu.detach_domain(binding.bank)
+            tn.banks.stats.shootdowns += 1
+            penalty += self.cost.bank_shootdown_us
+            if binding.victim_pd is not None:
+                # the stolen domain's cached NIC translations must die
+                # with the bank or a speculative NP-RDMA launch could
+                # complete against a translation the SMMU no longer backs
+                self.npr.invalidate_domain(binding.victim_pd)
+        self.smmu.attach_domain(binding.bank, self.page_tables[pd],
+                                hupcf=self.hupcf,
+                                fault_model=self.fault_model)
+        self.driver_cpu.reserve(penalty)
+        return binding.bank, penalty
 
     def pt(self, pd: int) -> PageTable:
         return self.page_tables[pd]
@@ -301,19 +394,16 @@ class Node:
         return self.domain_resolvers.get(pd, self.resolver)
 
     def pd_for_bank(self, bank_index: int) -> Optional[int]:
-        """The PDID owning an SMMU context bank on this node.
+        """The PDID *currently bound to* an SMMU context bank.
 
-        Fault records carry only the bank index (pd % NUM_CONTEXT_BANKS);
-        domain state (page tables, resolvers, pending blocks) is keyed by
-        the full PDID, so pds >= NUM_CONTEXT_BANKS need this reverse map.
-        The fabric rejects two pds sharing a bank, keeping it unique.
+        Fault records carry only the bank index; domain state (page
+        tables, resolvers, pending blocks) is keyed by the full PDID, so
+        the driver needs this reverse map.  O(1) via the BankManager's
+        binding table — and under overcommit the answer changes over
+        time, which is why the fault handler resolves the pd at
+        fault-record-read time, not at tasklet time.
         """
-        if bank_index in self.page_tables:
-            return bank_index
-        for pd in self.page_tables:
-            if pd % A.NUM_CONTEXT_BANKS == bank_index:
-                return pd
-        return None
+        return self.tenancy.banks.pd_for_bank(bank_index)
 
     # ------------------------------------------------------------- network
     def path_to(self, node_id: int) -> Path:
@@ -337,13 +427,18 @@ class Node:
         if wnr:  # destination (write) fault -> pf_rcv_tasklet
             self._schedule_rcv_tasklet()
         else:    # source (read) fault -> pf_send_handler
+            # resolve bank -> pd NOW: under bank overcommit the bank can
+            # be stolen and rebound to another tenant during the tasklet
+            # latency, and the tasklet must bill the *faulting* domain
+            pd = self.pd_for_bank(bank_index)
+            if pd is None:
+                return  # bank stolen before the record was read
             _, end = self.driver_cpu.reserve(c.tasklet_latency_us)
-            self.loop.at(end, self._pf_send_handler, bank_index, vpn)
+            self.loop.at(end, self._pf_send_handler, pd, vpn)
 
     # ------------------------------------------------- source-fault tasklet
-    def _pf_send_handler(self, bank_index: int, vpn: int) -> None:
+    def _pf_send_handler(self, pd: int, vpn: int) -> None:
         c = self.cost
-        pd = self.pd_for_bank(bank_index)
         pt = self.page_tables.get(pd)
         if pt is None:
             return
@@ -497,13 +592,19 @@ class Node:
         interleaved = interleaved or block.transfer.live_blocks > 1
         pd = block.transfer.pd
         vpn = A.page_index(block.dst_va) + page_idx
-        res = self.smmu.translate(pd % A.NUM_CONTEXT_BANKS, vpn, Access.WRITE)
+        # bind-on-use: an overcommitted domain may have to steal a bank
+        # here; the shootdown+rebind penalty delays this page's ACK/NACK
+        # (it is SMMU driver work on the translation's critical path)
+        bank, penalty = self.bank_of_pd(pd)
+        if penalty:
+            block.transfer.stats.driver_us += penalty
+        res = self.smmu.translate(bank, vpn, Access.WRITE)
         if res.disposition is Disposition.OK:
             block.delivered.add(page_idx)
             if len(block.delivered) == block.n_pages:
                 # the ACK travels back over the interconnect: charge the
                 # routed distance (the seed charged one hop, flat)
-                delay = (self.cost.ack_us
+                delay = (penalty + self.cost.ack_us
                          + self.path_to(block.transfer.src_node.node_id)
                                .send_ctrl(0))
                 self.loop.schedule(delay, block.transfer.src_node.r5.on_ack,
@@ -530,7 +631,7 @@ class Node:
         if block.nacked_round != round_id:
             block.nacked_round = round_id
             # the PF-NACK (AXI slave error) propagates back per routed hop
-            delay = (self.cost.nack_us
+            delay = (penalty + self.cost.nack_us
                      + self.path_to(block.transfer.src_node.node_id)
                            .send_ctrl(0))
             self.loop.schedule(delay, block.transfer.src_node.r5.on_nack,
@@ -691,7 +792,6 @@ class R5Scheduler:
             transfer.stats.retransmissions += 1
 
         pd = transfer.pd
-        bank = pd % A.NUM_CONTEXT_BANKS
         first_vpn = block.src_va >> 12
         src_pages = range(first_vpn,
                           ((block.src_va + block.nbytes - 1) >> 12) + 1)
@@ -709,6 +809,13 @@ class R5Scheduler:
             node.npr.dispatch(block, path, latency_class)
             self._arm_timeout(block)
             return
+        # bind-on-use: an overcommitted domain claims (possibly steals) a
+        # context bank before the PLDMA can translate its source pages —
+        # the shootdown+rebind penalty offsets every page this round puts
+        # on the wire, so the steal cost is visible end to end
+        bank, bank_penalty = node.bank_of_pd(pd)
+        if bank_penalty:
+            transfer.stats.driver_us += bank_penalty
         for i, vpn in enumerate(src_pages):
             res = node.smmu.translate(bank, vpn, Access.READ)
             if res.disposition is not Disposition.OK:
@@ -724,7 +831,8 @@ class R5Scheduler:
             delay, interleaved = path.stream_page(
                 nbytes, id(block), latency_class=latency_class)
             block.wire_bytes += nbytes
-            self.loop.schedule(delay, transfer.dst_node.recv_page, block, i,
+            self.loop.schedule(bank_penalty + delay,
+                               transfer.dst_node.recv_page, block, i,
                                block.round_id, interleaved, nbytes)
         self._arm_timeout(block)
 

@@ -159,6 +159,26 @@ class PageTable:
             del self.entries[vpn]
             self._notify_invalidation(vpn)
 
+    def release_all(self) -> int:
+        """Release every frame this domain holds (domain teardown).
+
+        Bulk form of ``munmap`` over the whole table: frames return to
+        the shared allocator, pins drop, PTEs clear.  Per-page
+        invalidation hooks are *not* fired — on ``close_domain`` the SMMU
+        bank is detached (full TLB shootdown) and the NP-RDMA MTT domain
+        dropped wholesale, so per-page notification would only inflate
+        shootdown counters O(pages).  Returns the frames released.
+        """
+        released = 0
+        for pte in self.entries.values():
+            if (pte.state in (PageState.RESIDENT, PageState.SWAPPED)
+                    and pte.frame >= 0):
+                self.allocator.release(pte.frame)
+                released += 1
+        self.entries.clear()
+        self.pinned_pages = 0
+        return released
+
     # --------------------------------------------------------------- lookup
     def lookup(self, vpn: int) -> PTE:
         pte = self.entries.get(vpn)

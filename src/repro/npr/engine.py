@@ -71,6 +71,7 @@ class NPREngine:
                             allocator=node.allocator,
                             on_frames_available=self._pool_wakeup)
         self.domains: dict[int, object] = {}     # pd -> PageTable
+        self._hooks: dict[int, object] = {}      # pd -> invalidation hook
 
     # ------------------------------------------------------------- domains
     def register_domain(self, pd: int, page_table) -> None:
@@ -81,8 +82,30 @@ class NPREngine:
             return
         self.pool.materialize()
         self.domains[pd] = page_table
-        page_table.invalidation_hooks.append(
-            lambda vpn: self.mtt.invalidate(pd, vpn))
+        hook = lambda vpn: self.mtt.invalidate(pd, vpn)
+        page_table.invalidation_hooks.append(hook)
+        self._hooks[pd] = hook
+
+    def unregister_domain(self, pd: int) -> None:
+        """Drop domain ``pd`` (``close_domain``): unhook the page table,
+        forget its MTT entries wholesale.  No-op for non-NPR domains."""
+        pt = self.domains.pop(pd, None)
+        if pt is None:
+            return
+        hook = self._hooks.pop(pd, None)
+        if hook is not None:
+            try:
+                pt.invalidation_hooks.remove(hook)
+            except ValueError:
+                pass
+        self.mtt.drop_domain(pd)
+
+    def invalidate_domain(self, pd: int) -> int:
+        """Stale-mark every MTT entry of ``pd`` (its SMMU context bank
+        was stolen by the tenancy layer).  No-op for non-NPR domains."""
+        if pd not in self.domains:
+            return 0
+        return self.mtt.invalidate_domain(pd)
 
     def owns(self, block: Block) -> bool:
         """Is this block's domain served by the NP-RDMA backend?"""

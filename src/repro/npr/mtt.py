@@ -97,6 +97,31 @@ class MTTCache:
             e.stale = True
             self.stats.mtt_invalidations += 1
 
+    def invalidate_domain(self, pd: int) -> int:
+        """Stale-mark every entry of ``pd`` (its SMMU bank was stolen).
+
+        Same detection-window semantics as per-page :meth:`invalidate`:
+        a speculative DMA racing the bank steal is caught by the
+        verification step instead of completing against a translation
+        the SMMU no longer backs.  Returns entries newly staled.
+        """
+        staled = 0
+        for (epd, _), e in self._entries.items():
+            if epd == pd and not e.stale:
+                e.stale = True
+                staled += 1
+        self.stats.mtt_invalidations += staled
+        return staled
+
+    def drop_domain(self, pd: int) -> int:
+        """Remove every entry of ``pd`` outright (``close_domain`` —
+        nothing can race a closed domain, so no detection window is
+        needed).  Returns entries dropped."""
+        keys = [k for k in self._entries if k[0] == pd]
+        for k in keys:
+            del self._entries[k]
+        return len(keys)
+
     def entries(self):
         """Iterate ``((pd, vpn), entry)`` — for invariant checkers."""
         return self._entries.items()

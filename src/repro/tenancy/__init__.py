@@ -1,0 +1,36 @@
+"""Tenancy control plane: virtualizing the fabric's fixed resources.
+
+The thesis hardware exposes hard limits — 16 SMMU context banks per
+node (§1.3.1.4), a fixed PLDMA descriptor pool, one receive path — and
+the seed reproduction inherited them literally: the 17th protection
+domain on a node was rejected.  This package is the control-plane layer
+between the verbs API (``repro.api``) and the datapath (``repro.core``)
+that multiplexes *many* virtual tenants onto those fixed resources, in
+the spirit of RDMAvisor/RDMAbox-style NIC virtualization:
+
+* ``BankManager`` — context-bank overcommit with LRU bank stealing
+  (shootdown + rebind cost-modeled in ``CostModel``);
+* ``SRQ`` / ``QPMux`` — bounded shared receive entries and queue-pair
+  multiplexing with typed ``TenantQuotaExceeded`` backpressure;
+* ``SLOClass`` — GOLD/SILVER/BEST_EFFORT tiers mapped onto arbiter
+  service classes, weights and bank-steal immunity;
+* ``TenancyManager`` — the per-node composition of all of the above,
+  surfaced through ``Fabric.protocol_stats().tenancy`` and the soak
+  harness' ``"tenancy"`` stats section.
+
+Import discipline: this package sits *below* ``repro.api`` (which
+imports it) and imports only ``repro.core`` leaf modules, never the
+api layer or ``repro.core.node``.
+"""
+
+from repro.tenancy.banks import (BankManager, BankStats, Binding,
+                                 NoBankAvailable)
+from repro.tenancy.manager import TenancyManager
+from repro.tenancy.qp import QPMux, SRQ, SRQStats
+from repro.tenancy.slo import SLOClass, coerce_slo
+
+__all__ = [
+    "BankManager", "BankStats", "Binding", "NoBankAvailable",
+    "QPMux", "SLOClass", "SRQ", "SRQStats", "TenancyManager",
+    "coerce_slo",
+]

@@ -229,6 +229,115 @@ def check_arbiter_consistency(fabric) -> List[str]:
     return out
 
 
+def check_bank_conservation(fabric) -> List[str]:
+    """Tenancy control-plane invariants on every node's BankManager/SMMU:
+
+    * the pd <-> bank binding is a bijection: no two domains share a
+      bank, no domain holds two banks, and at most ``capacity`` (16)
+      banks are ever bound;
+    * the SMMU agrees with the manager: a bound bank's attached page
+      table IS the bound domain's page table, and an unbound bank is
+      detached;
+    * TLB entries exist only for bound banks (a steal's
+      ``tlb_invalidate_all`` left nothing behind);
+    * the counters obey their accounting identities:
+      ``shootdowns == steals`` (every steal shoots down the victim) and
+      ``binds >= steals`` (a steal is one kind of bind).
+    """
+    out = []
+    for node in fabric.nodes:
+        tag = f"node {node.node_id}"
+        mgr = node.tenancy.banks
+        bindings = mgr.bindings()               # bank -> pd snapshot
+        if len(bindings) > mgr.capacity:
+            out.append(f"{tag}: {len(bindings)} banks bound, capacity "
+                       f"{mgr.capacity}")
+        pds = list(bindings.values())
+        if len(set(pds)) != len(pds):
+            out.append(f"{tag}: one pd bound to multiple banks")
+        for bank, pd in bindings.items():
+            if not mgr.registered(pd):
+                out.append(f"{tag}: bank {bank} bound to unregistered "
+                           f"pd={pd}")
+            pt = node.page_tables.get(pd)
+            attached = node.smmu.banks[bank].page_table
+            if pt is None:
+                out.append(f"{tag}: bank {bank} bound to pd={pd} with no "
+                           f"page table")
+            elif attached is not pt:
+                out.append(f"{tag}: bank {bank} SMMU page table is not "
+                           f"pd={pd}'s (stale attach after a steal?)")
+        for bank in range(mgr.capacity):
+            if bank not in bindings \
+                    and node.smmu.banks[bank].page_table is not None:
+                out.append(f"{tag}: unbound bank {bank} still attached "
+                           f"in the SMMU")
+        for (bank, vpn) in node.smmu._tlb:
+            if bank not in bindings:
+                out.append(f"{tag}: TLB entry for unbound bank {bank} "
+                           f"vpn={vpn:#x} (missed shootdown)")
+        st = mgr.stats
+        if st.shootdowns != st.steals:
+            out.append(f"{tag}: {st.steals} steals but {st.shootdowns} "
+                       f"shootdowns (every steal must invalidate)")
+        if st.binds < st.steals:
+            out.append(f"{tag}: binds {st.binds} < steals {st.steals}")
+    return out
+
+
+def check_tenant_isolation(fabric) -> List[str]:
+    """Cross-tenant isolation after any amount of bank thrash:
+
+    * no physical frame is owned by two (pd, vpn) mappings — the
+      FrameAllocator's owner ledger is authoritative and every owning
+      page table agrees with it;
+    * every TLB entry's cached frame matches the *current* owner's page
+      table (a stolen bank's stale walks can never leak another
+      tenant's frame);
+    * SRQ accounting: held entries never exceed the configured bound
+      and, once the fabric drained, every acquired entry was released.
+    """
+    from repro.npr.pool import POOL_PD
+    out = []
+    for node in fabric.nodes:
+        tag = f"node {node.node_id}"
+        for frame, (pd, vpn) in node.allocator.owner.items():
+            if pd == POOL_PD:
+                continue      # NP-RDMA DMA-pool frames: no page table
+            pt = node.page_tables.get(pd)
+            if pt is None:
+                # domain closed: release_domain should have freed these
+                out.append(f"{tag}: frame {frame} owned by closed pd={pd}")
+                continue
+            pte = pt.entries.get(vpn)
+            if pte is None or pte.frame != frame:
+                out.append(f"{tag}: allocator says frame {frame} -> "
+                           f"(pd={pd}, vpn={vpn:#x}) but the page table "
+                           f"disagrees")
+        bindings = node.tenancy.banks.bindings()
+        for (bank, vpn), frame in node.smmu._tlb.items():
+            pd = bindings.get(bank)
+            if pd is None:
+                continue                    # reported by bank conservation
+            pt = node.page_tables.get(pd)
+            pte = pt.entries.get(vpn) if pt is not None else None
+            if pte is None or pte.state.name != "RESIDENT" \
+                    or pte.frame != frame:
+                out.append(f"{tag}: TLB bank {bank} vpn={vpn:#x} caches "
+                           f"frame {frame} not owned by pd={pd} "
+                           f"(cross-tenant leak)")
+        srq = node.tenancy.srq
+        limit = srq.entries
+        if limit is not None and srq.held > limit:
+            out.append(f"{tag}: SRQ holds {srq.held} > {limit} entries")
+        if srq.held < 0:
+            out.append(f"{tag}: SRQ held count negative ({srq.held})")
+        if fabric.loop.idle and srq.held:
+            out.append(f"{tag}: {srq.held} SRQ entries still held after "
+                       f"drain (leaked receive credits)")
+    return out
+
+
 # ------------------------------------------------------------------ vmem
 def check_vmem_frame_conservation(pool) -> List[str]:
     """No frame double-owned across the pool's address spaces, and the

@@ -20,10 +20,12 @@ from repro.api.fabric import Fabric
 from repro.api.memory import BufferPrep
 from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.testing.invariants import (check_arbiter_consistency,
+                                      check_bank_conservation,
                                       check_completion_conservation,
                                       check_link_conservation,
                                       check_npr_consistency,
                                       check_pinned_resident,
+                                      check_tenant_isolation,
                                       check_tr_id_lifecycle)
 from repro.testing.traffic import (FaultInjection, TenantRun, TenantSpec,
                                    schedule_injection)
@@ -144,6 +146,8 @@ def soak(seed: int,
     violations += check_link_conservation(fabric)
     violations += check_tr_id_lifecycle(fabric)
     violations += check_npr_consistency(fabric)
+    violations += check_bank_conservation(fabric)
+    violations += check_tenant_isolation(fabric)
 
     # ---- deterministic report -------------------------------------------
     stats = {
@@ -157,6 +161,9 @@ def soak(seed: int,
         "npr": {f"node{nid}": s.npr.as_dict()
                 for nid, s in sorted(fabric.protocol_stats().items())
                 if s.npr.active},
+        "tenancy": {f"node{nid}": s.tenancy.as_dict()
+                    for nid, s in sorted(fabric.protocol_stats().items())
+                    if s.tenancy.tenants or s.tenancy.bank_stats.binds},
         "makespan_us": round(fabric.now, 6),
         "events": fabric.loop.events_processed,
         "violations": sorted(violations),

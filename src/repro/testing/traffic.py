@@ -22,6 +22,8 @@ from repro.api.policy import FaultPolicy
 from repro.core import addresses as A
 from repro.core.arbiter import ServiceClass
 from repro.core.resolver import Strategy
+from repro.tenancy import BankManager
+from repro.tenancy.slo import SLOClass
 
 SRC_BASE = 0x10_0000_0000
 DST_BASE = 0x20_0000_0000
@@ -39,6 +41,9 @@ class TenantSpec:
     strategy: Strategy = Strategy.TOUCH_AHEAD
     arb_weight: int = 1
     max_outstanding_blocks: Optional[int] = None
+    # tenant service tier (GOLD / SILVER / BEST_EFFORT): derives the
+    # arbiter class/weight and GOLD bank-steal immunity (repro.tenancy)
+    slo: Optional[SLOClass] = None
     # arrival process
     mode: str = "closed"            # "closed" (fixed in-flight) | "open"
     inflight: int = 2               # closed-loop concurrency
@@ -102,7 +107,8 @@ class TenantRun:
                 strategy=spec.strategy,
                 service_class=spec.service_class,
                 arb_weight=spec.arb_weight,
-                max_outstanding_blocks=spec.max_outstanding_blocks),
+                max_outstanding_blocks=spec.max_outstanding_blocks,
+                slo=spec.slo),
             nodes=(list(spec.open_on) if spec.open_on is not None else None))
         self.cq = fabric.create_cq(depth=cq_depth)
         self._mrs: dict[int, tuple] = {}      # request idx -> (src, dst)
@@ -261,28 +267,25 @@ def scale_mix(n_nodes: int,
       NACK/RAPF/FIFO recovery is exercised before, across and after the
       wrap boundary.
 
-    Domains are node-scoped (``open_on``), so SMMU context banks
-    (pd % 16) stay collision-free: tenants 16 apart never share a node
-    for ``n_nodes > 17``, and the hot pds are chosen off the banks used
-    on their two nodes.
+    Bank assignment is delegated to :class:`repro.tenancy.BankManager` —
+    the same allocator the SMMU driver uses under overcommit — instead
+    of the old hand-rolled ``pd % 16`` juggling.  The layout is
+    validated to admit an *eager* (steal-free) binding on every node, so
+    the tier's timing baseline stays free of shootdown penalties.
     """
-    if n_nodes < 18:
-        raise ValueError(f"scale_mix needs >= 18 nodes for bank-collision-"
-                         f"free pd assignment, got {n_nodes}")
+    if n_nodes < 2:
+        raise ValueError(f"scale_mix needs >= 2 nodes, got {n_nodes}")
     blocks_per_request = request_bytes // A.BLOCK_SIZE
     specs: list[TenantSpec] = []
-    # hot tenants: node hot_node -> hot_node + 8 (several routed hops on a
-    # torus).  pd banks: ring pds on those nodes are {hot, hot+8} and their
-    # predecessors {hot-1, hot+7}; +2/+3 off those banks mod 16.
-    hot_pd = n_nodes + 2
+    # hot tenants: node hot_node -> hot_node + 8 (several routed hops on
+    # a torus).  Ring tenants own pds 0..n_nodes-1; the hot pair simply
+    # takes the next two — the BankManager finds them free banks, no
+    # modular arithmetic needed.
+    hot_pd = n_nodes
+    hot_fault_pd = n_nodes + 1
     hot_dst = (hot_node + 8) % n_nodes
-    used_banks = {hot_node % 16, (hot_node - 1) % 16, hot_dst % 16,
-                  (hot_dst - 1) % 16}
-    while hot_pd % 16 in used_banks:
-        hot_pd += 1
-    hot_fault_pd = hot_pd + 1
-    while hot_fault_pd % 16 in used_banks or hot_fault_pd % 16 == hot_pd % 16:
-        hot_fault_pd += 1
+    if hot_dst == hot_node:                   # small fabrics: no loopback
+        hot_dst = (hot_node + 1) % n_nodes
     fault_blocks = fault_requests * (65536 // A.BLOCK_SIZE)
     hot_clean_requests = max(1, (hot_blocks - fault_blocks)
                              // blocks_per_request)
@@ -314,17 +317,21 @@ def scale_mix(n_nodes: int,
             fresh_dst=False, region_slots=4,
             src_node=k, dst_node=(k + 1) % n_nodes,
             open_on=(k, (k + 1) % n_nodes)))
-    # SMMU context banks (pd % 16) must be unique per node
-    banks: dict[tuple[int, int], int] = {}
+    # prove the layout admits an eager, steal-free binding: run every
+    # node's tenant set through a scratch BankManager (the allocator the
+    # SMMU driver itself uses) — register() rejects duplicate pds and
+    # try_bind() returns None once a node's 16 banks are exhausted
+    managers: dict[int, BankManager] = {}
     for s in specs:
-        for node in s.open_on:
-            key = (node, s.pd % 16)
-            if key in banks:
+        for node in dict.fromkeys(s.open_on):
+            mgr = managers.setdefault(node, BankManager())
+            mgr.register(s.pd)
+            if mgr.try_bind(s.pd) is None:
                 raise ValueError(
-                    f"scale_mix bank collision on node {node}: pd {s.pd} "
-                    f"and pd {banks[key]} share SMMU bank {s.pd % 16} "
-                    f"(pick an n_nodes with (n_nodes - 1) % 16 != 0)")
-            banks[key] = s.pd
+                    f"scale_mix overcommits node {node}: pd {s.pd} is "
+                    f"tenant #{mgr.bound_count() + 1} but the SMMU has "
+                    f"only {mgr.capacity} context banks — the tier's "
+                    f"steal-free baseline would not hold")
     return specs
 
 

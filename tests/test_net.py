@@ -192,8 +192,13 @@ class TestControlDistanceAccounting:
 
 # ------------------------------------------------- context-bank collisions
 class TestContextBankCollision:
+    """With ``bank_overcommit=False`` the seed's hard pd % 16 ceiling is
+    back: two live domains may never map to one SMMU context bank.  (The
+    default, ``bank_overcommit=True``, virtualizes the banks instead —
+    covered in test_tenancy.py.)"""
+
     def test_open_domain_collision_is_fabric_error(self):
-        fab = build()
+        fab = build(bank_overcommit=False)
         fab.open_domain(1)
         with pytest.raises(FabricError, match="context bank"):
             fab.open_domain(1 + A.NUM_CONTEXT_BANKS)
@@ -202,7 +207,7 @@ class TestContextBankCollision:
         """All 16 banks live -> the 17th concurrent domain must raise a
         clear FabricError instead of silently corrupting bank 0's page
         table (the seed's pd % NUM_CONTEXT_BANKS aliasing)."""
-        fab = build()
+        fab = build(bank_overcommit=False)
         for pd in range(A.NUM_CONTEXT_BANKS):
             fab.open_domain(pd)
         with pytest.raises(FabricError, match="context bank"):
@@ -212,7 +217,7 @@ class TestContextBankCollision:
         """The guard lives in Node.create_domain itself, so direct core
         users (not just Fabric.open_domain) cannot alias a live bank —
         including the reverse direction (low pd onto a high pd's bank)."""
-        fab = build()
+        fab = build(bank_overcommit=False)
         node = fab.nodes[0]
         node.create_domain(3 + A.NUM_CONTEXT_BANKS)
         with pytest.raises(FabricError, match="context bank"):
@@ -220,6 +225,23 @@ class TestContextBankCollision:
         # the failed create left no partial state behind
         assert 3 not in node.page_tables
         node.create_domain(4)                         # other banks fine
+
+    def test_collision_is_typed_bank_collision(self):
+        """ISSUE-7 satellite: the clash raises the typed BankCollision
+        subclass, not a bare FabricError."""
+        from repro.api import BankCollision
+        fab = build(bank_overcommit=False)
+        fab.open_domain(1)
+        with pytest.raises(BankCollision):
+            fab.open_domain(1 + A.NUM_CONTEXT_BANKS)
+
+    def test_overcommit_lifts_the_ceiling(self):
+        """Default config: the same pd pair coexists, the second domain
+        simply shares the bank pool under LRU stealing."""
+        fab = build()
+        fab.open_domain(1)
+        fab.open_domain(1 + A.NUM_CONTEXT_BANKS)      # no raise
+        assert fab.domain(1 + A.NUM_CONTEXT_BANKS) is not None
 
     def test_fabric_error_is_value_error(self):
         """Back-compat: callers catching ValueError keep working."""

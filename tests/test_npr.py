@@ -235,7 +235,7 @@ class TestStatsSurfaces:
         assert isinstance(ps.tr_id, TrIdStats)
         assert isinstance(ps.npr, NPRStats)
         d = ps.as_dict()
-        assert set(d) == {"tr_id", "npr"}
+        assert set(d) == {"tr_id", "npr", "tenancy"}
         assert d["npr"]["stale_completions"] == 0
 
     def test_paging_stats_merge_includes_npr_fields(self):

@@ -1,0 +1,449 @@
+"""Tenancy control plane (ISSUE-7): SMMU context-bank virtualization
+(BankManager overcommit + LRU stealing), domain lifecycle
+(``Fabric.close_domain``), SRQ/QP multiplexing with quota backpressure,
+SLO classes, admission control, and the typed error taxonomy
+(``DomainExists`` / ``BankCollision`` / ``DomainClosed`` /
+``TenantQuotaExceeded``).
+"""
+
+import pytest
+
+from repro.api import (BankCollision, BankManager, BufferPrep, DomainClosed,
+                       DomainExists, Fabric, FabricConfig, FabricError,
+                       FaultPolicy, SLOClass, ServiceClass, Strategy,
+                       TenantQuotaExceeded, WorkQueueFull, coerce_slo)
+from repro.core import addresses as A
+from repro.tenancy.banks import NoBankAvailable
+from repro.tenancy.qp import QPMux, SRQ
+from repro.testing import check_bank_conservation, check_tenant_isolation
+
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+CAP = A.NUM_CONTEXT_BANKS
+
+
+def build(n_nodes=2, **kw):
+    return Fabric.build(FabricConfig(n_nodes=n_nodes, **kw))
+
+
+def write(fab, dom, nbytes=16384, dst_prep=BufferPrep.FAULTING,
+          src_node=0, dst_node=1):
+    """One completed write on ``dom``; regions strided per call."""
+    i = getattr(fab, "_w", 0)
+    fab._w = i + 1
+    src = dom.register_memory(src_node, SRC + i * 0x100000, nbytes,
+                              prep=BufferPrep.TOUCHED)
+    dst = dom.register_memory(dst_node, DST + i * 0x100000, nbytes,
+                              prep=dst_prep)
+    cq = fab.create_cq()
+    return dom.post_write(src, dst, cq=cq).result(deadline_us=1e7)
+
+
+# ===================================================== BankManager units
+class TestBankManager:
+    def test_register_duplicate_rejected(self):
+        mgr = BankManager()
+        mgr.register(5)
+        with pytest.raises(ValueError, match="already registered"):
+            mgr.register(5)
+
+    def test_eager_bind_prefers_seed_bank(self):
+        """pds that fit the 16 banks bind exactly like the seed's
+        pd % 16 — byte-identical timing for legacy workloads."""
+        mgr = BankManager()
+        for pd in (3, 19, 7):        # 19 % 16 == 3 is taken -> lowest free
+            mgr.register(pd)
+        assert mgr.try_bind(3) == 3
+        assert mgr.try_bind(19) == 0          # fallback: lowest free bank
+        assert mgr.try_bind(7) == 7
+        assert mgr.stats.binds == 3 and mgr.stats.steals == 0
+
+    def test_try_bind_never_steals(self):
+        mgr = BankManager()
+        for pd in range(CAP + 1):
+            mgr.register(pd)
+        assert all(mgr.try_bind(pd) is not None for pd in range(CAP))
+        assert mgr.try_bind(CAP) is None      # full: defer, don't steal
+        assert mgr.stats.steals == 0
+        assert mgr.bound_count() == CAP
+
+    def test_bind_hit_touches_lru(self):
+        mgr = BankManager()
+        mgr.register(1)
+        b1 = mgr.bind(1)
+        b2 = mgr.bind(1)
+        assert not b1.hit and b2.hit and b2.bank == b1.bank
+        assert mgr.stats.hits == 1
+
+    def test_steal_evicts_lru(self):
+        mgr = BankManager()
+        for pd in range(CAP + 1):
+            mgr.register(pd)
+        for pd in range(CAP):
+            mgr.bind(pd)
+        mgr.bind(0)                            # refresh pd 0: pd 1 is LRU now
+        b = mgr.bind(CAP)
+        assert b.stolen and b.victim_pd == 1 and b.bank == 1
+        assert mgr.bank_of(1) is None
+        assert mgr.stats.steals == 1
+        # the victim re-binding later counts as a rebind
+        rb = mgr.bind(1)
+        assert rb.stolen and mgr.stats.rebinds == 1
+
+    def test_immune_victims_stolen_last(self):
+        mgr = BankManager(capacity=2)
+        mgr.register(0, steal_immune=True)     # GOLD, bound first = LRU
+        mgr.register(1)
+        mgr.register(2)
+        mgr.bind(0)
+        mgr.bind(1)
+        b = mgr.bind(2)
+        # LRU is pd 0, but it is immune: pd 1 is evicted instead
+        assert b.stolen and b.victim_pd == 1
+        assert mgr.stats.immune_steals == 0
+
+    def test_all_immune_still_makes_progress(self):
+        mgr = BankManager(capacity=1)
+        mgr.register(0, steal_immune=True)
+        mgr.register(1)
+        mgr.bind(0)
+        b = mgr.bind(1)
+        assert b.stolen and b.victim_pd == 0
+        assert mgr.stats.immune_steals == 1
+
+    def test_fault_active_banks_stolen_last(self):
+        mgr = BankManager(capacity=2)
+        for pd in range(3):
+            mgr.register(pd)
+        mgr.bind(0)
+        mgr.bind(1)
+        # bank 0 (pd 0, the LRU) is mid-fault: pd 1 is evicted instead
+        b = mgr.bind(2, fault_active=lambda bank: bank == 0)
+        assert b.stolen and b.victim_pd == 1
+
+    def test_nothing_bound_raises(self):
+        mgr = BankManager(capacity=0)
+        mgr.register(1)
+        with pytest.raises(NoBankAvailable):
+            mgr.bind(1)
+
+    def test_release_frees_bank(self):
+        mgr = BankManager()
+        mgr.register(4)
+        mgr.bind(4)
+        assert mgr.release(4) == 4
+        assert mgr.pd_for_bank(4) is None and not mgr.registered(4)
+        assert mgr.release(4) is None          # idempotent
+
+    def test_bindings_bijection(self):
+        mgr = BankManager()
+        for pd in range(40):
+            mgr.register(pd)
+            mgr.bind(pd)
+        snap = mgr.bindings()
+        assert len(snap) == CAP
+        assert len(set(snap.values())) == CAP  # no pd holds two banks
+
+
+# ============================================================= SLO units
+class TestSLO:
+    def test_coerce_accepts_member_name_value(self):
+        assert coerce_slo(SLOClass.GOLD) is SLOClass.GOLD
+        assert coerce_slo("GOLD") is SLOClass.GOLD
+        assert coerce_slo("gold") is SLOClass.GOLD
+        assert coerce_slo(None) is None
+        with pytest.raises(ValueError, match="GOLD"):
+            coerce_slo("platinum")
+
+    def test_tier_derivations(self):
+        assert SLOClass.GOLD.service_class is ServiceClass.LATENCY
+        assert SLOClass.SILVER.service_class is ServiceClass.BULK
+        assert (SLOClass.GOLD.arb_weight, SLOClass.SILVER.arb_weight,
+                SLOClass.BEST_EFFORT.arb_weight) == (4, 2, 1)
+        assert SLOClass.GOLD.steal_immune
+        assert not SLOClass.SILVER.steal_immune
+
+    def test_policy_slo_derives_arbiter_params(self):
+        p = FaultPolicy(slo="gold")
+        assert p.service_class is ServiceClass.LATENCY
+        assert p.arb_weight == 4
+        # explicit values beat the derivation
+        q = FaultPolicy(slo=SLOClass.GOLD, service_class=ServiceClass.BULK,
+                        arb_weight=7)
+        assert q.service_class is ServiceClass.BULK and q.arb_weight == 7
+
+    def test_open_domain_slo_makes_bank_immune(self):
+        fab = build()
+        fab.open_domain(1, slo="gold")
+        fab.open_domain(2)
+        assert fab.nodes[0].tenancy.banks.is_immune(1)
+        assert not fab.nodes[0].tenancy.banks.is_immune(2)
+        assert fab.domain(1).slo is SLOClass.GOLD
+
+
+# ======================================================== SRQ/QPMux units
+class TestSRQ:
+    def test_unbounded_always_admits(self):
+        srq = SRQ()
+        assert srq.try_acquire(10 ** 6)
+        assert srq.stats.admitted == 10 ** 6
+
+    def test_backpressure_and_release(self):
+        srq = SRQ(entries=4)
+        assert srq.try_acquire(3)
+        assert not srq.try_acquire(2)          # 3 + 2 > 4
+        assert srq.stats.rejected == 1
+        srq.release(3)
+        assert srq.try_acquire(4)
+        assert srq.stats.peak_held == 4
+
+    def test_gold_reserve(self):
+        srq = SRQ(entries=4, gold_reserve=2)
+        assert srq.try_acquire(2)              # best-effort limit: 4 - 2
+        assert not srq.try_acquire(1)
+        assert srq.try_acquire(2, gold=True)   # GOLD reaches the full 4
+
+    def test_qpmux_shares_physical_qps(self):
+        mux = QPMux(phys_qps=4)
+        for pd in range(9):
+            mux.attach(pd)
+        assert mux.virtual_qps == 9
+        assert mux.qp_of(5) == 1
+        assert mux.max_share == 3              # ceil(9 / 4)
+        mux.detach(5)
+        assert mux.qp_of(5) is None and mux.virtual_qps == 8
+
+
+# ==================================================== typed error taxonomy
+class TestTypedErrors:
+    def test_domain_exists_is_typed(self):
+        fab = build()
+        fab.open_domain(1)
+        with pytest.raises(DomainExists):
+            fab.open_domain(1)
+        assert issubclass(DomainExists, FabricError)
+        assert issubclass(DomainExists, ValueError)   # back-compat
+
+    def test_bank_collision_only_without_overcommit(self):
+        strict = build(bank_overcommit=False)
+        strict.open_domain(1)
+        with pytest.raises(BankCollision):
+            strict.open_domain(1 + CAP)
+        loose = build()                         # default: virtualized banks
+        loose.open_domain(1)
+        loose.open_domain(1 + CAP)              # no raise
+        assert issubclass(BankCollision, FabricError)
+
+    def test_domain_closed_on_post_and_register(self):
+        fab = build()
+        dom = fab.open_domain(1)
+        src = dom.register_memory(0, SRC, 16384, prep=BufferPrep.TOUCHED)
+        dst = dom.register_memory(1, DST, 16384, prep=BufferPrep.TOUCHED)
+        fab.close_domain(1)
+        cq = fab.create_cq()
+        with pytest.raises(DomainClosed):
+            dom.post_write(src, dst, cq=cq)
+        with pytest.raises(DomainClosed):
+            dom.register_memory(0, SRC + 0x100000, 4096)
+
+
+# ======================================================= domain lifecycle
+class TestCloseDomain:
+    def test_close_releases_frames_bank_and_pd(self):
+        fab = build()
+        dom = fab.open_domain(1)
+        write(fab, dom)
+        n0, n1 = fab.nodes
+        assert any(o[0] == 1 for o in n1.allocator.owner.values())
+        fab.close_domain(1)
+        for node in (n0, n1):
+            assert 1 not in node.page_tables
+            assert node.tenancy.banks.bank_of(1) is None
+            assert not any(o[0] == 1 for o in node.allocator.owner.values())
+        # the pd is immediately reusable
+        dom2 = fab.open_domain(1)
+        assert write(fab, dom2).latency_us > 0
+
+    def test_close_marks_regions_deregistered(self):
+        fab = build()
+        dom = fab.open_domain(1)
+        mr = dom.register_memory(0, SRC, 16384, prep=BufferPrep.TOUCHED)
+        fab.close_domain(1)
+        assert mr.registered is False
+
+    def test_close_unknown_pd_raises(self):
+        fab = build()
+        with pytest.raises(FabricError, match="not open"):
+            fab.close_domain(9)
+
+    def test_close_drains_in_flight_work(self):
+        fab = build()
+        dom = fab.open_domain(1)
+        src = dom.register_memory(0, SRC, 65536, prep=BufferPrep.TOUCHED)
+        dst = dom.register_memory(1, DST, 65536, prep=BufferPrep.FAULTING)
+        cq = fab.create_cq()
+        wr = dom.post_write(src, dst, cq=cq)    # in flight, faulting
+        fab.close_domain(1)                     # must drain, not strand
+        assert fab.nodes[1].arbiter.outstanding(1) == 0
+        # the completion was delivered, not lost with the domain
+        wc = wr.result(deadline_us=1e7)
+        assert wc.latency_us > 0 and wc.stats.dst_faults > 0
+
+
+# =========================================== admission + SRQ backpressure
+class TestAdmission:
+    def test_tenants_per_node_cap(self):
+        fab = build(tenants_per_node=2)
+        fab.open_domain(1)
+        fab.open_domain(2)
+        with pytest.raises(TenantQuotaExceeded):
+            fab.open_domain(3)
+        # rejected atomically: no half-open node state anywhere
+        assert all(3 not in n.page_tables for n in fab.nodes)
+        fab.close_domain(2)
+        fab.open_domain(3)                      # slot freed by close
+
+    def test_gold_cap_keeps_one_bank_stealable(self):
+        fab = build()
+        for pd in range(CAP - 1):
+            fab.open_domain(pd, slo="gold")
+        with pytest.raises(TenantQuotaExceeded, match="GOLD"):
+            fab.open_domain(CAP - 1, slo="gold")
+        fab.open_domain(CAP - 1, slo="silver")  # non-GOLD still admitted
+
+    def test_srq_backpressure_raises_typed_error(self):
+        fab = build(srq_entries=2)
+        dom = fab.open_domain(1)
+        src = dom.register_memory(0, SRC, 64 * 1024,
+                                  prep=BufferPrep.TOUCHED)
+        dst = dom.register_memory(1, DST, 64 * 1024,
+                                  prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        with pytest.raises(TenantQuotaExceeded) as ei:
+            dom.post_write(src, dst, cq=cq)     # 4 blocks > 2 entries
+        assert isinstance(ei.value, WorkQueueFull)   # catchable as before
+        assert fab.nodes[1].tenancy.srq.stats.rejected == 1
+        assert fab.nodes[1].tenancy.srq.held == 0    # nothing leaked
+
+    def test_srq_entries_released_on_completion(self):
+        fab = build(srq_entries=4)
+        dom = fab.open_domain(1)
+        write(fab, dom, nbytes=4 * A.BLOCK_SIZE,
+              dst_prep=BufferPrep.TOUCHED)
+        srq = fab.nodes[1].tenancy.srq
+        assert srq.stats.admitted == 4
+        assert srq.stats.released == 4 and srq.held == 0
+        # and the fabric can keep posting forever at this size
+        write(fab, dom, nbytes=4 * A.BLOCK_SIZE,
+              dst_prep=BufferPrep.TOUCHED)
+        assert srq.held == 0
+
+    def test_gold_reserve_admits_gold_only(self):
+        fab = build(srq_entries=4, srq_gold_reserve=2)
+        be = fab.open_domain(1, slo="best_effort")
+        gold = fab.open_domain(2, slo="gold")
+        cq = fab.create_cq()
+        mk = lambda dom, off: (
+            dom.register_memory(0, SRC + off, 3 * A.BLOCK_SIZE,
+                                prep=BufferPrep.TOUCHED),
+            dom.register_memory(1, DST + off, 3 * A.BLOCK_SIZE,
+                                prep=BufferPrep.TOUCHED))
+        s1, d1 = mk(be, 0)
+        with pytest.raises(TenantQuotaExceeded):
+            be.post_write(s1, d1, cq=cq)        # 3 > 4 - 2 reserved
+        s2, d2 = mk(gold, 0x100000)
+        gold.post_write(s2, d2, cq=cq).result(deadline_us=1e7)
+
+
+# ==================== steal -> shootdown -> rebind -> refault (satellite)
+class TestStealDatapath:
+    def test_tlb_invalidate_all_counts_per_entry(self):
+        """Satellite: SMMU.tlb_invalidate_all(bank) telemetry — one
+        invalidation counted per cached walk, none for other banks."""
+        fab = build()
+        dom = fab.open_domain(1)
+        write(fab, dom, nbytes=4 * 4096, dst_prep=BufferPrep.TOUCHED)
+        smmu = fab.nodes[0].smmu
+        bank = fab.nodes[0].tenancy.banks.bank_of(1)
+        cached = sum(1 for (b, _) in smmu._tlb if b == bank)
+        assert cached > 0
+        before = smmu.stats.tlb_invalidations
+        smmu.tlb_invalidate_all(bank)
+        assert smmu.stats.tlb_invalidations == before + cached
+        assert not any(b == bank for (b, _) in smmu._tlb)
+        smmu.tlb_invalidate_all(bank)           # empty bank: no-op
+        assert smmu.stats.tlb_invalidations == before + cached
+
+    def test_steal_shootdown_rebind_refault(self):
+        """17 live domains on one node: the 17th transfer steals a bank
+        (LRU), shoots down its TLB, rebinds, and the victim re-faults
+        cleanly on its next use — with every step visible in the
+        counters and the cost model's penalty in the latency."""
+        fab = build()
+        doms = [fab.open_domain(pd) for pd in range(CAP + 1)]
+        # bind the first 16 eagerly (create_domain) and give each a
+        # little TLB state on node 0
+        for dom in doms[:-1]:
+            write(fab, dom, nbytes=4096, dst_prep=BufferPrep.TOUCHED)
+        mgr = fab.nodes[0].tenancy.banks
+        assert mgr.bound_count() == CAP and mgr.stats.steals == 0
+        # the 17th domain's first transfer must steal on node 0
+        write(fab, doms[-1], nbytes=4096, dst_prep=BufferPrep.TOUCHED)
+        assert mgr.stats.steals >= 1
+        assert mgr.stats.shootdowns == mgr.stats.steals
+        victim_pd = next(pd for pd in range(CAP)
+                         if mgr.bank_of(pd) is None)
+        # the victim's next transfer re-binds (stealing back) and works
+        wc = write(fab, doms[victim_pd], nbytes=4096,
+                   dst_prep=BufferPrep.TOUCHED)
+        assert wc.latency_us > 0
+        assert mgr.stats.rebinds >= 1
+        assert mgr.bank_of(victim_pd) is not None
+        assert check_bank_conservation(fab) == []
+        assert check_tenant_isolation(fab) == []
+
+    def test_steal_penalty_in_latency(self):
+        """The shootdown + rebind microseconds show up in the stolen
+        domain's transfer latency, not just in CPU accounting."""
+        fab = build()
+        base_dom = fab.open_domain(0)
+        base = write(fab, base_dom, nbytes=4096,
+                     dst_prep=BufferPrep.TOUCHED).latency_us
+        for pd in range(1, CAP + 1):
+            fab.open_domain(pd)
+        # pd CAP was never bound on node 0 or 1: its first transfer
+        # pays a steal on both the source and destination node
+        stolen = write(fab, fab.domain(CAP), nbytes=4096,
+                       dst_prep=BufferPrep.TOUCHED).latency_us
+        cost = fab.config.cost
+        penalty = cost.bank_rebind_us + cost.bank_shootdown_us
+        assert stolen >= base + penalty
+
+    def test_steal_invalidates_npr_mtt(self):
+        """An NP-RDMA domain losing its bank must lose its cached NIC
+        translations too — zero stale completions afterwards."""
+        fab = build()
+        npr_dom = fab.open_domain(
+            0, policy=FaultPolicy(strategy=Strategy.NP_RDMA))
+        # warm the MTT with a completed transfer
+        write(fab, npr_dom, nbytes=4 * 4096, dst_prep=BufferPrep.TOUCHED)
+        node0 = fab.nodes[0]
+        fresh = [e for _, e in node0.npr.mtt.entries() if not e.stale]
+        assert fresh
+        # fill the remaining banks and force a steal of pd 0's bank
+        for pd in range(1, CAP + 1):
+            fab.open_domain(pd)
+        # evict pd 0 on node 0: make every other domain warmer, then
+        # bind the bankless 17th
+        for pd in range(1, CAP):
+            node0.tenancy.banks.touch(pd)
+        bank, _ = node0.bank_of_pd(CAP)
+        assert node0.tenancy.banks.bank_of(0) is None
+        assert all(e.stale for (pd, _), e in node0.npr.mtt.entries()
+                   if pd == 0)
+        # and the domain still completes transfers after re-binding
+        wc = write(fab, npr_dom, nbytes=4 * 4096,
+                   dst_prep=BufferPrep.TOUCHED)
+        assert wc.latency_us > 0
+        assert node0.npr.stats.stale_completions == 0
+        assert check_bank_conservation(fab) == []

@@ -35,9 +35,11 @@ class TestFabricBuilder:
             fab.open_domain(1)
 
     def test_context_bank_collision_rejected(self):
-        """pds colliding mod NUM_CONTEXT_BANKS would share an SMMU bank —
-        silent cross-tenant page-table corruption — so open_domain refuses."""
-        fab = build_fabric()
+        """With bank_overcommit=False, pds colliding mod NUM_CONTEXT_BANKS
+        would share an SMMU bank — silent cross-tenant page-table
+        corruption — so open_domain refuses.  (The default overcommits
+        the banks instead; see test_tenancy.py.)"""
+        fab = build_fabric(bank_overcommit=False)
         fab.open_domain(1)
         with pytest.raises(ValueError, match="context bank"):
             fab.open_domain(1 + A.NUM_CONTEXT_BANKS)
