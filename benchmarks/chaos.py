@@ -1,0 +1,183 @@
+"""Crash-fault chaos tier: seeded crash storms, recovery latency bounds.
+
+The thesis' datapath assumes both endpoints stay alive; this tier proves
+the machine-failure model wrapped around it.  Three claims:
+
+* **zero loss** — under a seeded storm of node crashes and link flaps on
+  a routed torus, every posted work request completes *exactly once*
+  (with an error status when a dead machine was involved) and every
+  fabric invariant holds: WR conservation, per-link packet conservation
+  across down/up transitions, arbiter accounting, tr_ID lease
+  reclamation;
+* **bounded recovery** — a survivor talking to a crashed peer detects
+  the death and errors out within the dead-round budget
+  (``crash_detect_retries`` timeout rounds), never retransmitting
+  forever;
+* **pager failover** — a :class:`RemoteFramePool` with a replica serves
+  the page-in that found its primary dead from the replica, read-your-
+  writes intact, within a bounded multiple of a warm page-in.
+
+Determinism: every schedule is fixed virtual timestamps, so each seeded
+storm replays byte-identically (checked across two runs per seed).
+``--quick`` shrinks the storm for local iteration; CI's fast job runs
+``--quick``, the full job runs the defaults.
+"""
+
+from __future__ import annotations
+
+import argparse
+import time
+
+from benchmarks.common import check, emit
+from repro.api import (BufferPrep, Fabric, FabricConfig, WCStatus)
+from repro.testing import FaultInjection, TenantSpec, soak
+from repro.vmem.remote import RemoteFramePool
+
+SEEDS = (11, 42, 2026)
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+
+
+# ------------------------------------------------------------- crash storm
+def storm_tenants(n_requests: int) -> list[TenantSpec]:
+    """Six tenants on an 8-node torus, arranged so the scheduled crash
+    of node 2 hits a posting node, a destination node, and bystanders."""
+    lay = [(1, 0, 1), (2, 2, 3), (3, 3, 2), (4, 4, 5), (5, 5, 6),
+           (6, 7, 0)]
+    return [TenantSpec(pd=pd, name=f"t{s}{d}", mode="closed", inflight=2,
+                       n_requests=n_requests, src_node=s, dst_node=d,
+                       dst_prep=(BufferPrep.FAULTING if pd % 2 == 0
+                                 else BufferPrep.TOUCHED),
+                       fresh_dst=(pd % 2 == 0))
+            for pd, s, d in lay]
+
+
+def storm_injection(crash_at: float) -> FaultInjection:
+    """Storm schedule scaled to the run length: the node-2 crash lands
+    at ``crash_at`` (mid-run, so work is genuinely in flight), with two
+    link flaps bracketing it."""
+    return FaultInjection(
+        khugepaged_period_us=400.0, reclaim_period_us=600.0,
+        crashes=((crash_at, 2),),
+        link_flaps=((crash_at * 0.3, crash_at * 0.9, 0, 1),
+                    (crash_at * 0.6, crash_at * 1.7, 4, 5)))
+
+
+def run_storm(n_requests: int, crash_at: float) -> None:
+    config = FabricConfig(n_nodes=8, topology="torus_2d")
+    inj = storm_injection(crash_at)
+    t0 = time.perf_counter()
+    results = []
+    for seed in SEEDS:
+        a = soak(seed, tenants=storm_tenants(n_requests), config=config,
+                 injection=inj)
+        b = soak(seed, tenants=storm_tenants(n_requests), config=config,
+                 injection=inj)
+        results.append((seed, a, a.json() == b.json()))
+    wall = time.perf_counter() - t0
+
+    emit("chaos/storm_wall_s", round(wall, 3),
+         f"{2 * len(SEEDS)} seeded soaks")
+    total_posted = total_completed = total_errors = 0
+    all_ok, all_identical, any_aborted = True, True, False
+    for seed, res, identical in results:
+        all_ok &= res.ok
+        all_identical &= identical
+        for t in res.stats["tenants"]:
+            total_posted += t["posted"]
+            total_completed += t["completed"]
+            total_errors += t["errors"]
+            any_aborted |= t["aborted"]
+    emit("chaos/storm_posted", total_posted, "WRs across seeds")
+    emit("chaos/storm_errors", total_errors, "error completions")
+    check("chaos: crash-storm soaks hold EVERY invariant (WR + link "
+          "conservation, arbiter, tr_id lease, crash consistency)",
+          all_ok, "; ".join(results[0][1].violations[:3]))
+    check("chaos: zero WR loss — every posted request completed exactly "
+          "once", total_completed == total_posted,
+          f"{total_completed}/{total_posted}")
+    check("chaos: the storm actually bit (error completions + an "
+          "aborted posting tenant)", total_errors > 0 and any_aborted,
+          f"errors={total_errors} aborted={any_aborted}")
+    check("chaos: every seeded storm replays byte-identically",
+          all_identical, "")
+
+
+# -------------------------------------------------------- recovery latency
+def run_recovery() -> None:
+    """Crash the destination mid-RAPF; the survivor must error out
+    within the dead-round budget of timeout rounds."""
+    config = FabricConfig(n_nodes=2)
+    fab = Fabric.build(config)
+    dom = fab.open_domain(1)
+    cq = fab.create_cq()
+    src = dom.register_memory(0, SRC, 65536, prep=BufferPrep.TOUCHED)
+    dst = dom.register_memory(1, DST, 65536, prep=BufferPrep.FAULTING)
+    wr = dom.post_write(src, dst, cq=cq)
+    crash_t = []
+
+    def crash_when_paused():
+        if any(b.state.name == "PAUSED_DST"
+               for b in fab.nodes[0].r5.pending.values()):
+            crash_t.append(fab.now)
+            fab.crash_node(1)
+            return
+        fab.loop.schedule(1.0, crash_when_paused)
+
+    fab.loop.schedule(1.0, crash_when_paused)
+    wc = wr.result()
+    recovery_us = fab.now - crash_t[0]
+    # the detector charges one timeout round per dead round; +2 rounds of
+    # slack cover the in-flight round at crash time and completion polling
+    bound_us = (config.crash_detect_retries + 2) * config.cost.timeout_us
+    emit("chaos/recovery_us", round(recovery_us, 3),
+         f"crash -> {wc.status.value}")
+    check("chaos: dead-peer detection errors out within the dead-round "
+          "budget (no eternal retransmit)",
+          wc.status == WCStatus.REMOTE_OP_ERR and recovery_us <= bound_us,
+          f"{recovery_us:.0f}us <= {bound_us:.0f}us")
+
+
+# --------------------------------------------------------- pager failover
+def run_failover() -> None:
+    pool = RemoteFramePool.build(
+        n_frames=16, page_elems=32, n_pages=64,
+        config=FabricConfig(n_nodes=4, topology="ring"),
+        remote_node=1, replica_node=2)
+    pool.page_out(None, 0, 8)            # mirrored write-backs
+    pool.page_in(None, 0, 8)             # cold read warms the landing pages
+    warm = pool.page_in(None, 0, 8).us
+    pool.fabric.crash_node(1)
+    rec = pool.page_in(None, 0, 8)
+    emit("chaos/failover_warm_us", round(warm, 3), "pre-crash page-in")
+    emit("chaos/failover_recovery_us", round(rec.us, 3),
+         "failed-primary page-in via replica")
+    check("chaos: replica failover serves the page-in (bytes intact)",
+          rec.failovers == 1 and rec.bytes_in == 8 * pool.page_bytes,
+          f"failovers={rec.failovers}")
+    check("chaos: failover preserves read-your-writes (replica holds "
+          "every mirrored write-back)",
+          pool.ryw_verified >= 8 and pool.ryw_violations == 0,
+          f"verified={pool.ryw_verified} violations={pool.ryw_violations}")
+    check("chaos: failover recovery latency bounded (< 20x a warm "
+          "page-in, detection included)", 0 < rec.us < 20 * warm,
+          f"{rec.us:.1f}us vs warm {warm:.1f}us")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true",
+                    help="small storm for local iteration / CI fast job")
+    args, _ = ap.parse_known_args()
+
+    print("name,value,derived")
+    if args.quick:
+        run_storm(n_requests=4, crash_at=250.0)
+    else:
+        run_storm(n_requests=12, crash_at=900.0)
+    run_recovery()
+    run_failover()
+
+
+if __name__ == "__main__":
+    main()

@@ -12,10 +12,11 @@ from __future__ import annotations
 import argparse
 import sys
 
-from benchmarks import (arbiter_qos, fig_2_3_firehose, fig_4_1, fig_4_2,
-                        fig_4_3, fig_4_4, fig_4_6, fig_4_7, net_congestion,
-                        npr_compare, scale_soak, table_4_1, tenant_scale,
-                        thp_study, timeout_sweep, verbs_async, vmem_remote)
+from benchmarks import (arbiter_qos, chaos, fig_2_3_firehose, fig_4_1,
+                        fig_4_2, fig_4_3, fig_4_4, fig_4_6, fig_4_7,
+                        net_congestion, npr_compare, scale_soak, table_4_1,
+                        tenant_scale, thp_study, timeout_sweep, verbs_async,
+                        vmem_remote)
 from benchmarks.common import (add_backend_arg, apply_backend, summary,
                                write_json)
 
@@ -41,6 +42,8 @@ MODULES = (
     ("Scale soak (64-128 nodes, 1M blocks, tr_id wraparound)", scale_soak),
     ("Tenancy control plane (10k tenants, bank-steal crossover, GOLD "
      "isolation)", tenant_scale),
+    ("Crash-fault chaos (seeded crash storms, recovery latency, pager "
+     "failover)", chaos),
 )
 
 

@@ -144,6 +144,37 @@ fault-handling datapath)          ``ServiceClass`` + DRR weight + bank
                                   ``srq_gold_reserve``; threaded through
                                   ``FaultPolicy.slo`` /
                                   ``open_domain(slo=...)``.
+Machine-failure model (beyond     ``Fabric.crash_node`` (fail-stop) /
+paper: the thesis assumes live    ``fail_link`` / ``restore_link``;
+endpoints — real deployments      in-flight work toward a dead peer
+crash mid-transfer)               completes with ``WCStatus.
+                                  REMOTE_OP_ERR`` / ``WR_FLUSH_ERR``
+                                  instead of retransmitting forever;
+                                  posting from a dead node raises
+                                  ``NodeDown``; routed traffic re-paths
+                                  around down links or fails typed
+                                  (``NetworkPartitioned``).
+Retry budgets (beyond paper:      ``FaultPolicy.max_retries`` caps a
+the R5's unconditional requeue    block's retransmissions (timeout AND
+is a livelock against a dead      RAPF paths) — exhaustion completes
+or wedged peer)                   the WR with ``WCStatus.
+                                  RETRY_EXC_ERR``;
+                                  ``FaultPolicy.retry_backoff``
+                                  stretches the R5 timeout
+                                  exponentially per retry.
+tr_ID lease reclamation (crash    a crashed node's in-flight tr_IDs
+orphans must not alias the        stay *leased* (unrecyclable) for
+free list — PR-5 lifecycle        ``FabricConfig.lease_timeout_us``,
+invariants under failures)        then return to the free list;
+                                  ``TrIdStats.lease_reclaims``.
+Remote-pager failover (beyond     ``RemoteFramePool.build(replica_node
+paper: paging over a fabric       =...)`` mirrors write-backs
+whose backing node can die)       (``page_out``) to a replica; a
+                                  failed page-in re-serves from it
+                                  with read-your-writes verification
+                                  (``ryw_verified`` /
+                                  ``ryw_violations``;
+                                  ``PagingStats.failovers``).
 ===============================  ========================================
 
 **When to use which backend** (``benchmarks/npr_compare.py`` measures
@@ -185,24 +216,24 @@ from repro.api.memory import BufferPrep, MemoryRegion, PrepCost, RegionError
 from repro.api.policy import DEFAULT_POLICY, FaultPolicy
 from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
 from repro.core.node import (BankCollision, DomainClosed, DomainExists,
-                             FabricError, TrIdStats)
+                             FabricError, NodeDown, TrIdStats)
 from repro.core.resolver import Strategy, coerce_strategy
 from repro.npr.stats import NPRStats
 from repro.tenancy import (BankManager, BankStats, SLOClass, TenancyManager,
                            coerce_slo)
-from repro.net import (FabricStats, LinkStats, Router, Topology,
-                       TopologyError, TopologyKind, build_topology)
+from repro.net import (FabricStats, LinkStats, NetworkPartitioned, Router,
+                       Topology, TopologyError, TopologyKind, build_topology)
 
 __all__ = [
     "ArbiterStats", "BankCollision", "BankManager", "BankStats",
     "BufferPrep", "CompletionQueue", "CQStats", "DEFAULT_POLICY",
     "DMAArbiter", "DomainClosed", "DomainExists", "DomainQuotaExceeded",
     "Fabric", "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
-    "LinkStats", "MemoryRegion", "NPRStats", "PrepCost",
-    "ProtectionDomain", "ProtocolStats", "RegionError", "Router",
-    "SLOClass", "ServiceClass", "Strategy", "TenancyManager",
-    "TenantQuotaExceeded", "Topology", "TopologyError", "TopologyKind",
-    "TrIdExhausted", "TrIdStats", "WCStatus", "WorkCompletion",
-    "WorkQueueFull", "WorkRequest", "WROpcode", "build_topology",
-    "coerce_slo", "coerce_strategy",
+    "LinkStats", "MemoryRegion", "NPRStats", "NetworkPartitioned",
+    "NodeDown", "PrepCost", "ProtectionDomain", "ProtocolStats",
+    "RegionError", "Router", "SLOClass", "ServiceClass", "Strategy",
+    "TenancyManager", "TenantQuotaExceeded", "Topology", "TopologyError",
+    "TopologyKind", "TrIdExhausted", "TrIdStats", "WCStatus",
+    "WorkCompletion", "WorkQueueFull", "WorkRequest", "WROpcode",
+    "build_topology", "coerce_slo", "coerce_strategy",
 ]

@@ -99,7 +99,31 @@ class WROpcode(enum.Enum):
 
 
 class WCStatus(enum.Enum):
+    """Terminal status of a work request (the verbs ``wc_status`` field).
+
+    ``SUCCESS`` was the only member before the crash-fault layer: a
+    permanently-stuck transfer was observable only as a CQ ``wait``
+    deadline expiry.  The error members mirror the ibverbs statuses that
+    "The Impact of RDMA on Agreement" identifies as the failure-semantics
+    contract RDMA protocols build on:
+
+    * ``RETRY_EXC_ERR`` — the R5 retransmission timer exhausted the
+      domain's retry budget (``FaultPolicy.max_retries``) while the peer
+      stayed reachable (e.g. a destination page fault that never
+      resolves).
+    * ``WR_FLUSH_ERR`` — the WR was flushed without ever being attempted
+      to completion: its source node crashed mid-flight, or
+      ``Fabric.close_domain`` tore down a domain whose in-flight WRs
+      target a crashed/unreachable peer.
+    * ``REMOTE_OP_ERR`` — the remote end is dead or unreachable: the
+      R5 saw ``crash_detect_retries`` consecutive timeout rounds with the
+      peer down/partitioned (``FabricConfig.crash_detect_retries``).
+    """
+
     SUCCESS = "success"
+    RETRY_EXC_ERR = "retry_exc_err"
+    WR_FLUSH_ERR = "wr_flush_err"
+    REMOTE_OP_ERR = "remote_op_err"
 
 
 @dataclasses.dataclass(frozen=True)
@@ -117,6 +141,10 @@ class WorkCompletion:
     @property
     def latency_us(self) -> float:
         return self.t_complete - self.t_posted
+
+    @property
+    def ok(self) -> bool:
+        return self.status is WCStatus.SUCCESS
 
 
 class WorkRequest:

@@ -75,6 +75,16 @@ class FabricConfig:
       queue (``None`` = unbounded; ``srq_gold_reserve`` entries usable
       only by GOLD tenants), and cap tenants admitted per node
       (``Fabric.open_domain`` raises ``TenantQuotaExceeded`` beyond it).
+    * ``crash_detect_retries`` — consecutive R5 timeout rounds against a
+      dead/unreachable peer before the transfer is declared failed with
+      ``WCStatus.REMOTE_OP_ERR`` (crash *detection* is distinct from the
+      page-fault retry budget ``FaultPolicy.max_retries``: a live peer
+      that keeps faulting exhausts the budget; a dead peer trips this).
+    * ``lease_timeout_us`` — tr_id lease on a crashed node: transaction
+      IDs orphaned by ``Node.crash()`` (blocks that were in flight *from*
+      the dead node) are reclaimed into the free list this long after the
+      crash, preserving the PR-5 free-list/generation invariants without
+      ever aliasing an ID a late wire packet could still name.
     """
 
     n_nodes: int = 2
@@ -98,6 +108,8 @@ class FabricConfig:
     srq_entries: Optional[int] = None
     srq_gold_reserve: int = 0
     tenants_per_node: Optional[int] = None
+    crash_detect_retries: int = 3
+    lease_timeout_us: float = 10_000.0
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
@@ -135,6 +147,13 @@ class FabricConfig:
             raise ValueError(
                 f"tenants_per_node must be >= 1 (or None = unbounded), "
                 f"got {self.tenants_per_node}")
+        if self.crash_detect_retries < 1:
+            raise ValueError(
+                f"crash_detect_retries must be >= 1, got "
+                f"{self.crash_detect_retries}")
+        if self.lease_timeout_us <= 0:
+            raise ValueError(
+                f"lease_timeout_us must be > 0, got {self.lease_timeout_us}")
         self.topology = coerce_kind(self.topology)
         if self.hops < 1:
             raise ValueError(f"hops must be >= 1, got {self.hops}")

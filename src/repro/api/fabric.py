@@ -22,11 +22,12 @@ from typing import Optional
 from repro.core import addresses as A
 from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.core.node import (BankCollision, DomainClosed, DomainExists,
-                             FabricError, Node, Transfer, TrIdStats)
+                             FabricError, Node, NodeDown, Transfer, TrIdStats)
 from repro.core.pagetable import FrameAllocator
 from repro.core.simulator import EventLoop
 from repro.npr.stats import NPRStats
 from repro.net.interconnect import FabricStats, Interconnect
+from repro.net.router import NetworkPartitioned
 from repro.tenancy import SLOClass, TenancyManager, coerce_slo
 from repro.api.completion import (MAX_WAIT_EVENTS, CompletionQueue,
                                   DomainQuotaExceeded, TenantQuotaExceeded,
@@ -137,9 +138,16 @@ class ProtectionDomain:
         """Asynchronous remote write ``src -> dst``; completion on ``cq``.
 
         ``service_class`` overrides the domain's arbiter class for this
-        work request only (e.g. a BULK tenant posting one urgent WR)."""
+        work request only (e.g. a BULK tenant posting one urgent WR).
+
+        Raises :class:`~repro.core.node.NodeDown` when the *posting*
+        (source) node has crashed; posting toward a crashed destination
+        is accepted and completes with ``WCStatus.REMOTE_OP_ERR``."""
         if self.closed:
             raise DomainClosed(f"domain pd={self.pd} is closed")
+        if self.fabric.nodes[src.node_id].crashed:
+            raise NodeDown(
+                f"cannot post from crashed node {src.node_id}")
         self._check_regions(src, dst)
         nbytes = nbytes if nbytes is not None else min(src.length, dst.length)
         src_va = src.addr + src_offset
@@ -177,9 +185,16 @@ class ProtectionDomain:
         whose R5 turns it into a write back to the initiator (§1.3.2.2).
 
         ``service_class`` overrides the domain's arbiter class for this
-        work request only (demand page-ins post LATENCY, prefetch BULK)."""
+        work request only (demand page-ins post LATENCY, prefetch BULK).
+
+        Raises :class:`~repro.core.node.NodeDown` when the *posting*
+        (local) node has crashed; reading from a crashed target is
+        accepted and completes with ``WCStatus.REMOTE_OP_ERR``."""
         if self.closed:
             raise DomainClosed(f"domain pd={self.pd} is closed")
+        if self.fabric.nodes[local.node_id].crashed:
+            raise NodeDown(
+                f"cannot post from crashed node {local.node_id}")
         self._check_regions(target, local)
         nbytes = nbytes if nbytes is not None else min(target.length,
                                                       local.length)
@@ -280,7 +295,9 @@ class Fabric:
                         bank_overcommit=config.bank_overcommit,
                         srq_entries=config.srq_entries,
                         srq_gold_reserve=config.srq_gold_reserve,
-                        tenants_per_node=config.tenants_per_node)
+                        tenants_per_node=config.tenants_per_node,
+                        crash_detect_retries=config.crash_detect_retries,
+                        lease_timeout_us=config.lease_timeout_us)
             self.nodes.append(node)
         # the routed interconnect: per-direction links along the physical
         # adjacencies of config.topology (ALL_TO_ALL keeps the seed's
@@ -396,7 +413,9 @@ class Fabric:
                 max_outstanding_blocks=(
                     max_outstanding_blocks if max_outstanding_blocks
                     is not None else eff.max_outstanding_blocks),
-                slo=slo)
+                slo=slo,
+                max_retries=eff.max_retries,
+                retry_backoff=eff.retry_backoff)
         dom = ProtectionDomain(self, pd,
                                policy or self.config.default_policy,
                                node_policies=effective, slo=slo)
@@ -429,6 +448,12 @@ class Fabric:
             raise FabricError(f"domain pd={pd} is not open")
         dom.closed = True
         node_idxs = dom.nodes
+        # crash-fault flush: a transfer whose destination died (or became
+        # permanently unreachable) would otherwise sit out the dead-round
+        # detection — or, from a crashed posting node, spin the full
+        # drain deadline.  Flush such work NOW with WR_FLUSH_ERR so
+        # teardown is prompt.
+        self._flush_stranded(pd, node_idxs)
 
         def drained() -> bool:
             return all(self.nodes[i].arbiter.outstanding(pd) == 0
@@ -451,6 +476,25 @@ class Fabric:
             mr.registered = False
         del self.domains[pd]
 
+    def _flush_stranded(self, pd: int, node_idxs: list[int]) -> None:
+        """Fail (WR_FLUSH_ERR) the domain's transfers that can never
+        drain: executing node crashed (transfers already failed there at
+        crash time — this catches stragglers submitted since), or the
+        destination is crashed / unreachable behind a partition."""
+        ic = self.interconnect
+        for i in node_idxs:
+            r5 = self.nodes[i].r5
+            stranded = {b.transfer for b in r5.pending.values()
+                        if b.transfer.pd == pd}
+            stranded.update(t for t in r5._starved if t.pd == pd)
+            for t in sorted(stranded, key=lambda t: t.tid):
+                if t.failed_status is not None or t.complete:
+                    continue
+                peer = t.dst_node
+                if (self.nodes[i].crashed or peer.crashed
+                        or not ic.reachable(i, peer.node_id)):
+                    r5.fail_transfer(t, "wr_flush_err")
+
     def domain(self, pd: int) -> Optional[ProtectionDomain]:
         return self.domains.get(pd)
 
@@ -459,6 +503,36 @@ class Fabric:
                   max_outstanding: Optional[int] = None) -> CompletionQueue:
         return CompletionQueue(self, depth=depth,
                                max_outstanding=max_outstanding)
+
+    # ------------------------------------------------------------ failures
+    def crash_node(self, node_idx: int) -> None:
+        """Fail-stop crash of one node (idempotent; no un-crash).
+
+        Every incident physical link goes down (surviving traffic
+        detours or partitions), the node's datapaths fall silent, and
+        all transfers its R5 was executing complete with error statuses
+        — ``WR_FLUSH_ERR`` for work posted from the dead node,
+        ``REMOTE_OP_ERR`` for remote reads posted against it.  Work
+        posted by *survivors* toward the dead node fails after
+        ``FabricConfig.crash_detect_retries`` timeout rounds with
+        ``REMOTE_OP_ERR``.  tr_IDs orphaned on the dead node return to
+        its free list after ``FabricConfig.lease_timeout_us``.
+        """
+        self.nodes[node_idx].crash()
+
+    def fail_link(self, u: int, v: int) -> None:
+        """Take the physical adjacency ``u <-> v`` down (both directions).
+
+        Traffic re-routes deterministically around it; endpoints cut off
+        entirely behave like crashed peers (``REMOTE_OP_ERR`` after the
+        detection window).  Raises ``KeyError`` for non-adjacent pairs.
+        """
+        self.interconnect.fail_link(u, v)
+
+    def restore_link(self, u: int, v: int) -> None:
+        """Bring a failed physical adjacency back up; with no links left
+        down, routes revert bit-exactly to the oblivious minimal paths."""
+        self.interconnect.restore_link(u, v)
 
     # ------------------------------------------------------------- network
     def net_stats(self) -> FabricStats:
@@ -520,6 +594,7 @@ class Fabric:
         t = Transfer(self._tid, pd, self.nodes[src_node],
                      self.nodes[dst_node], src_va, dst_va, nbytes,
                      service_class=service_class)
+        t.origin_id = src_node
         # count against the domain quota NOW, so a burst of posts sees
         # its own backlog before any simulated delay elapses
         self.nodes[src_node].arbiter.note_submit(t)
@@ -533,6 +608,7 @@ class Fabric:
         t = Transfer(self._tid, pd, self.nodes[target_node],
                      self.nodes[local_node], target_va, local_va, nbytes,
                      service_class=service_class)
+        t.origin_id = local_node
         # blocks will launch on the TARGET node: count them against the
         # quota now (not after the request-packet delay), so a burst of
         # posted reads is backpressured like a burst of writes
@@ -541,8 +617,17 @@ class Fabric:
         # interconnect (the seed charged one hop however far the target)
         req_delay = self.cost.pckzer_to_mbox_us
         if target_node != local_node:
-            req_delay += (self.nodes[local_node]
-                          .path_to(target_node).send_ctrl(16))
+            try:
+                req_delay += (self.nodes[local_node]
+                              .path_to(target_node).send_ctrl(16))
+            except NetworkPartitioned:
+                # the request can never reach the target: complete with
+                # REMOTE_OP_ERR.  Scheduled (not immediate) so _track
+                # attaches the completion callback first.
+                self.loop.schedule(req_delay,
+                                   self.nodes[target_node].r5.fail_transfer,
+                                   t, "remote_op_err")
+                return t
         self.loop.schedule(req_delay, self.nodes[target_node].r5.submit, t)
         return t
 
@@ -553,10 +638,15 @@ class Fabric:
         def _on_complete(t: Transfer) -> None:
             if t.srq_held:
                 # the completion frees the destination's receive entries
+                # (error completions too: no WR may leak SRQ capacity)
                 self.nodes[t.srq_node].tenancy.srq.release(t.srq_held)
                 t.srq_held = 0
+            # core stores the terminal error as the WCStatus *value*
+            # string (it cannot import repro.api); map it back here
+            status = (WCStatus(t.failed_status) if t.failed_status
+                      else WCStatus.SUCCESS)
             wc = WorkCompletion(wr_id=wr.wr_id, opcode=wr.opcode,
-                                status=WCStatus.SUCCESS, pd=t.pd,
+                                status=status, pd=t.pd,
                                 nbytes=t.nbytes, t_posted=wr.t_posted,
                                 t_complete=t.stats.t_complete,
                                 stats=t.stats)

@@ -46,6 +46,16 @@ class FaultPolicy:
       not-yet-completed blocks; the posting verbs raise
       :class:`~repro.api.completion.DomainQuotaExceeded` beyond it.
       ``None`` = no quota.
+    * ``max_retries`` — retry budget for the R5 retransmission timer:
+      a block may be retransmitted at most this many times before its
+      transfer completes with
+      :attr:`~repro.api.completion.WCStatus.RETRY_EXC_ERR`.  ``None``
+      (the default) keeps the seed's unbounded retransmission — the
+      thesis' 1 ms timer spins until the fault resolves.
+    * ``retry_backoff`` — exponential-backoff multiplier applied to the
+      R5 timeout per consecutive retransmission of the same block
+      (``timeout_us * retry_backoff**retries``, capped).  ``1.0`` (the
+      default) keeps the thesis' flat 1 ms timer bit-exact.
     * ``slo`` — the tenant's service tier
       (:class:`~repro.tenancy.SLOClass`: GOLD / SILVER / BEST_EFFORT, a
       member, name or value).  Setting it derives ``service_class`` and
@@ -62,6 +72,8 @@ class FaultPolicy:
     service_class: Optional[ServiceClass] = None
     arb_weight: int = 1
     max_outstanding_blocks: Optional[int] = None
+    max_retries: Optional[int] = None
+    retry_backoff: float = 1.0
     slo: Optional[SLOClass] = None
 
     def __post_init__(self) -> None:
@@ -69,6 +81,14 @@ class FaultPolicy:
         # and surface later as an opaque error deep in resolver dispatch
         object.__setattr__(self, "strategy", coerce_strategy(self.strategy))
         object.__setattr__(self, "slo", coerce_slo(self.slo))
+        if self.max_retries is not None and self.max_retries < 0:
+            raise ValueError(
+                f"max_retries must be >= 0 (or None = unbounded), got "
+                f"{self.max_retries}")
+        if self.retry_backoff < 1.0:
+            raise ValueError(
+                f"retry_backoff must be >= 1.0 (1.0 = the thesis' flat "
+                f"timer), got {self.retry_backoff}")
         if self.slo is not None:
             # the SLO tier implies arbiter parameters unless the caller
             # pinned them explicitly (defaults: None / 1)

@@ -267,6 +267,43 @@ class DMAArbiter:
         if self._release_slot(block, descheduled=False):
             self._pump()
 
+    # ----------------------------------------------------------- crash fault
+    def purge(self, block: "Block") -> None:
+        """Remove a terminally-failed block from the scheduler entirely:
+        drop it from its send queue (if queued) and release its PLDMA
+        slot (if held).  No completion stats — the block did not finish;
+        quota release happens per transfer in :meth:`on_transfer_failed`.
+        """
+        released = False
+        if block.queued:
+            pd = block.transfer.pd
+            cls = block.service_class or self.class_of(pd)
+            q = self.queues.get((pd, cls))
+            if q is not None:
+                try:
+                    q.blocks.remove(block)
+                except ValueError:          # pragma: no cover - defensive
+                    pass
+                else:
+                    self._depth_total -= 1
+                    self._depth_by_pd[pd] -= 1
+            block.queued = False
+        if self._release_slot(block, descheduled=False):
+            released = True
+        if released:
+            self._pump()
+
+    def on_transfer_failed(self, transfer) -> None:
+        """Release the quota held by a failed transfer's unfinished blocks
+        (its ACKed blocks already released theirs in :meth:`on_block_done`,
+        so the drained-fabric invariant ``outstanding(pd) == 0`` survives
+        crashes and retry exhaustion)."""
+        pd = transfer.pd
+        remaining = len(transfer.blocks) - transfer.done_blocks
+        if remaining > 0:
+            left = self._outstanding.get(pd, 0) - remaining
+            self._outstanding[pd] = max(0, left)
+
     def _release_slot(self, block: "Block", descheduled: bool) -> bool:
         if not block.holds_slot:
             return False

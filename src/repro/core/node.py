@@ -54,6 +54,9 @@ from repro.core.fault_fifo import FaultFIFO, FIFOEntry
 from repro.core.pagetable import FrameAllocator, PageTable
 from repro.core.resolver import DriverDedupCache, Resolver, Strategy
 from repro.core.simulator import EventLoop, Resource
+# runtime import of the bottom layer is safe: repro.net.router imports
+# only repro.net.topology, never repro.core
+from repro.net.router import NetworkPartitioned
 from repro.tenancy import TenancyManager
 from repro.tenancy.slo import SLOClass
 
@@ -84,6 +87,15 @@ class DomainClosed(FabricError):
     """A verb was posted against a domain after ``Fabric.close_domain``."""
 
 
+class NodeDown(FabricError):
+    """A verb was posted *from* a crashed node (``Node.crash``).
+
+    Only the posting side is checked: posting *toward* a dead peer is
+    allowed and surfaces asynchronously as an error completion
+    (``WCStatus.REMOTE_OP_ERR``), matching real RDMA semantics where the
+    initiator cannot know the target died until retries exhaust."""
+
+
 class BlockState(enum.Enum):
     PENDING = 0
     IN_FLIGHT = 1
@@ -112,6 +124,7 @@ class TrIdStats:
     stale_rapf_drops: int = 0    # RAPFs for a previous incarnation dropped
     stale_fifo_entries: int = 0  # FIFO entries outliving their incarnation
     stale_npr_aborts: int = 0    # NP-RDMA aborts for a dead incarnation/round
+    lease_reclaims: int = 0      # crash-orphaned IDs reclaimed at lease expiry
 
     @property
     def wraps(self) -> int:
@@ -128,6 +141,7 @@ class TrIdStats:
             "stale_rapf_drops": self.stale_rapf_drops,
             "stale_fifo_entries": self.stale_fifo_entries,
             "stale_npr_aborts": self.stale_npr_aborts,
+            "lease_reclaims": self.lease_reclaims,
         }
 
 
@@ -165,7 +179,8 @@ class Block:
                  "gen", "seq_num", "state", "attempts", "round_id",
                  "delivered", "nacked_round", "timeout_event", "n_pages",
                  "wire_bytes", "service_class", "queued", "holds_slot",
-                 "grant_pending", "is_retransmit", "npr_redirect")
+                 "grant_pending", "is_retransmit", "npr_redirect",
+                 "retries", "dead_rounds")
 
     def __init__(self, transfer: "Transfer", index: int, src_va: int,
                  dst_va: int, nbytes: int):
@@ -193,6 +208,11 @@ class Block:
         self.is_retransmit = False
         # NP-RDMA: an abort redirected this block into the DMA pool
         self.npr_redirect = False
+        # crash-fault layer: retransmissions charged against the domain's
+        # retry budget, and consecutive timeout rounds against a peer
+        # that looks dead (crashed or unreachable)
+        self.retries = 0
+        self.dead_rounds = 0
 
 
 class Transfer:
@@ -211,6 +231,15 @@ class Transfer:
         self.nbytes = nbytes
         self.on_complete = on_complete
         self.stats = TransferStats()
+        # crash-fault layer: the terminal error, as a WCStatus *value*
+        # string ("retry_exc_err"/"wr_flush_err"/"remote_op_err") — core
+        # must not import repro.api, so the enum mapping happens in the
+        # fabric's completion tracker.  None = not failed.
+        self.failed_status: Optional[str] = None
+        # node the WR was posted from (set by the posting verbs; None for
+        # direct engine use, where src_node is the origin) — picks
+        # WR_FLUSH_ERR vs REMOTE_OP_ERR when a node crashes mid-transfer
+        self.origin_id: Optional[int] = None
         # SRQ receive entries held on the destination node (repro.tenancy):
         # acquired at post time, released when the completion fires
         self.srq_held = 0
@@ -244,7 +273,9 @@ class Node:
                  bank_overcommit: bool = True,
                  srq_entries: Optional[int] = None,
                  srq_gold_reserve: int = 0,
-                 tenants_per_node: Optional[int] = None):
+                 tenants_per_node: Optional[int] = None,
+                 crash_detect_retries: int = 3,
+                 lease_timeout_us: float = 10_000.0):
         self.loop = loop
         self.cost = cost
         self.node_id = node_id
@@ -282,6 +313,12 @@ class Node:
         self.tenancy = TenancyManager(
             srq_entries=srq_entries, srq_gold_reserve=srq_gold_reserve,
             tenants_per_node=tenants_per_node)
+        # crash-fault layer (fail-stop machine-failure model)
+        self.crashed = False
+        self.crash_detect_retries = crash_detect_retries
+        self.lease_timeout_us = lease_timeout_us
+        # per-domain retry budgets: pd -> (max_retries, retry_backoff)
+        self.retry_budgets: dict[int, tuple[Optional[int], float]] = {}
         # demo/bench hook: blocks by (pd, src vpn) for source-fault attribution
         self.netlink_log: list[NetlinkMessage] = []
 
@@ -291,7 +328,9 @@ class Node:
                       service_class: Optional[ServiceClass] = None,
                       arb_weight: int = 1,
                       max_outstanding_blocks: Optional[int] = None,
-                      slo: Optional[SLOClass] = None
+                      slo: Optional[SLOClass] = None,
+                      max_retries: Optional[int] = None,
+                      retry_backoff: float = 1.0
                       ) -> PageTable:
         """Create protection domain ``pd``, optionally with its own fault
         resolver (per-domain :class:`~repro.api.policy.FaultPolicy`),
@@ -323,6 +362,8 @@ class Node:
         self.tenancy.register(pd, slo)
         pt = PageTable(pd, self.allocator, pin_limit_bytes=pin_limit_bytes)
         self.page_tables[pd] = pt
+        if max_retries is not None or retry_backoff != 1.0:
+            self.retry_budgets[pd] = (max_retries, retry_backoff)
         if resolver is not None:
             self.domain_resolvers[pd] = resolver
         if self.resolver_for(pd).strategy is Strategy.NP_RDMA:
@@ -349,6 +390,7 @@ class Node:
             self.smmu.detach_domain(bank)
         self.tenancy.release(pd)
         self.npr.unregister_domain(pd)
+        self.retry_budgets.pop(pd, None)
         self.domain_resolvers.pop(pd, None)
         pt = self.page_tables.pop(pd, None)
         return 0 if pt is None else pt.release_all()
@@ -392,6 +434,35 @@ class Node:
     def resolver_for(self, pd: int) -> Resolver:
         """The fault resolver governing domain ``pd`` (policy > default)."""
         return self.domain_resolvers.get(pd, self.resolver)
+
+    def max_retries_for(self, pd: int) -> Optional[int]:
+        """Domain retry budget (``FaultPolicy.max_retries``; None = ∞)."""
+        return self.retry_budgets.get(pd, (None, 1.0))[0]
+
+    def retry_backoff_for(self, pd: int) -> float:
+        """Domain timeout-backoff multiplier (1.0 = the flat 1 ms timer)."""
+        return self.retry_budgets.get(pd, (None, 1.0))[1]
+
+    # -------------------------------------------------------------- failure
+    def crash(self) -> None:
+        """Fail-stop machine failure, mid-whatever-was-happening.
+
+        Takes every incident physical link down (peers' routes detour or
+        partition), silences this node's receive/driver datapaths, and
+        fails every transfer its R5 was executing: the initiating side
+        gets error completions (``WR_FLUSH_ERR`` for work posted here,
+        ``REMOTE_OP_ERR`` for remote reads posted against it) instead of
+        eternal retransmission.  tr_IDs owned by the dead blocks stay
+        leased until ``lease_timeout_us`` and only then rejoin the free
+        list, so the PR-5 ID-lifecycle invariants survive the crash.
+        Idempotent; there is no un-crash.
+        """
+        if self.crashed:
+            return
+        self.crashed = True
+        if self.interconnect is not None:
+            self.interconnect.fail_node(self.node_id)
+        self.r5.on_local_crash()
 
     def pd_for_bank(self, bank_index: int) -> Optional[int]:
         """The PDID *currently bound to* an SMMU context bank.
@@ -438,6 +509,8 @@ class Node:
 
     # ------------------------------------------------- source-fault tasklet
     def _pf_send_handler(self, pd: int, vpn: int) -> None:
+        if self.crashed:
+            return  # dead CPUs run no tasklets
         c = self.cost
         pt = self.page_tables.get(pd)
         if pt is None:
@@ -480,6 +553,8 @@ class Node:
         the driver CPU before the entry can even be dedup-checked.
         """
         self._rcv_tasklet_pending = False
+        if self.crashed:
+            return  # dead CPUs run no tasklets
         c = self.cost
         backlog = len(self.fifo)
         if backlog:
@@ -552,6 +627,8 @@ class Node:
 
     def _send_rapf(self, src_node_id: int, msg: RAPFMessage,
                    stats: Optional[TransferStats], gen: int = 0) -> None:
+        if self.crashed:
+            return
         target = self.peer.get(src_node_id)
         if target is None:
             return
@@ -561,7 +638,10 @@ class Node:
             # the initiator's mailbox: charge (and, on shared-link
             # topologies, reserve) the full routed distance — the seed
             # charged one hop_latency_us however far the initiator was
-            delay += self.path_to(src_node_id).send_ctrl(8)
+            try:
+                delay += self.path_to(src_node_id).send_ctrl(8)
+            except NetworkPartitioned:
+                return  # RAPF lost; the sender's timeout recovers
         self.loop.schedule(delay, target.r5.on_mailbox, msg, stats, gen)
 
     # ============================================================== receive
@@ -577,6 +657,8 @@ class Node:
         effect).  Without HUPCF the SMMU terminates even resident pages
         while a fault is outstanding (collateral NACKs, §3.2.1).
         """
+        if self.crashed:
+            return  # packets delivered to a dead node vanish
         if block.state is BlockState.DONE or round_id != block.round_id:
             return  # stale packets from a superseded round
         if self.npr.owns(block):
@@ -604,9 +686,12 @@ class Node:
             if len(block.delivered) == block.n_pages:
                 # the ACK travels back over the interconnect: charge the
                 # routed distance (the seed charged one hop, flat)
-                delay = (penalty + self.cost.ack_us
-                         + self.path_to(block.transfer.src_node.node_id)
-                               .send_ctrl(0))
+                try:
+                    ctrl = (self.path_to(block.transfer.src_node.node_id)
+                                .send_ctrl(0))
+                except NetworkPartitioned:
+                    return  # ACK lost; the sender's timeout recovers
+                delay = penalty + self.cost.ack_us + ctrl
                 self.loop.schedule(delay, block.transfer.src_node.r5.on_ack,
                                    block, round_id)
             return
@@ -631,11 +716,16 @@ class Node:
         if block.nacked_round != round_id:
             block.nacked_round = round_id
             # the PF-NACK (AXI slave error) propagates back per routed hop
-            delay = (penalty + self.cost.nack_us
-                     + self.path_to(block.transfer.src_node.node_id)
-                           .send_ctrl(0))
-            self.loop.schedule(delay, block.transfer.src_node.r5.on_nack,
-                               block, round_id)
+            try:
+                ctrl = (self.path_to(block.transfer.src_node.node_id)
+                            .send_ctrl(0))
+            except NetworkPartitioned:
+                ctrl = None  # NACK lost; the sender's timeout recovers
+            if ctrl is not None:
+                delay = penalty + self.cost.nack_us + ctrl
+                self.loop.schedule(delay,
+                                   block.transfer.src_node.r5.on_nack,
+                                   block, round_id)
         # the SMMU interrupt fired inside translate() if this was the first
         # outstanding fault; MULTI faults rely on the FIFO alone (§3.2.1) —
         # make sure a drain is queued either way.
@@ -743,9 +833,20 @@ class R5Scheduler:
         # method only runs after the request-packet delay, too late for
         # the posting verbs' backpressure check to see the work.
         transfer.stats.t_submit = self.loop.now
+        if self.node.crashed:
+            # work arriving at (or posted on) a dead executing node —
+            # e.g. a remote read whose request packet was in flight when
+            # the target died — flushes immediately
+            self.fail_transfer(transfer, self._crash_status(transfer))
+            return
         self.loop.schedule(self.cost.dma_setup_us, self._start, transfer)
 
     def _start(self, transfer: Transfer) -> None:
+        if self.node.crashed:
+            # crashed during DMA setup: the transfer had no pending
+            # blocks yet, so on_local_crash could not have seen it
+            self.fail_transfer(transfer, self._crash_status(transfer))
+            return
         for _ in range(A.OUTSTANDING_BLOCKS_PER_TRANSFER):
             self._launch_next(transfer)
 
@@ -797,7 +898,16 @@ class R5Scheduler:
                           ((block.src_va + block.nbytes - 1) >> 12) + 1)
         # PLDMA reads/packetizes pages in order; a source fault stops the
         # stream (pages already read remain in flight).
-        path = node.path_to(transfer.dst_node.node_id)
+        try:
+            path = node.path_to(transfer.dst_node.node_id)
+        except NetworkPartitioned:
+            # no live route this round: yield the slot and let the R5
+            # timer run — the timeout path counts dead rounds toward
+            # REMOTE_OP_ERR if the partition persists
+            block.state = BlockState.PAUSED_SRC
+            node.arbiter.on_block_paused(block)
+            self._arm_timeout(block)
+            return
         # the DMA arbiter's service class extends to link arbitration:
         # LATENCY blocks overtake BULK backlogs on congested shared hops
         latency_class = (block.service_class is not None
@@ -839,13 +949,21 @@ class R5Scheduler:
     def _arm_timeout(self, block: Block) -> None:
         if block.timeout_event is not None:
             block.timeout_event.cancel()
+        timeout = self.cost.timeout_us
+        backoff = self.node.retry_backoff_for(block.transfer.pd)
+        if backoff > 1.0 and block.retries:
+            # exponential backoff per consecutive retransmission of this
+            # block (FaultPolicy.retry_backoff; exponent capped so a long
+            # retry tail cannot overflow the float timeline)
+            timeout *= backoff ** min(block.retries, 16)
         block.timeout_event = self.loop.schedule(
-            self.cost.timeout_us, self._on_timeout, block, block.round_id)
+            timeout, self._on_timeout, block, block.round_id)
 
     def _on_timeout(self, block: Block, round_id: int) -> None:
         if block.state is BlockState.DONE or round_id != block.round_id:
             return
-        stats = block.transfer.stats
+        transfer = block.transfer
+        stats = transfer.stats
         stats.timeouts += 1
         if block.wire_bytes == 0:
             # the round paused PAUSED_SRC before any packet left the node:
@@ -853,9 +971,132 @@ class R5Scheduler:
             # only in the prototype) but nothing was on the wire to lose —
             # accounted separately so phantom rounds are subtractable
             stats.phantom_timeouts += 1
+        node = self.node
+        peer = transfer.dst_node
+        if peer.crashed or (node.interconnect is not None
+                            and node.interconnect.down
+                            and not node.interconnect.reachable(
+                                node.node_id, peer.node_id)):
+            # the peer looks dead (fail-stop crash or persistent
+            # partition): count the round instead of retransmitting into
+            # the void; enough consecutive dead rounds fail the transfer
+            block.dead_rounds += 1
+            if block.dead_rounds >= node.crash_detect_retries:
+                self.fail_transfer(transfer, "remote_op_err")
+                return
+            if block.state is BlockState.IN_FLIGHT:
+                # don't retransmit into the void, and don't camp on a
+                # PLDMA slot while waiting out the detection window
+                block.state = BlockState.PAUSED_SRC
+                node.arbiter.on_block_paused(block)
+            self._arm_timeout(block)
+            return
+        block.dead_rounds = 0
+        if not self._charge_retry(block):
+            return  # budget exhausted: the transfer just failed
         # re-enter at the BACK of the block's class queue: a faulting
         # tenant's retransmits do not jump other tenants' fresh traffic
         self.node.arbiter.requeue(block)
+
+    # -------------------------------------------------------- crash faults
+    def _charge_retry(self, block: Block) -> bool:
+        """Charge one retransmission against the domain's retry budget.
+
+        Returns True if the retransmit may proceed; False when the budget
+        is exhausted (the transfer just completed with RETRY_EXC_ERR).
+        The budget counts every retransmission of a block — timeout- and
+        RAPF-triggered alike — so a permanently-faulting peer page cannot
+        spin the 1 ms timer forever when a budget is set.
+        """
+        block.retries += 1
+        max_retries = self.node.max_retries_for(block.transfer.pd)
+        if max_retries is not None and block.retries > max_retries:
+            self.fail_transfer(block.transfer, "retry_exc_err")
+            return False
+        return True
+
+    def _crash_status(self, transfer: Transfer) -> str:
+        """WR_FLUSH_ERR for work posted *from* this (dead) node,
+        REMOTE_OP_ERR for work another node posted against it."""
+        origin = (transfer.origin_id if transfer.origin_id is not None
+                  else transfer.src_node.node_id)
+        return ("wr_flush_err" if origin == self.node.node_id
+                else "remote_op_err")
+
+    def fail_transfer(self, transfer: Transfer, status: str,
+                      free_ids: bool = True) -> None:
+        """Terminally fail a transfer's remaining blocks and deliver its
+        (error) completion exactly once.
+
+        Failed blocks go to ``DONE`` without ever counting toward
+        ``done_blocks``, so ``transfer.complete`` stays False forever: a
+        late ACK can neither double-complete the transfer nor resurrect
+        it.  ``free_ids=False`` leaves the blocks' tr_IDs leased in
+        ``pending`` (crash orphans, reclaimed by ``_reclaim_leases``).
+        """
+        if transfer.failed_status is not None or transfer.complete:
+            return
+        transfer.failed_status = status
+        for block in transfer.blocks:
+            if block.state is not BlockState.DONE:
+                self._fail_block(block, free_ids=free_ids)
+        transfer.next_block = len(transfer.blocks)
+        if self._starved:
+            self._starved = deque(t for t in self._starved
+                                  if t is not transfer)
+        self.node.arbiter.on_transfer_failed(transfer)
+        transfer.stats.t_complete = (self.loop.now
+                                     + self.cost.completion_poll_us)
+        if transfer.on_complete is not None:
+            self.loop.schedule(self.cost.completion_poll_us,
+                               transfer.on_complete, transfer)
+
+    def _fail_block(self, block: Block, free_ids: bool) -> None:
+        if block.timeout_event is not None:
+            block.timeout_event.cancel()
+            block.timeout_event = None
+        if block.state in (BlockState.IN_FLIGHT, BlockState.PAUSED_SRC,
+                           BlockState.PAUSED_DST):
+            block.transfer.live_blocks -= 1
+        block.state = BlockState.DONE
+        self.node.arbiter.purge(block)
+        if block.tr_id >= 0 and free_ids \
+                and self.pending.get(block.tr_id) is block:
+            del self.pending[block.tr_id]
+            self._index_remove(block)
+            self._free_tr_id(block.tr_id)
+        # free_ids=False: the ID stays leased in pending AND the source
+        # index (the lifecycle invariant mirrors one from the other)
+        # until _reclaim_leases retires both
+
+    def on_local_crash(self) -> None:
+        """Fail every live transfer this (now dead) R5 was executing.
+
+        tr_IDs owned by the dead blocks are NOT recycled immediately: a
+        late wire packet could still name them, so they stay leased in
+        ``pending`` until ``lease_timeout_us`` elapses, then return to
+        the free list (each next allocation bumping the generation tag,
+        exactly as a completion-recycled ID would).
+        """
+        transfers = {b.transfer for b in self.pending.values()}
+        transfers.update(self._starved)
+        self._starved.clear()
+        for t in sorted(transfers, key=lambda t: t.tid):
+            self.fail_transfer(t, self._crash_status(t), free_ids=False)
+        orphans = tuple(sorted(self.pending))
+        if orphans:
+            self.loop.schedule(self.node.lease_timeout_us,
+                               self._reclaim_leases, orphans)
+
+    def _reclaim_leases(self, orphans: tuple) -> None:
+        """Lease expiry: orphaned tr_IDs rejoin the free list."""
+        for tid in orphans:
+            block = self.pending.pop(tid, None)
+            if block is None:               # pragma: no cover - defensive
+                continue
+            self._index_remove(block)
+            self._free_tr_id(tid)
+            self.id_stats.lease_reclaims += 1
 
     # ------------------------------------------------------------- arrivals
     def on_ack(self, block: Block, round_id: int) -> None:
@@ -896,6 +1137,7 @@ class R5Scheduler:
         # thesis firmware change: pause instead of instant retransmit
         if block.state is BlockState.DONE or round_id != block.round_id:
             return
+        block.dead_rounds = 0        # a NACK is proof the peer is alive
         block.state = BlockState.PAUSED_DST
         self.node.arbiter.on_block_paused(block)
 
@@ -923,8 +1165,11 @@ class R5Scheduler:
         if msg.wired_pdid != block.transfer.pd:
             return  # security check: wired PDID mismatch
         block.transfer.stats.rapf_retransmits += 1
+        block.dead_rounds = 0        # an RAPF is proof the peer is alive
         if block.timeout_event is not None:
             block.timeout_event.cancel()
+        if not self._charge_retry(block):
+            return  # retry budget exhausted: RETRY_EXC_ERR just fired
         self.node.arbiter.requeue(block)
 
     def on_npr_abort(self, tr_id: int, gen: int, round_id: int) -> None:

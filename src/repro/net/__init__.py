@@ -24,14 +24,14 @@ Select a topology through :class:`repro.api.FabricConfig`::
 
 from repro.net.interconnect import FabricStats, Interconnect
 from repro.net.link import Link, LinkStats, Path
-from repro.net.router import Router, RoutingError
+from repro.net.router import NetworkPartitioned, Router, RoutingError
 from repro.net.topology import (AllToAll, Dragonfly, Mesh2D, Ring, Topology,
                                 TopologyError, TopologyKind, Torus2D,
                                 build_topology)
 
 __all__ = [
     "AllToAll", "Dragonfly", "FabricStats", "Interconnect", "Link",
-    "LinkStats", "Mesh2D", "Path", "Ring", "Router", "RoutingError",
-    "Topology", "TopologyError", "TopologyKind", "Torus2D",
+    "LinkStats", "Mesh2D", "NetworkPartitioned", "Path", "Ring", "Router",
+    "RoutingError", "Topology", "TopologyError", "TopologyKind", "Torus2D",
     "build_topology",
 ]

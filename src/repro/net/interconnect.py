@@ -9,9 +9,18 @@ One :class:`Interconnect` is shared by every node of a fabric.  It owns
 * memoized :class:`~repro.net.link.Path` objects — the transmit handle a
   node uses for both data pages and control packets,
 * the packet-conservation ledger: every path send is recorded per
-  (src, dst), so ``repro.testing`` can prove that each link carried
-  exactly the packets of the routes crossing it (nothing lost, nothing
-  duplicated, nothing smuggled around the topology).
+  concrete *route tuple*, so ``repro.testing`` can prove that each link
+  carried exactly the packets of the routes crossing it (nothing lost,
+  nothing duplicated, nothing smuggled around the topology) — keyed by
+  route, not (src, dst), so the invariant survives re-pathing: packets
+  that crossed the old route before a link failure and packets that
+  crossed the detour after it are accounted against the links they
+  *actually* traversed,
+* the machine-failure model: :meth:`Interconnect.fail_link` /
+  :meth:`restore_link` / :meth:`fail_node` mark directed adjacencies
+  down; :meth:`path` re-routes around them (deterministic BFS detours)
+  and raises :class:`~repro.net.router.NetworkPartitioned` when no live
+  route remains.
 
 Per-link telemetry rolls up into :class:`FabricStats`.
 """
@@ -28,7 +37,7 @@ if TYPE_CHECKING:                                    # pragma: no cover
     # runtime would pull core/__init__ -> engine -> api -> net back in
     from repro.core.costmodel import CostModel
     from repro.core.simulator import EventLoop
-from repro.net.router import Router
+from repro.net.router import NetworkPartitioned, Router
 from repro.net.topology import (Topology, TopologyKind, build_topology,
                                 coerce_kind)
 
@@ -103,30 +112,95 @@ class Interconnect:
             self.links[(n, n)] = Link(loop, cost, n, n, hops=1,
                                       qos=self.qos)
         self._paths: dict[tuple[int, int], Path] = {}
-        #: (src, dst) -> [data_packets, ctrl_packets] injected — the
-        #: ledger side of the per-link packet-conservation invariant
-        self.injected: dict[tuple[int, int], list] = {}
+        #: route tuple -> [data_packets, ctrl_packets] injected — the
+        #: ledger side of the per-link packet-conservation invariant.
+        #: Keyed by the concrete route (not (src, dst)) so conservation
+        #: holds across re-pathing: each injection is charged against the
+        #: exact links its packets traversed at send time.
+        self.injected: dict[tuple[int, ...], list] = {}
+        #: directed adjacencies currently failed (both directions of a
+        #: physical link go down together via fail_link)
+        self.down: frozenset[tuple[int, int]] = frozenset()
+        #: failure-epoch path memo, cleared on every fail/restore
+        self._detour_paths: dict[tuple[int, int], Path] = {}
 
     # ---------------------------------------------------------------- paths
     def path(self, src: int, dst: int) -> Path:
-        """The (memoized) routed path ``src -> dst``."""
+        """The (memoized) routed path ``src -> dst``.
+
+        With links down, routes detour deterministically around them;
+        raises :class:`~repro.net.router.NetworkPartitioned` when no
+        live route exists.  With no failures this is exactly the
+        oblivious minimal route (bit-exact with the no-crash fabric).
+        """
         key = (src, dst)
-        p = self._paths.get(key)
+        if not self.down:
+            p = self._paths.get(key)
+            if p is None:
+                p = self._make_path(self.router.route(src, dst))
+                self._paths[key] = p
+            return p
+        p = self._detour_paths.get(key)
         if p is None:
-            route = self.router.route(src, dst)
-            if src == dst:
-                links = (self.links[(src, src)],)
+            route = self.router.route_avoiding(src, dst, self.down)
+            base = self._paths.get(key)
+            if base is not None and base.route == route:
+                p = base                 # clean oblivious route: reuse
             else:
-                links = tuple(self.links[(u, v)]
-                              for u, v in zip(route, route[1:]))
-            p = Path(self.loop, self.cost, route, links,
-                     ledger=self.injected)
-            self._paths[key] = p
+                p = self._make_path(route)
+            self._detour_paths[key] = p
         return p
+
+    def _make_path(self, route: tuple[int, ...]) -> Path:
+        src, dst = route[0], route[-1]
+        if src == dst:
+            links = (self.links[(src, src)],)
+        else:
+            links = tuple(self.links[(u, v)]
+                          for u, v in zip(route, route[1:]))
+        return Path(self.loop, self.cost, route, links,
+                    ledger=self.injected)
 
     def link(self, src: int, dst: int) -> Link:
         """The directed link of a physical adjacency (or loopback)."""
         return self.links[(src, dst)]
+
+    # -------------------------------------------------------------- failures
+    def fail_link(self, u: int, v: int) -> None:
+        """Take the physical adjacency ``u <-> v`` down (both directions).
+
+        Future :meth:`path` lookups re-route around it; reservations
+        already booked on the wire complete (a failing link does not
+        destroy packets mid-flight — endpoint crash handling decides
+        what a delivered packet means to a dead node).
+        """
+        if (u, v) not in self.links or u == v:
+            raise KeyError(f"no physical adjacency {u}<->{v}")
+        self.down = self.down | {(u, v), (v, u)}
+        self._detour_paths.clear()
+
+    def restore_link(self, u: int, v: int) -> None:
+        """Bring the physical adjacency ``u <-> v`` back up."""
+        if (u, v) not in self.links or u == v:
+            raise KeyError(f"no physical adjacency {u}<->{v}")
+        self.down = self.down - {(u, v), (v, u)}
+        self._detour_paths.clear()
+
+    def fail_node(self, n: int) -> None:
+        """Take every physical adjacency incident to node ``n`` down."""
+        self.topology._check_node(n)
+        incident = {(u, v) for (u, v) in self.links
+                    if u != v and (u == n or v == n)}
+        self.down = self.down | incident
+        self._detour_paths.clear()
+
+    def reachable(self, src: int, dst: int) -> bool:
+        """True iff a live route ``src -> dst`` exists right now."""
+        try:
+            self.router.route_avoiding(src, dst, self.down)
+            return True
+        except NetworkPartitioned:
+            return False
 
     # ---------------------------------------------------------------- stats
     def stats(self) -> FabricStats:
@@ -148,17 +222,17 @@ class Interconnect:
     def conservation_violations(self) -> list[str]:
         """Per-link packet conservation against the injection ledger.
 
-        Recomputes every used route (the router is deterministic) and
-        checks that each link's carried counts equal the sum of the
-        injections whose route crosses it.
+        The ledger is keyed by the concrete route tuple each packet was
+        sent along, so the expected per-link counts are a pure fold over
+        the ledger — no route recomputation, which is what keeps the
+        invariant meaningful across link failures and re-pathing (a
+        post-failure recompute would charge pre-failure packets to the
+        detour they never took).
         """
         expect_data: dict[tuple[int, int], int] = {}
         expect_ctrl: dict[tuple[int, int], int] = {}
-        for (src, dst), (n_data, n_ctrl) in self.injected.items():
-            route = self.router.route(src, dst)
-            hops = ([(src, src)] if src == dst
-                    else list(zip(route, route[1:])))
-            for hop in hops:
+        for route, (n_data, n_ctrl) in self.injected.items():
+            for hop in zip(route, route[1:]):
                 expect_data[hop] = expect_data.get(hop, 0) + n_data
                 expect_ctrl[hop] = expect_ctrl.get(hop, 0) + n_ctrl
         out = []

@@ -275,9 +275,15 @@ class Path:
 
     def _ledger(self) -> list:
         """This path's ``[data, ctrl]`` ledger record (bound on first use
-        — a dict probe per packet is measurable on million-block soaks)."""
+        — a dict probe per packet is measurable on million-block soaks).
+
+        Keyed by the concrete route tuple, not (src, dst): two paths for
+        the same endpoints before and after a link failure account their
+        packets against the links each actually traversed, which is what
+        keeps link-ledger conservation exact across down/up cycles.
+        """
         rec = self._ledger_rec
         if rec is None:
             rec = self._ledger_rec = self.ledger.setdefault(
-                (self.src, self.dst), [0, 0])
+                self.route, [0, 0])
         return rec

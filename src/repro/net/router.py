@@ -18,12 +18,25 @@ route computation is O(path length) once per (src, dst) pair.
 
 from __future__ import annotations
 
+from collections import deque
+
 from repro.net.topology import (Dragonfly, Mesh2D, Ring, Topology,
                                 TopologyKind)
 
 
 class RoutingError(RuntimeError):
     """The router produced (or was asked for) an impossible path."""
+
+
+class NetworkPartitioned(RoutingError):
+    """No live path exists between two endpoints.
+
+    Raised by :meth:`Router.route_avoiding` (and so by
+    ``Interconnect.path`` under link failures) when every physical route
+    between ``src`` and ``dst`` crosses a down link — the typed partition
+    signal the crash-fault layer turns into
+    :attr:`~repro.api.completion.WCStatus.REMOTE_OP_ERR` completions.
+    """
 
 
 class Router:
@@ -48,6 +61,43 @@ class Router:
 
     def hops(self, src: int, dst: int) -> int:
         return len(self.route(src, dst)) - 1
+
+    def route_avoiding(self, src: int, dst: int,
+                       down: frozenset) -> tuple[int, ...]:
+        """A live path ``src -> dst`` that crosses no link in ``down``.
+
+        ``down`` is a set of directed ``(u, v)`` adjacencies that are
+        currently failed.  The oblivious minimal route is preferred when
+        it is clean (so restoring every link restores bit-exact paths);
+        otherwise a deterministic BFS (neighbors expand in sorted order)
+        finds a shortest detour.  Raises :class:`NetworkPartitioned`
+        when no live path exists.
+        """
+        path = self.route(src, dst)
+        if src == dst or not any(hop in down
+                                 for hop in zip(path, path[1:])):
+            return path
+        # deterministic BFS: first-found shortest path, sorted expansion
+        topo = self.topology
+        prev: dict[int, int] = {src: src}
+        q: deque[int] = deque((src,))
+        while q:
+            u = q.popleft()
+            if u == dst:
+                out = [dst]
+                while out[-1] != src:
+                    out.append(prev[out[-1]])
+                out.reverse()
+                path = tuple(out)
+                self._verify(path)
+                return path
+            for v in topo.neighbors(u):
+                if v not in prev and (u, v) not in down:
+                    prev[v] = u
+                    q.append(v)
+        raise NetworkPartitioned(
+            f"no live route {src}->{dst}: every path crosses a down link "
+            f"({len(down)} down)")
 
     # ------------------------------------------------------------ internals
     def _compute(self, src: int, dst: int) -> tuple[int, ...]:

@@ -16,6 +16,7 @@ iteration-order nondeterminism.
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_bank_conservation,
                                       check_completion_conservation,
+                                      check_crash_consistency,
                                       check_link_conservation,
                                       check_pinned_resident,
                                       check_route_sanity,
@@ -29,9 +30,9 @@ from repro.testing.traffic import FaultInjection, TenantSpec, scale_mix
 __all__ = [
     "FaultInjection", "SoakResult", "TenantSpec",
     "check_arbiter_consistency", "check_bank_conservation",
-    "check_completion_conservation", "check_link_conservation",
-    "check_pinned_resident", "check_route_sanity",
-    "check_tenant_isolation", "check_tr_id_lifecycle",
-    "check_vmem_frame_conservation", "check_vmem_pins", "scale_mix",
-    "soak",
+    "check_completion_conservation", "check_crash_consistency",
+    "check_link_conservation", "check_pinned_resident",
+    "check_route_sanity", "check_tenant_isolation",
+    "check_tr_id_lifecycle", "check_vmem_frame_conservation",
+    "check_vmem_pins", "scale_mix", "soak",
 ]

@@ -191,6 +191,76 @@ def check_npr_consistency(fabric) -> List[str]:
     return out
 
 
+#: the WCStatus values a failed transfer may carry (kept as strings to
+#: match ``Transfer.failed_status`` — the core layer never imports api)
+FAILED_STATUSES = {"retry_exc_err", "wr_flush_err", "remote_op_err"}
+
+
+def check_crash_consistency(fabric) -> List[str]:
+    """Crash-fault invariants, safe to run mid-soak or after drain:
+
+    * a crashed node's datapath is *silent*: its arbiter holds no PLDMA
+      slot and queues no block, and every tr_id it still leases belongs
+      to a DONE (failed) block awaiting lease expiry — a dead machine
+      neither launches nor retransmits;
+    * a crashed node is fenced off the interconnect: every incident
+      directed link is marked down (``fail_node`` left no back door);
+    * every failed transfer fail-stopped *cleanly*: its status is one of
+      the three crash-fault WC statuses, every block reached DONE and
+      left the arbiter queue, and the transfer never also reports
+      ``complete`` — i.e. its work request completes exactly once, with
+      a non-SUCCESS status, never both ways.
+    """
+    out = []
+    ic = fabric.interconnect
+    for node in fabric.nodes:
+        tag = f"node {node.node_id}"
+        r5 = node.r5
+        if node.crashed:
+            arb = node.arbiter
+            if arb.in_flight:
+                out.append(f"{tag}: crashed but {arb.in_flight} blocks "
+                           f"still hold PLDMA slots")
+            depth = arb.queue_depth()
+            if depth:
+                out.append(f"{tag}: crashed but {depth} blocks still "
+                           f"queued in the arbiter")
+            for tid, block in r5.pending.items():
+                if block.state.name != "DONE":
+                    out.append(f"{tag}: crashed but leased tr_id {tid} "
+                               f"holds a {block.state.name} block")
+            for nbr in ic.topology.neighbors(node.node_id):
+                if (node.node_id, nbr) not in ic.down \
+                        or (nbr, node.node_id) not in ic.down:
+                    out.append(f"{tag}: crashed but link to {nbr} is "
+                               f"not marked down")
+        # failed transfers (any node — retry exhaustion and flush happen
+        # on live nodes too) must have fail-stopped cleanly
+        seen: set = set()
+        for block in r5.pending.values():
+            t = block.transfer
+            if id(t) in seen:
+                continue
+            seen.add(id(t))
+            if t.failed_status is None:
+                continue
+            if t.failed_status not in FAILED_STATUSES:
+                out.append(f"{tag} tid={t.tid}: unknown failed_status "
+                           f"{t.failed_status!r}")
+            if t.complete:
+                out.append(f"{tag} tid={t.tid}: transfer both failed "
+                           f"({t.failed_status}) and complete — its WR "
+                           f"would complete twice")
+            for b in t.blocks:
+                if b.state.name != "DONE":
+                    out.append(f"{tag} tid={t.tid}: failed transfer "
+                               f"holds a {b.state.name} block")
+                if b.queued:
+                    out.append(f"{tag} tid={t.tid}: failed transfer's "
+                               f"block still queued in the arbiter")
+    return out
+
+
 def check_arbiter_consistency(fabric) -> List[str]:
     """Arbiter telemetry and end-state sanity:
 

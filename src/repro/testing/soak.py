@@ -22,6 +22,7 @@ from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_bank_conservation,
                                       check_completion_conservation,
+                                      check_crash_consistency,
                                       check_link_conservation,
                                       check_npr_consistency,
                                       check_pinned_resident,
@@ -142,6 +143,7 @@ def soak(seed: int,
             r.posted_ids, [wc.wr_id for wc in r.completions],
             label=r.spec.label())
     violations += check_pinned_resident(fabric)
+    violations += check_crash_consistency(fabric)
     violations += check_arbiter_consistency(fabric)
     violations += check_link_conservation(fabric)
     violations += check_tr_id_lifecycle(fabric)

@@ -16,7 +16,7 @@ import random
 from typing import Optional
 
 from repro.api.completion import WorkQueueFull
-from repro.api.fabric import Fabric
+from repro.api.fabric import Fabric, NodeDown
 from repro.api.memory import BufferPrep
 from repro.api.policy import FaultPolicy
 from repro.core import addresses as A
@@ -84,11 +84,26 @@ class FaultInjection:
       next access).
 
     A period of 0 disables that churn source.
+
+    Crash-fault schedules (machine-failure model) are *deterministic*
+    by construction — fixed virtual timestamps rather than sampled
+    ones, so a chaos soak is still a pure function of ``(specs, seed)``:
+
+    * ``crashes`` — ``(t_us, node_idx)`` pairs: at ``t_us`` the node
+      fail-stops (:meth:`Fabric.crash_node`).  In-flight work toward it
+      completes with error statuses, never silently disappears;
+    * ``link_flaps`` — ``(t_down_us, t_up_us, u, v)`` tuples: the
+      ``u<->v`` link fails at ``t_down_us`` and heals at ``t_up_us``
+      (``<= 0`` = stays down), re-pathing routed traffic both ways.
     """
 
     khugepaged_period_us: float = 0.0
     reclaim_period_us: float = 0.0
     reclaim_pages: int = 8
+    # crash-fault schedules: ((t_us, node_idx), ...) and
+    # ((t_down_us, t_up_us, u, v), ...)
+    crashes: tuple = ()
+    link_flaps: tuple = ()
 
 
 class TenantRun:
@@ -117,12 +132,18 @@ class TenantRun:
         self.completions: list = []
         self.latencies: list[float] = []
         self.rejected = 0                     # quota/CQ backpressure events
+        self.aborted = False                  # posting node crashed mid-run
         self.next_req = 0
         self._pump_scheduled = False
 
     # ----------------------------------------------------------- lifecycle
     @property
     def done(self) -> bool:
+        # a crashed posting node can never reach n_requests; the run is
+        # over once everything already posted has drained (with error
+        # completions — nothing may hang or leak)
+        if self.aborted:
+            return self.in_flight == 0
         return len(self.completions) >= self.spec.n_requests
 
     @property
@@ -171,7 +192,7 @@ class TenantRun:
         return self._mrs[key]
 
     def _try_post(self, reschedule_on_reject: bool = False) -> None:
-        if self.next_req >= self.spec.n_requests:
+        if self.aborted or self.next_req >= self.spec.n_requests:
             return
         i = self.next_req
         src, dst = self._regions_for(i)
@@ -179,6 +200,12 @@ class TenantRun:
             wr = self.domain.post_write(
                 src, dst, cq=self.cq,
                 nbytes=min(src.length, dst.length))
+        except NodeDown:
+            # our posting node fail-stopped: a dead machine posts no new
+            # work.  Already-posted WRs still drain (as errors) — the
+            # pump keeps polling until in_flight hits zero.
+            self.aborted = True
+            return
         except WorkQueueFull:
             # quota / CQ backpressure; open-loop arrivals retry
             # themselves, closed-loop posts are retried by the pump
@@ -237,6 +264,11 @@ class TenantRun:
                               if self.spec.service_class else "bulk"),
             "posted": len(self.posted_ids),
             "completed": len(self.completions),
+            # crash-fault layer: completions that carry an error status
+            # (still exactly one completion per posted WR) and whether
+            # our posting node fail-stopped mid-run
+            "errors": sum(1 for wc in self.completions if not wc.ok),
+            "aborted": self.aborted,
             "rejected": self.rejected,
             "latency_mean_us": (round(sum(lat) / len(lat), 6)
                                 if lat else 0.0),
@@ -374,3 +406,12 @@ def schedule_injection(fabric: Fabric, runs: list[TenantRun],
         fabric.loop.schedule(inj.khugepaged_period_us, khugepaged_tick)
     if inj.reclaim_period_us > 0:
         fabric.loop.schedule(inj.reclaim_period_us, reclaim_tick)
+
+    # crash-fault schedules: fixed timestamps, so the chaos run stays a
+    # pure function of (specs, seed) — the rng never touches these
+    for t_us, node_idx in inj.crashes:
+        fabric.loop.schedule(t_us, fabric.crash_node, node_idx)
+    for t_down, t_up, u, v in inj.link_flaps:
+        fabric.loop.schedule(t_down, fabric.fail_link, u, v)
+        if t_up > 0:
+            fabric.loop.schedule(t_up, fabric.restore_link, u, v)

@@ -32,6 +32,9 @@ class PageInReceipt:
     rapf_retransmits: int = 0
     dst_faults: int = 0
     bytes_in: int = 0
+    # crash-fault layer: page-ins served by the replica pager after the
+    # primary backing node failed (RemoteFramePool failover)
+    failovers: int = 0
     # NP-RDMA backend counters (zero when the domain runs the thesis path)
     mtt_hits: int = 0
     mtt_misses: int = 0

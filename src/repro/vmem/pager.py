@@ -275,6 +275,7 @@ class Pager:
                            rapf_retransmits=r.rapf_retransmits,
                            remote_dst_faults=r.dst_faults,
                            remote_bytes_in=r.bytes_in,
+                           failovers=r.failovers,
                            mtt_hits=r.mtt_hits,
                            mtt_misses=r.mtt_misses,
                            mtt_stale=r.mtt_stale,

@@ -13,6 +13,17 @@ retransmits surface in :class:`~repro.vmem.stats.PagingStats`
 
 This is the building block for multi-node paged serving: a KV pager
 whose backing tier is another node's memory instead of local host RAM.
+
+**Crash-fault failover.**  A pool built with a ``replica_mr`` (a second
+backing region on a different node, ``build(replica_node=...)``) mirrors
+every write-back (:meth:`RemoteFramePool.page_out`) to both backing
+nodes and keeps per-page version counters.  When a page-in against the
+primary completes with an error status (the primary backing node
+crashed or partitioned away), the pool fails over: the read is re-posted
+against the replica, and each page served is checked for
+*read-your-writes* — the replica must hold the newest version this pool
+ever wrote back (``ryw_verified`` / ``ryw_violations``).  All later
+page-ins go straight to the replica.
 """
 
 from __future__ import annotations
@@ -36,7 +47,8 @@ class RemoteFramePool(FramePool):
 
     def __init__(self, local: FramePool, domain: ProtectionDomain,
                  remote_mr: MemoryRegion, local_mr: MemoryRegion,
-                 cq: CompletionQueue, page_bytes: int = A.PAGE_SIZE):
+                 cq: CompletionQueue, page_bytes: int = A.PAGE_SIZE,
+                 replica_mr: Optional[MemoryRegion] = None):
         super().__init__(local.n_frames, local.page_elems)
         self.local = local
         self.free = local.free              # share allocation state
@@ -50,6 +62,24 @@ class RemoteFramePool(FramePool):
         if n_pages < 1:
             raise ValueError("memory regions smaller than one page")
         self.n_backing_pages = n_pages
+        # ---- crash-fault failover state --------------------------------
+        if replica_mr is not None:
+            if replica_mr.node_id == remote_mr.node_id:
+                raise ValueError(
+                    "replica_mr must live on a different node than the "
+                    "primary backing region (same-node replication "
+                    "survives nothing)")
+            if replica_mr.length // page_bytes < n_pages:
+                raise ValueError("replica region smaller than the primary")
+        self.replica_mr = replica_mr
+        self.failed_over = False
+        self.failovers = 0                  # page-ins re-served by replica
+        self.ryw_verified = 0               # failover pages at newest version
+        self.ryw_violations = 0             # replica missed a write-back
+        # read-your-writes bookkeeping: version this pool last wrote back
+        # per backing page, and the version the REPLICA is known to hold
+        self._versions: dict[int, int] = {}
+        self._replica_versions: dict[int, int] = {}
 
     # payload delegates to the local pool -------------------------------
     @property
@@ -74,6 +104,28 @@ class RemoteFramePool(FramePool):
         return self.local.gather(frames)
 
     # transport ----------------------------------------------------------
+    @property
+    def active_mr(self) -> MemoryRegion:
+        """The backing region page-ins currently read from."""
+        return (self.replica_mr if self.failed_over and self.replica_mr
+                is not None else self.remote_mr)
+
+    def _post_read(self, mr: MemoryRegion, off: int, nbytes: int,
+                   prefetch: bool) -> WorkCompletion:
+        if self.cq.outstanding >= self.cq.max_outstanding:
+            # keep the posting verbs unblocked; history stays in
+            # ``completions`` for callers that drained nothing themselves
+            self.completions.extend(self.cq.poll(self.cq.max_outstanding))
+        # a demand page-in is on some tenant's critical path -> LATENCY;
+        # predictive stream warm-ups share bandwidth as BULK traffic
+        wr = self.domain.post_read(mr, self.local_mr,
+                                   cq=self.cq, nbytes=nbytes,
+                                   target_offset=off, local_offset=off,
+                                   service_class=(ServiceClass.BULK
+                                                  if prefetch else
+                                                  ServiceClass.LATENCY))
+        return wr.result()
+
     def page_in(self, space, vpage: int, n_pages: int,
                 prefetch: bool = False) -> PageInReceipt:
         if vpage + n_pages > self.n_backing_pages:
@@ -82,27 +134,82 @@ class RemoteFramePool(FramePool):
                 f"region ({self.n_backing_pages} pages)")
         off = vpage * self.page_bytes
         nbytes = n_pages * self.page_bytes
-        if self.cq.outstanding >= self.cq.max_outstanding:
-            # keep the posting verbs unblocked; history stays in
-            # ``completions`` for callers that drained nothing themselves
-            self.completions.extend(self.cq.poll(self.cq.max_outstanding))
-        # a demand page-in is on some tenant's critical path -> LATENCY;
-        # predictive stream warm-ups share bandwidth as BULK traffic
-        wr = self.domain.post_read(self.remote_mr, self.local_mr,
-                                   cq=self.cq, nbytes=nbytes,
-                                   target_offset=off, local_offset=off,
-                                   service_class=(ServiceClass.BULK
-                                                  if prefetch else
-                                                  ServiceClass.LATENCY))
-        wc = wr.result()
-        return PageInReceipt(us=wc.latency_us, remote_reads=1,
+        t0 = self.fabric.now
+        wc = self._post_read(self.active_mr, off, nbytes, prefetch)
+        failovers = 0
+        if not wc.ok and not self.failed_over and self.replica_mr is not None:
+            # primary backing node crashed/partitioned: fail over to the
+            # replica pager and re-serve this read from it.  latency_us
+            # below spans BOTH attempts — detection time is part of the
+            # recovery latency the chaos benchmark claims.
+            self.failed_over = True
+            wc = self._post_read(self.replica_mr, off, nbytes, prefetch)
+        if self.failed_over and wc.ok:
+            failovers = 1
+            self.failovers += 1
+            self._verify_ryw(vpage, n_pages)
+        return PageInReceipt(us=self.fabric.now - t0 if failovers
+                             else wc.latency_us,
+                             remote_reads=1,
                              rapf_retransmits=wc.stats.rapf_retransmits,
                              dst_faults=wc.stats.dst_faults,
-                             bytes_in=nbytes,
+                             bytes_in=nbytes if wc.ok else 0,
+                             failovers=failovers,
                              mtt_hits=wc.stats.mtt_hits,
                              mtt_misses=wc.stats.mtt_misses,
                              mtt_stale=wc.stats.mtt_stale,
                              pool_redirects=wc.stats.pool_redirect_pages)
+
+    def _verify_ryw(self, vpage: int, n_pages: int) -> None:
+        """Read-your-writes check: every page served by the replica must
+        carry the newest version this pool ever wrote back."""
+        for p in range(vpage, vpage + n_pages):
+            want = self._versions.get(p, 0)
+            if self._replica_versions.get(p, 0) == want:
+                self.ryw_verified += 1
+            else:
+                self.ryw_violations += 1
+
+    def page_out(self, space, vpage: int, n_pages: int = 1) -> float:
+        """Write back ``n_pages`` starting at ``vpage`` to the backing
+        store — mirrored to the replica when one is configured, so a
+        later failover read observes the write (read-your-writes).
+
+        Returns the simulated microseconds the write-back(s) took.
+        """
+        if vpage + n_pages > self.n_backing_pages:
+            raise ValueError(
+                f"page-out [{vpage}, {vpage + n_pages}) beyond the remote "
+                f"region ({self.n_backing_pages} pages)")
+        off = vpage * self.page_bytes
+        nbytes = n_pages * self.page_bytes
+        for p in range(vpage, vpage + n_pages):
+            self._versions[p] = self._versions.get(p, 0) + 1
+        targets = []
+        if not self.failed_over:
+            targets.append((self.remote_mr, False))
+        if self.replica_mr is not None:
+            targets.append((self.replica_mr, True))
+        t0 = self.fabric.now
+        for mr, is_replica in targets:
+            if self.cq.outstanding >= self.cq.max_outstanding:
+                self.completions.extend(
+                    self.cq.poll(self.cq.max_outstanding))
+            wr = self.domain.post_write(self.local_mr, mr, cq=self.cq,
+                                        nbytes=nbytes, src_offset=off,
+                                        dst_offset=off,
+                                        service_class=ServiceClass.BULK)
+            wc = wr.result()
+            if is_replica and wc.ok:
+                # only a COMPLETED replica write is read-your-writes
+                # visible; a failed one must surface as a violation
+                for p in range(vpage, vpage + n_pages):
+                    self._replica_versions[p] = self._versions[p]
+            elif not is_replica and not wc.ok and self.replica_mr is not None:
+                # the primary died under a write-back: stop sending it
+                # traffic — subsequent reads and writes go replica-only
+                self.failed_over = True
+        return self.fabric.now - t0
 
     # telemetry ----------------------------------------------------------
     @property
@@ -126,6 +233,8 @@ class RemoteFramePool(FramePool):
               local_node: int = 0, remote_node: int = 1,
               local_base: int = 0x10_0000_0000,
               remote_base: int = 0x20_0000_0000,
+              replica_node: Optional[int] = None,
+              replica_base: int = 0x30_0000_0000,
               cq_depth: int = 256, dtype=jnp.float32) -> "RemoteFramePool":
         """Wire a fabric scenario: remote backing (pre-touched), faulting
         local landing buffer, one CQ, one protection domain.
@@ -134,6 +243,11 @@ class RemoteFramePool(FramePool):
         routed ``FabricConfig(n_nodes=8, topology="torus_2d")`` whose
         multi-hop paths make page-ins contend with other traffic; the
         default is the seed's two-node ALL_TO_ALL.
+
+        ``replica_node`` registers a second (pre-touched) backing region
+        there and arms crash-fault failover: if the primary backing node
+        dies, page-ins transparently re-serve from the replica (with
+        read-your-writes verification against mirrored write-backs).
         """
         if fabric is not None and config is not None:
             raise ValueError("pass either fabric= or config=, not both")
@@ -143,13 +257,25 @@ class RemoteFramePool(FramePool):
             raise ValueError(
                 f"local_node={local_node} / remote_node={remote_node} "
                 f"outside the fabric's {n_nodes} nodes")
+        if replica_node is not None:
+            if not 0 <= replica_node < n_nodes:
+                raise ValueError(
+                    f"replica_node={replica_node} outside the fabric's "
+                    f"{n_nodes} nodes")
+            if replica_node == remote_node:
+                raise ValueError(
+                    "replica_node must differ from remote_node")
         domain = fabric.domain(pd) or fabric.open_domain(pd, policy=policy)
         size = n_pages * page_bytes
         remote_mr = domain.register_memory(remote_node, remote_base, size,
                                            prep=BufferPrep.TOUCHED)
         local_mr = domain.register_memory(local_node, local_base, size,
                                           prep=BufferPrep.FAULTING)
+        replica_mr = None
+        if replica_node is not None:
+            replica_mr = domain.register_memory(
+                replica_node, replica_base, size, prep=BufferPrep.TOUCHED)
         cq = fabric.create_cq(depth=cq_depth)
         local = local or DeviceFramePool(n_frames, page_elems, dtype)
         return cls(local, domain, remote_mr, local_mr, cq,
-                   page_bytes=page_bytes)
+                   page_bytes=page_bytes, replica_mr=replica_mr)

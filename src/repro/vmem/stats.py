@@ -34,6 +34,8 @@ class PagingStats:
     remote_bytes_in: int = 0
     remote_dst_faults: int = 0   # destination faults of those reads
     rapf_retransmits: int = 0    # RAPF-triggered retransmits of those reads
+    failovers: int = 0           # page-ins re-served by the replica pager
+    #                              after the primary backing node crashed
     # ---- NP-RDMA backend (reads through a Strategy.NP_RDMA domain) -------
     mtt_hits: int = 0            # translations served by a fresh MTT entry
     mtt_misses: int = 0          # uncached translations (filled host-side)

@@ -1,0 +1,316 @@
+"""Crash-fault tolerance: machine failures, WC error statuses, retry
+budgets, lease reclamation, remote-pager failover, chaos soaks.
+
+The thesis assumes live endpoints; these tests pin down what the fabric
+does when that assumption breaks — every affected work request must
+complete exactly once with a non-SUCCESS status, nothing may retransmit
+forever into a dead peer, and the PR-5 tr_ID lifecycle invariants must
+survive a crash (leased orphans, generation bumps, reclamation).
+"""
+
+import pytest
+
+from repro.api import (BufferPrep, Fabric, FabricConfig, FaultPolicy,
+                       NetworkPartitioned, NodeDown, Strategy, WCStatus,
+                       WROpcode)
+from repro.testing import (FaultInjection, TenantSpec, check_crash_consistency,
+                           check_link_conservation, check_tr_id_lifecycle,
+                           soak)
+from repro.vmem.remote import RemoteFramePool
+
+SRC = 0x10_0000_0000
+DST = 0x20_0000_0000
+UNMAPPED_DST = 0x7F_0000_0000     # never mmap'd: faults can never resolve
+
+
+def write_pair(dom, src_node, dst_node, size=65536,
+               dst_prep=BufferPrep.TOUCHED):
+    src = dom.register_memory(src_node, SRC, size, prep=BufferPrep.TOUCHED)
+    dst = dom.register_memory(dst_node, DST, size, prep=dst_prep)
+    return src, dst
+
+
+class TestCrashCompletions:
+    def test_crash_dst_mid_rapf_completes_remote_op_err(self):
+        """The hardest window: the destination NACKed (block PAUSED_DST,
+        source waiting for the RAPF grant) and then dies — the grant
+        never comes.  The WR must complete REMOTE_OP_ERR after the
+        crash-detection rounds, never hang or retransmit forever."""
+        fab = Fabric.build(FabricConfig(n_nodes=2))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = write_pair(dom, 0, 1, dst_prep=BufferPrep.FAULTING)
+        wr = dom.post_write(src, dst, cq=cq)
+
+        def crash_when_paused():        # fire exactly inside the window
+            r5 = fab.nodes[0].r5
+            if any(b.state.name == "PAUSED_DST"
+                   for b in r5.pending.values()):
+                fab.crash_node(1)
+                return
+            fab.loop.schedule(1.0, crash_when_paused)
+
+        fab.loop.schedule(1.0, crash_when_paused)
+        wc = wr.result()
+        assert wc.status == WCStatus.REMOTE_OP_ERR
+        assert not wc.ok
+        assert wc.stats.dst_faults >= 1          # the NACK did arrive
+        fab.progress()
+        assert check_crash_consistency(fab) == []
+        assert check_tr_id_lifecycle(fab) == []
+
+    def test_crash_src_flushes_wr_flush_err(self):
+        fab = Fabric.build(FabricConfig(n_nodes=2))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = write_pair(dom, 0, 1)
+        wr = dom.post_write(src, dst, cq=cq)
+        fab.loop.schedule(2.0, fab.crash_node, 0)
+        assert wr.result().status == WCStatus.WR_FLUSH_ERR
+
+    def test_posting_from_crashed_node_raises_node_down(self):
+        fab = Fabric.build(FabricConfig(n_nodes=2))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = write_pair(dom, 0, 1)
+        fab.crash_node(0)
+        with pytest.raises(NodeDown):
+            dom.post_write(src, dst, cq=cq)
+
+    def test_posting_toward_crashed_peer_completes_async(self):
+        """Posting *toward* a dead peer is allowed (the poster cannot
+        know) — the WR completes asynchronously with REMOTE_OP_ERR."""
+        fab = Fabric.build(FabricConfig(n_nodes=2))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = write_pair(dom, 0, 1)
+        fab.crash_node(1)
+        wc = dom.post_write(src, dst, cq=cq).result()
+        assert wc.status == WCStatus.REMOTE_OP_ERR
+
+    def test_close_domain_flushes_stranded_wrs_promptly(self):
+        """The drain hang: close_domain used to spin 5e6 virtual us
+        waiting for transfers a dead peer can never complete.  Stranded
+        WRs must flush with WR_FLUSH_ERR and teardown stays prompt."""
+        fab = Fabric.build(FabricConfig(n_nodes=2))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src, dst = write_pair(dom, 0, 1, dst_prep=BufferPrep.FAULTING)
+        wr = dom.post_write(src, dst, cq=cq)
+        fab.crash_node(1)
+        fab.close_domain(1)              # returns promptly, no drain spin
+        assert fab.now < 1e5             # not the 5e6 us drain deadline
+        assert wr.result().status in (WCStatus.WR_FLUSH_ERR,
+                                      WCStatus.REMOTE_OP_ERR)
+
+
+class TestRetryBudget:
+    def _permanently_paused_wr(self, fab, max_retries, backoff=1.0):
+        """A write whose destination VA is never mmap'd: every round
+        NACKs, the resolver's touch SEGFAULTs (recovered), the block
+        pauses and retries forever — unless a budget caps it."""
+        dom = fab.open_domain(1, policy=FaultPolicy(
+            strategy=Strategy.TOUCH_A_PAGE, max_retries=max_retries,
+            retry_backoff=backoff))
+        dom.register_memory(0, SRC, 4096, prep=BufferPrep.TOUCHED)
+        cq = fab.create_cq()
+        cq.on_post()
+        t = fab._start_write(1, 0, SRC, 0, UNMAPPED_DST, 4096)
+        return fab._track(fab._next_wr_id(), WROpcode.WRITE, cq, t)
+
+    def test_budget_exhaustion_completes_retry_exc_err(self):
+        fab = Fabric.build(FabricConfig(n_nodes=1))
+        wr = self._permanently_paused_wr(fab, max_retries=4)
+        wc = wr.result()                 # finite now: budget caps the loop
+        assert wc.status == WCStatus.RETRY_EXC_ERR
+        assert not wc.ok
+        assert wc.stats.segfaults_recovered > 0   # it really was stuck
+        fab.progress()
+        assert check_crash_consistency(fab) == []
+        assert check_tr_id_lifecycle(fab) == []
+
+    def test_backoff_stretches_time_to_exhaustion(self):
+        def exhaust(backoff):
+            fab = Fabric.build(FabricConfig(n_nodes=1))
+            wr = self._permanently_paused_wr(fab, max_retries=3,
+                                             backoff=backoff)
+            assert wr.result().status == WCStatus.RETRY_EXC_ERR
+            return fab.now
+
+        assert exhaust(2.0) > exhaust(1.0)
+
+    def test_unlimited_default_keeps_retrying(self):
+        """max_retries=None (the default) preserves the seed's
+        infinite-retry semantics — the paused WR never errors out."""
+        fab = Fabric.build(FabricConfig(n_nodes=1))
+        wr = self._permanently_paused_wr(fab, max_retries=None)
+        with pytest.raises(TimeoutError):
+            wr.result(deadline_us=25_000.0)
+        assert wr.stats.timeouts > 0     # still alive, still retrying
+
+
+class TestLinkFailures:
+    def test_flap_on_torus_re_paths_without_duplicate_delivery(self):
+        """Fail a link mid-transfer on a routed torus, restore it later:
+        traffic detours, the WR still succeeds, and the per-link packet
+        ledger balances — nothing lost or delivered twice."""
+        fab = Fabric.build(FabricConfig(n_nodes=8, topology="torus_2d"))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        src = dom.register_memory(0, SRC, 262144, prep=BufferPrep.TOUCHED)
+        dst = dom.register_memory(3, DST, 262144, prep=BufferPrep.TOUCHED)
+        wr = dom.post_write(src, dst, cq=cq)
+        fab.loop.schedule(2.0, fab.fail_link, 0, 1)
+        fab.loop.schedule(400.0, fab.restore_link, 0, 1)
+        wc = wr.result()
+        assert wc.ok
+        fab.progress()                   # let the restore event land
+        assert fab.interconnect.down == frozenset()       # fully healed
+        assert check_link_conservation(fab) == []
+
+    def test_partition_is_typed_and_detour_is_deterministic(self):
+        fab = Fabric.build(FabricConfig(n_nodes=4, topology="ring"))
+        ic = fab.interconnect
+        clean = ic.router.route(0, 1)
+        fab.fail_link(0, 1)
+        detour = ic.router.route_avoiding(0, 1, ic.down)
+        assert detour == (0, 3, 2, 1)     # BFS over sorted neighbors
+        fab.fail_link(0, 3)               # node 0 now fully cut off
+        with pytest.raises(NetworkPartitioned):
+            ic.router.route_avoiding(0, 1, ic.down)
+        assert not ic.reachable(0, 2)
+        fab.restore_link(0, 1)
+        fab.restore_link(0, 3)
+        assert ic.router.route_avoiding(0, 1, ic.down) == clean
+
+
+class TestLeaseReclamation:
+    def test_reclaim_crosses_generation_boundary(self):
+        """Shrunken tr_ID space: wrap it (recycled allocations, gen >= 2)
+        *before* the crash, so the leased orphans die mid-generation.
+        Reclamation must restore the free-list identity exactly."""
+        fab = Fabric.build(FabricConfig(n_nodes=2, tr_id_space=2,
+                                        lease_timeout_us=5_000.0))
+        dom = fab.open_domain(1)
+        cq = fab.create_cq()
+        # wrap the 2-ID space: 6 sequential transfers -> allocated=6,
+        # wraps=3, every later ID is a recycled generation >= 2
+        for i in range(6):
+            src = dom.register_memory(0, SRC + i * (1 << 20), 4096,
+                                      prep=BufferPrep.TOUCHED)
+            dst = dom.register_memory(1, DST + i * (1 << 20), 4096,
+                                      prep=BufferPrep.TOUCHED)
+            assert dom.post_write(src, dst, cq=cq).result().ok
+        r5 = fab.nodes[0].r5
+        assert r5.id_stats.wraps >= 2
+        # two in-flight transfers, then fail-stop the source
+        wrs = []
+        for i in range(6, 8):
+            src = dom.register_memory(0, SRC + i * (1 << 20), 4096,
+                                      prep=BufferPrep.TOUCHED)
+            dst = dom.register_memory(1, DST + i * (1 << 20), 4096,
+                                      prep=BufferPrep.TOUCHED)
+            wrs.append(dom.post_write(src, dst, cq=cq))
+        # crash a few us in, once both blocks are launched and own IDs
+        fab.loop.schedule(3.0, fab.crash_node, 0)
+        for wr in wrs:
+            assert wr.result().status == WCStatus.WR_FLUSH_ERR
+        # the orphaned IDs stay leased until the lease expires...
+        assert len(r5.pending) == 2
+        assert check_crash_consistency(fab) == []
+        fab.progress()                   # ...then reclamation runs
+        assert r5.pending == {}
+        assert r5.id_stats.lease_reclaims == 2
+        assert check_tr_id_lifecycle(fab) == []
+        assert fab.now >= 5_000.0        # reclaim waited the lease out
+
+
+class TestRemotePagerFailover:
+    def _pool(self):
+        return RemoteFramePool.build(
+            n_frames=8, page_elems=16, n_pages=32,
+            config=FabricConfig(n_nodes=4, topology="ring"),
+            remote_node=1, replica_node=2)
+
+    def test_failover_read_your_writes(self):
+        pool = self._pool()
+        pool.page_out(None, 0, 4)        # mirrored to primary + replica
+        assert pool.page_in(None, 0, 2).failovers == 0
+        pool.fabric.crash_node(1)        # primary backing node dies
+        r = pool.page_in(None, 0, 4)
+        assert r.failovers == 1
+        assert r.bytes_in == 4 * pool.page_bytes
+        assert pool.failed_over
+        assert pool.ryw_verified == 4 and pool.ryw_violations == 0
+        # post-failover traffic is replica-only and still works
+        pool.page_out(None, 4, 2)
+        assert pool.page_in(None, 4, 2).failovers == 1
+
+    def test_failover_latency_spans_both_attempts(self):
+        pool = self._pool()
+        pool.page_in(None, 0, 1)         # cold read faults the landing page
+        warm = pool.page_in(None, 0, 1).us
+        pool.fabric.crash_node(1)
+        recovery = pool.page_in(None, 0, 1)
+        assert recovery.failovers == 1
+        assert recovery.us > warm        # detection time is part of it
+
+    def test_no_replica_means_failed_page_in(self):
+        pool = RemoteFramePool.build(
+            n_frames=8, page_elems=16, n_pages=32,
+            config=FabricConfig(n_nodes=2))
+        pool.fabric.crash_node(1)
+        r = pool.page_in(None, 0, 1)
+        assert r.failovers == 0 and r.bytes_in == 0
+
+    def test_replica_must_be_remote_from_primary(self):
+        with pytest.raises(ValueError):
+            RemoteFramePool.build(
+                n_frames=8, page_elems=16, n_pages=32,
+                config=FabricConfig(n_nodes=4, topology="ring"),
+                remote_node=1, replica_node=1)
+
+
+CHAOS_CONFIG = dict(config=FabricConfig(n_nodes=8, topology="torus_2d"))
+CHAOS_TENANTS = [
+    TenantSpec(pd=1, name="t01", mode="closed", inflight=2, n_requests=10,
+               src_node=0, dst_node=1),
+    TenantSpec(pd=2, name="t23", mode="closed", inflight=2, n_requests=10,
+               src_node=2, dst_node=3, dst_prep=BufferPrep.FAULTING),
+    TenantSpec(pd=3, name="t32", mode="closed", inflight=2, n_requests=10,
+               src_node=3, dst_node=2),
+]
+CHAOS_INJECTION = FaultInjection(
+    khugepaged_period_us=500.0, reclaim_period_us=700.0,
+    crashes=((800.0, 2),), link_flaps=((300.0, 900.0, 0, 1),))
+
+
+class TestChaosSoak:
+    @pytest.mark.parametrize("seed", [7, 31, 99])
+    def test_seeded_chaos_soak_is_byte_identical(self, seed):
+        """Crash storms + link flaps + churn: zero invariant violations,
+        every affected WR completes exactly once with an error status,
+        and the whole run replays byte-identically from its seed."""
+        a = soak(seed, tenants=CHAOS_TENANTS, injection=CHAOS_INJECTION,
+                 **CHAOS_CONFIG)
+        assert a.ok, a.violations
+        b = soak(seed, tenants=CHAOS_TENANTS, injection=CHAOS_INJECTION,
+                 **CHAOS_CONFIG)
+        assert a.json() == b.json()
+        # the crash actually bit: node 2's tenants saw error completions
+        by_name = {t["tenant"]: t for t in a.stats["tenants"]}
+        assert by_name["t23"]["aborted"]              # posting node died
+        assert by_name["t32"]["errors"] > 0           # peer died
+        for t in a.stats["tenants"]:                  # exactly-once, always
+            assert t["completed"] == t["posted"]
+
+    def test_crash_free_chaos_schedule_matches_plain_injection(self):
+        """Empty crash/flap schedules change nothing: the soak stats are
+        byte-identical with and without the new FaultInjection fields."""
+        plain = FaultInjection(khugepaged_period_us=500.0)
+        wired = FaultInjection(khugepaged_period_us=500.0,
+                               crashes=(), link_flaps=())
+        a = soak(5, injection=plain, **CHAOS_CONFIG)
+        b = soak(5, injection=wired, **CHAOS_CONFIG)
+        assert a.ok and b.ok
+        assert a.json() == b.json()
