@@ -217,6 +217,7 @@ from repro.api.policy import DEFAULT_POLICY, FaultPolicy
 from repro.core.arbiter import ArbiterStats, DMAArbiter, ServiceClass
 from repro.core.node import (BankCollision, DomainClosed, DomainExists,
                              FabricError, NodeDown, TrIdStats)
+from repro.errors import AdmissionError, ConfigError, LivelockError
 from repro.core.resolver import Strategy, coerce_strategy
 from repro.npr.stats import NPRStats
 from repro.tenancy import (BankManager, BankStats, SLOClass, TenancyManager,
@@ -225,11 +226,12 @@ from repro.net import (FabricStats, LinkStats, NetworkPartitioned, Router,
                        Topology, TopologyError, TopologyKind, build_topology)
 
 __all__ = [
-    "ArbiterStats", "BankCollision", "BankManager", "BankStats",
-    "BufferPrep", "CompletionQueue", "CQStats", "DEFAULT_POLICY",
-    "DMAArbiter", "DomainClosed", "DomainExists", "DomainQuotaExceeded",
-    "Fabric", "FabricConfig", "FabricError", "FabricStats", "FaultPolicy",
-    "LinkStats", "MemoryRegion", "NPRStats", "NetworkPartitioned",
+    "AdmissionError", "ArbiterStats", "BankCollision", "BankManager",
+    "BankStats", "BufferPrep", "CompletionQueue", "ConfigError", "CQStats",
+    "DEFAULT_POLICY", "DMAArbiter", "DomainClosed", "DomainExists",
+    "DomainQuotaExceeded", "Fabric", "FabricConfig", "FabricError",
+    "FabricStats", "FaultPolicy", "LinkStats", "LivelockError",
+    "MemoryRegion", "NPRStats", "NetworkPartitioned",
     "NodeDown", "PrepCost", "ProtectionDomain", "ProtocolStats",
     "RegionError", "Router", "SLOClass", "ServiceClass", "Strategy",
     "TenancyManager", "TenantQuotaExceeded", "Topology", "TopologyError",

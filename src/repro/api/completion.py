@@ -23,6 +23,8 @@ import enum
 from collections import deque
 from typing import TYPE_CHECKING, Optional
 
+from repro.errors import ConfigError, LivelockError
+
 if TYPE_CHECKING:                                    # pragma: no cover
     from repro.api.fabric import Fabric
     from repro.core.node import Transfer, TransferStats
@@ -47,7 +49,7 @@ def _advance_until(loop, done, deadline_us: float, max_events: int) -> bool:
         loop.step()
         steps += 1
         if steps >= max_events:
-            raise RuntimeError("event budget exhausted — livelock?")
+            raise LivelockError("event budget exhausted — livelock?")
     return True
 
 
@@ -212,7 +214,7 @@ class CompletionQueue:
         if max_outstanding is None:
             max_outstanding = depth
         if max_outstanding > depth:
-            raise ValueError(
+            raise ConfigError(
                 f"max_outstanding={max_outstanding} > depth={depth} could "
                 f"overflow the CQ")
         self.fabric = fabric

@@ -13,6 +13,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional, Union
 
+from repro.errors import ConfigError
 from repro.core.addresses import BLOCK_SIZE, PAGES_PER_BLOCK, TR_ID_SPACE
 from repro.core.arbiter import DEFAULT_PLDMA_SLOTS
 from repro.core.costmodel import CostModel, DEFAULT_COST_MODEL
@@ -85,6 +86,12 @@ class FabricConfig:
       the dead node) are reclaimed into the free list this long after the
       crash, preserving the PR-5 free-list/generation invariants without
       ever aliasing an ID a late wire packet could still name.
+    * ``race_check`` — run the event loop under the same-timestamp race
+      sanitizer (:class:`repro.lint.race.RaceCheckLoop`): events firing
+      at one virtual timestamp with overlapping read/write footprints
+      are reported (their tie order is load-bearing).  Observation only
+      — stats stay byte-identical.  Also enabled by the
+      ``REPRO_RACE_CHECK`` environment variable.
     """
 
     n_nodes: int = 2
@@ -110,55 +117,56 @@ class FabricConfig:
     tenants_per_node: Optional[int] = None
     crash_detect_retries: int = 3
     lease_timeout_us: float = 10_000.0
+    race_check: bool = False
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
-            raise ValueError(f"n_nodes must be >= 1, got {self.n_nodes}")
+            raise ConfigError(f"n_nodes must be >= 1, got {self.n_nodes}")
         if self.pldma_slots < 1:
-            raise ValueError(
+            raise ConfigError(
                 f"pldma_slots must be >= 1, got {self.pldma_slots}")
         if self.tr_id_space is not None \
                 and not 1 <= self.tr_id_space <= TR_ID_SPACE:
-            raise ValueError(
+            raise ConfigError(
                 f"tr_id_space must be in [1, {TR_ID_SPACE}] (the 14-bit "
                 f"tr_ID wire field), got {self.tr_id_space}")
         if self.mtt_entries < 1:
-            raise ValueError(
+            raise ConfigError(
                 f"mtt_entries must be >= 1, got {self.mtt_entries}")
         if self.dma_pool_frames < PAGES_PER_BLOCK:
-            raise ValueError(
+            raise ConfigError(
                 f"dma_pool_frames must be >= {PAGES_PER_BLOCK} (one 16 KB "
                 f"block of 4 KB pages, or a redirected block could never "
                 f"reserve its landing frames), got {self.dma_pool_frames}")
         if self.srq_entries is not None and self.srq_entries < 1:
-            raise ValueError(
+            raise ConfigError(
                 f"srq_entries must be >= 1 (or None = unbounded), got "
                 f"{self.srq_entries}")
         if self.srq_gold_reserve < 0:
-            raise ValueError(
+            raise ConfigError(
                 f"srq_gold_reserve must be >= 0, got "
                 f"{self.srq_gold_reserve}")
         if (self.srq_entries is not None
                 and self.srq_gold_reserve > self.srq_entries):
-            raise ValueError(
+            raise ConfigError(
                 f"srq_gold_reserve={self.srq_gold_reserve} exceeds "
                 f"srq_entries={self.srq_entries}")
         if self.tenants_per_node is not None and self.tenants_per_node < 1:
-            raise ValueError(
+            raise ConfigError(
                 f"tenants_per_node must be >= 1 (or None = unbounded), "
                 f"got {self.tenants_per_node}")
         if self.crash_detect_retries < 1:
-            raise ValueError(
+            raise ConfigError(
                 f"crash_detect_retries must be >= 1, got "
                 f"{self.crash_detect_retries}")
         if self.lease_timeout_us <= 0:
-            raise ValueError(
+            raise ConfigError(
                 f"lease_timeout_us must be > 0, got {self.lease_timeout_us}")
         self.topology = coerce_kind(self.topology)
         if self.hops < 1:
-            raise ValueError(f"hops must be >= 1, got {self.hops}")
+            raise ConfigError(f"hops must be >= 1, got {self.hops}")
         if self.hops != 1 and self.topology is not TopologyKind.ALL_TO_ALL:
-            raise ValueError(
+            raise ConfigError(
                 f"hops={self.hops} is the ALL_TO_ALL back-compat alias; "
                 f"on topology={self.topology.value} distance comes from "
                 f"the routed hop path — drop hops= or choose dims")

@@ -17,6 +17,7 @@ Data-path verbs live on the domain: ``register_memory`` returns
 from __future__ import annotations
 
 import dataclasses
+import os
 from typing import Optional
 
 from repro.core import addresses as A
@@ -278,7 +279,11 @@ class Fabric:
     def __init__(self, config: FabricConfig):
         self.config = config
         self.cost = config.cost
-        self.loop = EventLoop()
+        if config.race_check or os.environ.get("REPRO_RACE_CHECK"):
+            from repro.lint.race import RaceCheckLoop
+            self.loop: EventLoop = RaceCheckLoop()
+        else:
+            self.loop = EventLoop()
         self.nodes: list[Node] = []
         for i in range(config.n_nodes):
             policy = config.policy_for_node(i)
@@ -312,6 +317,7 @@ class Fabric:
             for b in self.nodes:
                 a.peer[b.node_id] = b
         self.domains: dict[int, ProtectionDomain] = {}
+        self.cqs: list[CompletionQueue] = []
         self._tid = 0
         self._wr_counter = 0
         self._rkey_counter = 0
@@ -501,8 +507,10 @@ class Fabric:
     # ----------------------------------------------------------------- CQs
     def create_cq(self, depth: int = 256,
                   max_outstanding: Optional[int] = None) -> CompletionQueue:
-        return CompletionQueue(self, depth=depth,
-                               max_outstanding=max_outstanding)
+        cq = CompletionQueue(self, depth=depth,
+                             max_outstanding=max_outstanding)
+        self.cqs.append(cq)
+        return cq
 
     # ------------------------------------------------------------ failures
     def crash_node(self, node_idx: int) -> None:

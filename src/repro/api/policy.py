@@ -14,6 +14,7 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+from repro.errors import ConfigError
 from repro.core.addresses import PAGES_PER_BLOCK
 from repro.core.arbiter import ServiceClass
 from repro.core.costmodel import CostModel
@@ -82,11 +83,11 @@ class FaultPolicy:
         object.__setattr__(self, "strategy", coerce_strategy(self.strategy))
         object.__setattr__(self, "slo", coerce_slo(self.slo))
         if self.max_retries is not None and self.max_retries < 0:
-            raise ValueError(
+            raise ConfigError(
                 f"max_retries must be >= 0 (or None = unbounded), got "
                 f"{self.max_retries}")
         if self.retry_backoff < 1.0:
-            raise ValueError(
+            raise ConfigError(
                 f"retry_backoff must be >= 1.0 (1.0 = the thesis' flat "
                 f"timer), got {self.retry_backoff}")
         if self.slo is not None:

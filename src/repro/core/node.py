@@ -67,33 +67,12 @@ if TYPE_CHECKING:                                    # pragma: no cover
     from repro.net.link import Path
 
 
-class FabricError(ValueError):
-    """A fabric-level configuration or wiring error (e.g. two live
-    protection domains colliding on one SMMU context bank)."""
-
-
-class DomainExists(FabricError):
-    """``open_domain``/``create_domain`` for a pd that is already live."""
-
-
-class BankCollision(FabricError):
-    """Two live protection domains map to one SMMU context bank — only
-    raised when bank overcommit is disabled
-    (``FabricConfig(bank_overcommit=False)``); with the tenancy control
-    plane enabled the BankManager multiplexes the banks instead."""
-
-
-class DomainClosed(FabricError):
-    """A verb was posted against a domain after ``Fabric.close_domain``."""
-
-
-class NodeDown(FabricError):
-    """A verb was posted *from* a crashed node (``Node.crash``).
-
-    Only the posting side is checked: posting *toward* a dead peer is
-    allowed and surfaces asynchronously as an error completion
-    (``WCStatus.REMOTE_OP_ERR``), matching real RDMA semantics where the
-    initiator cannot know the target died until retries exhaust."""
+# The typed error hierarchy lives in the dependency-free repro.errors
+# (so repro.tenancy / repro.api can raise it without importing this
+# module); re-exported here because these names were born here and the
+# API layer + tests import them from repro.core.node.
+from repro.errors import (BankCollision, DomainClosed,  # noqa: F401
+                          DomainExists, FabricError, NodeDown)
 
 
 class BlockState(enum.Enum):
@@ -938,8 +917,13 @@ class R5Scheduler:
             pg_start = max(block.src_va, vpn << 12)
             pg_end = min(block.src_va + block.nbytes, (vpn + 1) << 12)
             nbytes = pg_end - pg_start
+            # stream key: (transfer, block-index) — unique among streams
+            # that can coexist on a link, unlike id(block), which CPython
+            # may reuse after a finished block is collected while its
+            # link is still draining (aliasing the interleave detector)
             delay, interleaved = path.stream_page(
-                nbytes, id(block), latency_class=latency_class)
+                nbytes, (transfer.tid, block.index),
+                latency_class=latency_class)
             block.wire_bytes += nbytes
             self.loop.schedule(bank_penalty + delay,
                                transfer.dst_node.recv_page, block, i,
@@ -1052,6 +1036,10 @@ class R5Scheduler:
                                transfer.on_complete, transfer)
 
     def _fail_block(self, block: Block, free_ids: bool) -> None:
+        if block.state is BlockState.DONE:
+            # every caller filters DONE already; the explicit guard keeps
+            # DONE terminal by construction (repro.lint conformance)
+            return
         if block.timeout_event is not None:
             block.timeout_event.cancel()
             block.timeout_event = None
@@ -1134,8 +1122,15 @@ class R5Scheduler:
                                    transfer.on_complete, transfer)
 
     def on_nack(self, block: Block, round_id: int) -> None:
-        # thesis firmware change: pause instead of instant retransmit
-        if block.state is BlockState.DONE or round_id != block.round_id:
+        # thesis firmware change: pause instead of instant retransmit.
+        # Only a block that streamed this round can be NACKed: IN_FLIGHT,
+        # or PAUSED_SRC when a mid-block source fault trailed packets the
+        # destination then faulted on.  The round check alone excludes
+        # the other states dynamically (PENDING blocks are on round 0,
+        # one NACK per nacked_round); stating it as a guard makes the
+        # spec'd transitions explicit (repro.lint conformance).
+        if block.state not in (BlockState.IN_FLIGHT, BlockState.PAUSED_SRC) \
+                or round_id != block.round_id:
             return
         block.dead_rounds = 0        # a NACK is proof the peer is alive
         block.state = BlockState.PAUSED_DST

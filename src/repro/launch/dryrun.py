@@ -179,6 +179,7 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
         return rec
     mesh = make_production_mesh(multi_pod=multi_pod)
     n_dev = int(np.prod(list(mesh.shape.values())))
+    # lint: allow(det-wallclock): host compile timing, never sim state
     t0 = time.time()
     try:
         fn, args, in_sh, out_sh, donate = build_lowerable(arch, shape_name,
@@ -189,8 +190,10 @@ def run_cell(arch: str, shape_name: str, multi_pod: bool,
             jitted = jax.jit(fn, in_shardings=in_sh, out_shardings=out_sh,
                              donate_argnums=donate)
             lowered = jitted.lower(*args)
+            # lint: allow(det-wallclock): host compile timing
             t_lower = time.time() - t0
             compiled = lowered.compile()
+            # lint: allow(det-wallclock): host compile timing
             t_compile = time.time() - t0 - t_lower
         ca = cost_analysis_dict(compiled)
         hlo = compiled.as_text()

@@ -28,7 +28,7 @@ inflate its FIFO dedup-break pushes.
 from __future__ import annotations
 
 import dataclasses
-from typing import TYPE_CHECKING, Optional
+from typing import TYPE_CHECKING, Hashable, Optional
 
 if TYPE_CHECKING:                                    # pragma: no cover
     # type-only: repro.net is the bottom layer — importing repro.core at
@@ -90,7 +90,7 @@ class Link:
         self.qos = qos
         self.busy_until = 0.0        # BULK (and, qos off, only) cursor
         self.lat_busy_until = 0.0    # LATENCY-class cursor (qos only)
-        self.last_user: Optional[int] = None  # stream id for interleave
+        self.last_user: Optional[Hashable] = None  # stream key
         self.stats = LinkStats()
 
     # ---------------------------------------------------------------- state
@@ -156,7 +156,7 @@ class Link:
         return start, end
 
     # ----------------------------------------------------------- data path
-    def stream_page(self, nbytes: int, block_key: int, earliest: float,
+    def stream_page(self, nbytes: int, block_key: Hashable, earliest: float,
                     latency_class: bool = False) -> tuple[float, bool]:
         """Serialize one page worth of packets of stream ``block_key``.
 
@@ -237,7 +237,7 @@ class Path:
     def latency_us(self) -> float:
         return self.n_hops * self.cost.hop_latency_us
 
-    def stream_page(self, nbytes: int, block_key: int,
+    def stream_page(self, nbytes: int, block_key: Hashable,
                     latency_class: bool = False) -> tuple[float, bool]:
         """Reserve wire time on every link along the route for one page.
 

@@ -119,6 +119,9 @@ class NPREngine:
         per-page translate loop; the caller has already advanced
         ``round_id`` and arms the timeout after we return.
         """
+        # the R5 moved the block to IN_FLIGHT just before delegating here
+        # (the assert doubles as the from-state fact for repro.lint)
+        assert block.state is BlockState.IN_FLIGHT
         node, cost, loop = self.node, self.cost, self.loop
         transfer = block.transfer
         pd = transfer.pd
@@ -161,8 +164,11 @@ class NPREngine:
             pg_start = max(block.src_va, vpn << 12)
             pg_end = min(block.src_va + block.nbytes, (vpn + 1) << 12)
             nbytes = pg_end - pg_start
+            # same deterministic stream key as R5Scheduler._dispatch:
+            # id(block) can alias a collected block's reused address
             delay, interleaved = path.stream_page(
-                nbytes, id(block), latency_class=latency_class)
+                nbytes, (transfer.tid, block.index),
+                latency_class=latency_class)
             block.wire_bytes += nbytes
             loop.schedule(fill_offset + delay, transfer.dst_node.recv_page,
                           block, i, block.round_id, interleaved, nbytes)
@@ -175,6 +181,7 @@ class NPREngine:
         DMA itself, so it can ``get_user_pages`` the block's remaining
         pages, install their translations and requeue immediately.
         """
+        assert block.state is BlockState.IN_FLIGHT   # see dispatch()
         node, cost = self.node, self.cost
         transfer = block.transfer
         transfer.stats.src_faults += 1

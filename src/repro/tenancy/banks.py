@@ -31,6 +31,7 @@ from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional
 
 from repro.core import addresses as A
+from repro.errors import DomainExists
 
 __all__ = ["BankManager", "BankStats", "Binding", "NoBankAvailable"]
 
@@ -91,7 +92,7 @@ class BankManager:
     # ------------------------------------------------------------------
     def register(self, pd: int, steal_immune: bool = False) -> None:
         if pd in self._domains:
-            raise ValueError(f"pd {pd} already registered")
+            raise DomainExists(f"pd {pd} already registered")
         self._domains[pd] = _Domain(pd=pd, steal_immune=steal_immune)
 
     def release(self, pd: int) -> Optional[int]:
@@ -208,6 +209,7 @@ class BankManager:
             return min(candidates,
                        key=lambda d: (d.last_use, d.bank),
                        default=None)
+        # lint: allow(det-dict-iter): feeds min() with a unique tie-break key
         bound = [self._domains[pd] for pd in self._bank_owner.values()]
         quiet = [d for d in bound if not fault_active(d.bank)]
         return (lru([d for d in quiet if not d.steal_immune])

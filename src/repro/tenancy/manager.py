@@ -16,6 +16,7 @@ from __future__ import annotations
 from typing import Dict, Optional
 
 from repro.core import addresses as A
+from repro.errors import AdmissionError
 from repro.tenancy.banks import BankManager, BankStats, Binding
 from repro.tenancy.qp import QPMux, SRQ
 from repro.tenancy.slo import SLOClass
@@ -66,7 +67,7 @@ class TenancyManager:
         reason = self.admission_error(slo)
         if reason is not None:
             self.admission_rejections += 1
-            raise ValueError(reason)
+            raise AdmissionError(reason)
         self.banks.register(pd, steal_immune=bool(slo and slo.steal_immune))
         self.qp.attach(pd)
         self._slo[pd] = slo

@@ -23,6 +23,8 @@ from __future__ import annotations
 from dataclasses import dataclass
 from typing import Dict, Optional
 
+from repro.errors import ConfigError
+
 __all__ = ["SRQ", "SRQStats", "QPMux"]
 
 
@@ -44,7 +46,7 @@ class SRQ:
     def __init__(self, entries: Optional[int] = None,
                  gold_reserve: int = 0) -> None:
         if entries is not None and gold_reserve > entries:
-            raise ValueError("gold_reserve exceeds SRQ entries")
+            raise ConfigError("gold_reserve exceeds SRQ entries")
         self.entries = entries
         self.gold_reserve = gold_reserve
         self.held = 0

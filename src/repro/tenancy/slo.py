@@ -24,6 +24,7 @@ from __future__ import annotations
 
 import enum
 
+from repro.errors import ConfigError
 from repro.core.arbiter import ServiceClass
 
 __all__ = ["SLOClass", "coerce_slo"]
@@ -61,6 +62,6 @@ def coerce_slo(value) -> "SLOClass | None":
         for slo in SLOClass:
             if key in (slo.value, slo.name.lower()):
                 return slo
-    raise ValueError(
+    raise ConfigError(
         f"not an SLO class: {value!r} (expected one of "
         f"{', '.join(s.name for s in SLOClass)})")

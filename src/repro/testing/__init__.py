@@ -21,6 +21,7 @@ from repro.testing.invariants import (check_arbiter_consistency,
                                       check_pinned_resident,
                                       check_route_sanity,
                                       check_tenant_isolation,
+                                      check_stats_accounting,
                                       check_tr_id_lifecycle,
                                       check_vmem_frame_conservation,
                                       check_vmem_pins)
@@ -33,6 +34,7 @@ __all__ = [
     "check_completion_conservation", "check_crash_consistency",
     "check_link_conservation", "check_pinned_resident",
     "check_route_sanity", "check_tenant_isolation",
-    "check_tr_id_lifecycle", "check_vmem_frame_conservation",
+    "check_stats_accounting", "check_tr_id_lifecycle",
+    "check_vmem_frame_conservation",
     "check_vmem_pins", "scale_mix", "soak",
 ]

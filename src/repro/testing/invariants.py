@@ -11,6 +11,7 @@ from __future__ import annotations
 from typing import Iterable, List
 
 from repro.core.arbiter import ArbiterStats
+from repro.net.link import LinkStats
 
 NON_RESIDENT = -1
 
@@ -405,6 +406,148 @@ def check_tenant_isolation(fabric) -> List[str]:
         if fabric.loop.idle and srq.held:
             out.append(f"{tag}: {srq.held} SRQ entries still held after "
                        f"drain (leaked receive credits)")
+    return out
+
+
+def check_stats_accounting(fabric) -> List[str]:
+    """Counter-accounting identities on the ``*Stats`` records the soak
+    harness regresses on (the ``stats-coverage`` lint rule holds every
+    counter to one of these checks or a justified exemption):
+
+    * tr_ID telemetry matches the R5's live structures
+      (``allocated == fresh + recycled``, ``fresh`` equals the IDs ever
+      issued, ``in_flight == len(pending)``), the high-water mark sits
+      between the live count and the ID-space size, and a stall is only
+      possible once the whole ID space has been in flight;
+    * CQ slot conservation: ``outstanding == posted - drained`` (a
+      queued completion still occupies its slot), the queue never beat
+      its high-water mark or depth, and polls dominate empty polls;
+    * fault-FIFO occupancy equals ``pushes - pops`` and respects the
+      recorded high-water mark and the hardware depth;
+    * the arbiter backlog never exceeds its own high-water mark;
+    * bank counters: every rebind is a bind, every immune steal a steal;
+    * SRQ conservation: ``admitted - released == held`` with the peak
+      between the live count and total admissions (and under the bound);
+    * SMMU TLB hits never exceed translations, page-table unpins never
+      exceed pins, and the NP-RDMA capacity counters mirror the live
+      pool/MTT (with the reservation peak inside the pool);
+    * interconnect totals are exactly the field-wise sum of the per-link
+      ledgers (``LinkStats.ADDITIVE``) with ``max_queue_us`` the
+      per-link maximum, and no link's worst single wait exceeds its
+      summed wait.
+    """
+    out = []
+    for node in fabric.nodes:
+        tag = f"node {node.node_id}"
+        r5 = node.r5
+        st = r5.id_stats
+        if st.allocated != st.fresh + st.recycled:
+            out.append(f"{tag}: tr_id allocated {st.allocated} != fresh "
+                       f"{st.fresh} + recycled {st.recycled}")
+        if st.fresh != r5._fresh_next:
+            out.append(f"{tag}: tr_id fresh count {st.fresh} != "
+                       f"{r5._fresh_next} ids ever issued")
+        if st.in_flight != len(r5.pending):
+            out.append(f"{tag}: tr_id in_flight {st.in_flight} != "
+                       f"{len(r5.pending)} pending blocks")
+        if not st.in_flight <= st.max_in_flight <= st.space:
+            out.append(f"{tag}: tr_id in_flight {st.in_flight} / "
+                       f"high-water {st.max_in_flight} / space {st.space} "
+                       f"out of order")
+        if st.stalls and st.max_in_flight != st.space:
+            out.append(f"{tag}: {st.stalls} stalls but the ID space never "
+                       f"filled (max_in_flight {st.max_in_flight} < "
+                       f"{st.space})")
+        fifo = node.fifo
+        fst = fifo.stats
+        if fst.pushes - fst.pops != len(fifo):
+            out.append(f"{tag}: FIFO holds {len(fifo)} entries, but pushes "
+                       f"{fst.pushes} - pops {fst.pops} says "
+                       f"{fst.pushes - fst.pops}")
+        if not len(fifo) <= fst.max_occupancy <= fifo.depth:
+            out.append(f"{tag}: FIFO occupancy {len(fifo)} / high-water "
+                       f"{fst.max_occupancy} / depth {fifo.depth} "
+                       f"out of order")
+        arb = node.arbiter
+        if arb.stats.max_queue_depth < arb.queue_depth():
+            out.append(f"{tag}: arbiter backlog {arb.queue_depth()} beats "
+                       f"its high-water mark {arb.stats.max_queue_depth}")
+        bst = node.tenancy.banks.stats
+        if bst.immune_steals > bst.steals:
+            out.append(f"{tag}: immune_steals {bst.immune_steals} > "
+                       f"steals {bst.steals}")
+        if bst.rebinds > bst.binds:
+            out.append(f"{tag}: rebinds {bst.rebinds} > binds {bst.binds}")
+        srq = node.tenancy.srq
+        sst = srq.stats
+        if sst.admitted - sst.released != srq.held:
+            out.append(f"{tag}: SRQ admitted {sst.admitted} - released "
+                       f"{sst.released} != held {srq.held}")
+        if not srq.held <= sst.peak_held <= sst.admitted:
+            out.append(f"{tag}: SRQ held {srq.held} / peak {sst.peak_held} "
+                       f"/ admitted {sst.admitted} out of order")
+        if srq.entries is not None and sst.peak_held > srq.entries:
+            out.append(f"{tag}: SRQ peak {sst.peak_held} > bound "
+                       f"{srq.entries}")
+        sm = node.smmu.stats
+        if sm.tlb_hits > sm.translations:
+            out.append(f"{tag}: SMMU tlb_hits {sm.tlb_hits} > "
+                       f"{sm.translations} translations")
+        for pd, pt in sorted(node.page_tables.items()):
+            pst = pt.stats
+            if pst.unpins > pst.pins:
+                out.append(f"{tag} pd={pd}: unpins {pst.unpins} > pins "
+                           f"{pst.pins}")
+        eng = node.npr
+        if eng.domains:
+            nst = eng.stats
+            if nst.pool_frames != eng.pool.capacity:
+                out.append(f"{tag}: NPR pool_frames {nst.pool_frames} != "
+                           f"pool capacity {eng.pool.capacity}")
+            if nst.mtt_capacity != eng.mtt.capacity:
+                out.append(f"{tag}: NPR mtt_capacity {nst.mtt_capacity} != "
+                           f"MTT capacity {eng.mtt.capacity}")
+            if nst.pool_reserved_peak > nst.pool_frames:
+                out.append(f"{tag}: NPR pool reservation peak "
+                           f"{nst.pool_reserved_peak} > {nst.pool_frames} "
+                           f"frames")
+
+    for i, cq in enumerate(getattr(fabric, "cqs", ())):
+        cst = cq.stats
+        drained = cst.completed - len(cq)
+        if cq.outstanding != cst.posted - drained:
+            out.append(f"cq {i}: {cq.outstanding} outstanding != posted "
+                       f"{cst.posted} - drained {drained}")
+        if not len(cq) <= cst.max_queued <= cq.depth:
+            out.append(f"cq {i}: queued {len(cq)} / high-water "
+                       f"{cst.max_queued} / depth {cq.depth} out of order")
+        if cst.empty_polls > cst.polls:
+            out.append(f"cq {i}: empty_polls {cst.empty_polls} > polls "
+                       f"{cst.polls}")
+
+    ic = fabric.interconnect
+    fs = ic.stats()
+    totals = {f: 0 for f in LinkStats.ADDITIVE}
+    worst = 0.0
+    for _, link in sorted(ic.links.items()):
+        s = link.stats
+        if s.max_queue_us > s.queue_us:
+            out.append(f"link {link.name}: worst single wait "
+                       f"{s.max_queue_us} > summed wait {s.queue_us}")
+        if not (s.data_packets or s.ctrl_packets):
+            continue                # ic.stats() skips quiet links the same
+        for f in LinkStats.ADDITIVE:
+            totals[f] += getattr(s, f)
+        worst = max(worst, s.max_queue_us)
+    totals["busy_us"] = round(totals["busy_us"], 6)
+    totals["queue_us"] = round(totals["queue_us"], 6)
+    for f in LinkStats.ADDITIVE:
+        if getattr(fs, f) != totals[f]:
+            out.append(f"net: fabric total {f} {getattr(fs, f)} != "
+                       f"per-link sum {totals[f]}")
+    if fs.max_queue_us != round(worst, 6):
+        out.append(f"net: fabric max_queue_us {fs.max_queue_us} != "
+                   f"per-link max {round(worst, 6)}")
     return out
 
 

@@ -19,6 +19,7 @@ from repro.api.config import FabricConfig
 from repro.api.fabric import Fabric
 from repro.api.memory import BufferPrep
 from repro.core.arbiter import ArbiterStats, ServiceClass
+from repro.lint.race import RaceCheckLoop
 from repro.testing.invariants import (check_arbiter_consistency,
                                       check_bank_conservation,
                                       check_completion_conservation,
@@ -26,6 +27,7 @@ from repro.testing.invariants import (check_arbiter_consistency,
                                       check_link_conservation,
                                       check_npr_consistency,
                                       check_pinned_resident,
+                                      check_stats_accounting,
                                       check_tenant_isolation,
                                       check_tr_id_lifecycle)
 from repro.testing.traffic import (FaultInjection, TenantRun, TenantSpec,
@@ -150,6 +152,10 @@ def soak(seed: int,
     violations += check_npr_consistency(fabric)
     violations += check_bank_conservation(fabric)
     violations += check_tenant_isolation(fabric)
+    violations += check_stats_accounting(fabric)
+    if isinstance(loop, RaceCheckLoop):
+        loop.flush()                 # close the final same-time group
+        violations += loop.reports
 
     # ---- deterministic report -------------------------------------------
     stats = {

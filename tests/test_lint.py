@@ -1,0 +1,573 @@
+"""Fixture tests for ``repro.lint``: each rule with a good/bad pair,
+suppression hygiene, the spec round-trip against the real sources, the
+exhaustive spec model checker, and the same-timestamp race sanitizer.
+
+Fixtures are built from inline source strings via ``SourceFile(rel,
+text)`` — the ``rel`` path matters because several rules are scoped
+(``det-dict-iter``/``det-id-order`` to event-path modules,
+``typed-raise`` to the API surface).  Suppression markers inside
+fixtures are assembled at runtime so the linter's raw-line scan of THIS
+file never sees a live allow() comment.
+"""
+
+import dataclasses
+import json
+import textwrap
+import types
+from pathlib import Path
+
+import pytest
+
+from repro.api import Fabric, FabricConfig
+from repro.core.simulator import EventLoop
+from repro.lint import (cli, conformance, determinism, model,
+                        stats_coverage, typed_errors)
+from repro.lint.common import KNOWN_RULES, SourceFile, collect_files
+from repro.lint.race import RaceCheckLoop, footprint_of
+from repro.lint.specs import ALL_SPECS, BLOCK, WC_ERROR_STATUSES
+from repro.testing import soak
+
+ROOT = Path(__file__).resolve().parents[1]
+
+EVENT_PATH = "src/repro/core/fixture.py"      # det-dict-iter/id-order scope
+OFF_PATH = "src/repro/launch/fixture.py"      # in repro, off the event path
+API_PATH = "src/repro/api/fixture.py"         # typed-raise scope
+
+#: runtime-assembled so no raw line of this file parses as a suppression
+ALLOW = "# lint: " + "allow"
+
+
+def sf(text, rel=EVENT_PATH):
+    return SourceFile(rel, textwrap.dedent(text))
+
+
+def rules(findings):
+    return sorted(f.rule for f in findings)
+
+
+def det(text, rel=EVENT_PATH):
+    return rules(determinism.run([sf(text, rel)]))
+
+
+# ---------------------------------------------------------------------------
+# determinism rules
+# ---------------------------------------------------------------------------
+class TestDeterminismRules:
+    def test_set_iter_flagged(self):
+        assert det("""
+            def visit(fn):
+                for x in {1, 2, 3}:
+                    fn(x)
+            """) == ["det-set-iter"]
+
+    def test_set_iter_sorted_ok(self):
+        assert det("""
+            def visit(fn):
+                for x in sorted({1, 2, 3}):
+                    fn(x)
+            """) == []
+
+    def test_set_algebra_flagged(self):
+        assert det("""
+            def visit(a, b, fn):
+                for x in a | b:
+                    fn(x)
+            """) == []  # plain names: could be ints; not provably setlike
+
+    def test_set_literal_algebra_flagged(self):
+        assert det("""
+            def visit(b, fn):
+                for x in {1, 2} | b:
+                    fn(x)
+            """) == ["det-set-iter"]
+
+    def test_dict_iter_event_path_flagged(self):
+        assert det("""
+            def drain(d, out):
+                for k, v in d.items():
+                    out.append(k)
+            """) == ["det-dict-iter"]
+
+    def test_dict_iter_off_event_path_ok(self):
+        assert det("""
+            def drain(d, out):
+                for k, v in d.items():
+                    out.append(k)
+            """, rel=OFF_PATH) == []
+
+    def test_dict_iter_sorted_ok(self):
+        assert det("""
+            def drain(d, out):
+                for k in sorted(d.keys()):
+                    out.append(k)
+            """) == []
+
+    def test_sum_genexp_over_dict_values_ok(self):
+        # regression: the genexp's consumer (sum) is order-insensitive —
+        # the walk must climb comprehension clause -> genexp -> call
+        assert det("""
+            def depth(queues):
+                return sum(len(q.blocks) for q in queues.values())
+            """) == []
+
+    def test_setcomp_over_dict_values_ok(self):
+        assert det("""
+            def live(d):
+                return {v for v in d.values()}
+            """) == []
+
+    def test_listcomp_over_dict_values_flagged(self):
+        assert det("""
+            def order(d):
+                return [v for v in d.values()]
+            """) == ["det-dict-iter"]
+
+    def test_wallclock_flagged(self):
+        assert det("""
+            import time
+            def stamp():
+                return time.time()
+            """) == ["det-wallclock"]
+        assert det("""
+            import time
+            T0 = time.perf_counter()
+            """) == ["det-wallclock"]
+
+    def test_virtual_time_ok(self):
+        assert det("""
+            def stamp(loop):
+                return loop.now
+            """) == []
+
+    def test_unseeded_random_flagged(self):
+        assert det("""
+            import random
+            def roll():
+                return random.randint(0, 7)
+            """) == ["det-unseeded-random"]
+
+    def test_seeded_random_instance_ok(self):
+        assert det("""
+            import random
+            def roll(seed):
+                rng = random.Random(seed)
+                return rng.randint(0, 7)
+            """) == []
+
+    def test_id_as_key_flagged_on_event_path(self):
+        assert det("""
+            def index(objs, m):
+                for o in objs:
+                    m[id(o)] = o
+            """) == ["det-id-order"]
+
+    def test_id_dedup_ok(self):
+        assert det("""
+            def dedup(objs, seen):
+                for o in objs:
+                    if id(o) == id(objs[0]):
+                        continue
+                    seen.add(id(o))
+            """) == []
+
+    def test_id_off_event_path_ok(self):
+        assert det("""
+            def index(objs, m):
+                for o in objs:
+                    m[id(o)] = o
+            """, rel=OFF_PATH) == []
+
+    def test_heap_push_without_tiebreak_flagged(self):
+        assert det("""
+            import heapq
+            def push(h, t, obj):
+                heapq.heappush(h, (t, obj))
+            """) == ["det-heap-tiebreak"]
+
+    def test_heap_push_with_counter_ok(self):
+        assert det("""
+            import heapq
+            def push(h, c, t, obj):
+                heapq.heappush(h, (t, next(c), obj))
+            """) == []
+
+    def test_heap_repush_popped_entry_ok(self):
+        assert det("""
+            import heapq
+            def rotate(h):
+                entry = heapq.heappop(h)
+                heapq.heappush(h, entry)
+            """) == []
+
+
+# ---------------------------------------------------------------------------
+# typed-raise
+# ---------------------------------------------------------------------------
+class TestTypedErrors:
+    def bad(self, rel):
+        return rules(typed_errors.run([sf("""
+            def f():
+                raise ValueError("bad knob")
+            """, rel=rel)]))
+
+    def test_bare_raise_at_api_surface_flagged(self):
+        assert self.bad(API_PATH) == ["typed-raise"]
+        assert self.bad("src/repro/tenancy/fixture.py") == ["typed-raise"]
+
+    def test_core_is_out_of_scope(self):
+        assert self.bad(EVENT_PATH) == []
+
+    def test_typed_error_ok(self):
+        assert rules(typed_errors.run([sf("""
+            from repro.errors import ConfigError
+            def f():
+                raise ConfigError("bad knob")
+            """, rel=API_PATH)])) == []
+
+    def test_reraise_and_typeerror_ok(self):
+        assert rules(typed_errors.run([sf("""
+            def f(x):
+                if not isinstance(x, int):
+                    raise TypeError("x must be int")
+                try:
+                    return 1 // x
+                except ZeroDivisionError:
+                    raise
+            """, rel=API_PATH)])) == []
+
+
+# ---------------------------------------------------------------------------
+# stats-coverage
+# ---------------------------------------------------------------------------
+STATS_FIXTURE = """
+    class FooStats:
+        lost: int = 0
+        seen: int = 0
+    """
+
+INVARIANTS_REL = "src/repro/testing/invariants.py"
+
+
+def _foo_findings(inv_body):
+    files = [sf(STATS_FIXTURE, rel="src/repro/core/metrics.py"),
+             sf(inv_body, rel=INVARIANTS_REL)]
+    return [f for f in stats_coverage.run(files) if "FooStats" in f.message]
+
+
+class TestStatsCoverage:
+    def test_unchecked_counter_flagged(self):
+        found = _foo_findings("""
+            def check_foo(s):
+                return ["bad"] if s.seen < 0 else []
+            """)
+        assert rules(found) == ["stats-coverage"]
+        assert "FooStats.lost" in found[0].message
+
+    def test_checked_counter_ok(self):
+        assert _foo_findings("""
+            def check_foo(s):
+                return ["bad"] if s.lost != s.seen else []
+            """) == []
+
+    def test_missing_invariants_module_is_itself_a_finding(self):
+        files = [sf(STATS_FIXTURE, rel="src/repro/core/metrics.py")]
+        found = stats_coverage.run(files)
+        assert rules(found) == ["stats-coverage"]
+        assert "cannot prove" in found[0].message
+
+
+# ---------------------------------------------------------------------------
+# conformance: transitions, state names, mutators, statuses
+# ---------------------------------------------------------------------------
+class TestConformance:
+    def test_unguarded_write_flags_illegal_pairs(self):
+        findings, observed = conformance.extract_block_transitions([sf("""
+            def regress(self, block):
+                block.state = BlockState.PENDING
+            """)])
+        assert "conf-transition" in rules(findings)
+        # unguarded: every from-state is possible, including DONE
+        assert ("DONE", "PENDING") in observed
+
+    def test_guarded_write_extracts_exact_pair(self):
+        findings, observed = conformance.extract_block_transitions([sf("""
+            def on_ack(self, block):
+                if block.state is BlockState.IN_FLIGHT:
+                    block.state = BlockState.DONE
+            """)])
+        assert findings == []
+        assert observed == {("IN_FLIGHT", "DONE")}
+
+    def test_init_must_start_in_spec_initial_state(self):
+        bad, _ = conformance.extract_block_transitions([sf("""
+            class Block:
+                def __init__(self):
+                    self.state = BlockState.DONE
+            """)])
+        assert rules(bad) == ["conf-transition"]
+        good, _ = conformance.extract_block_transitions([sf("""
+            class Block:
+                def __init__(self):
+                    self.state = BlockState.PENDING
+            """)])
+        assert good == []
+
+    def test_state_name_typo_flagged(self):
+        files = [sf("""
+            from enum import Enum
+            class BlockState(Enum):
+                PENDING = 1
+            def f(b):
+                return b.state.name == "PENDNIG"
+            """)]
+        assert rules(conformance.check_state_names(files)) \
+            == ["conf-state-name"]
+
+    def test_state_name_spelled_right_ok(self):
+        files = [sf("""
+            from enum import Enum
+            class BlockState(Enum):
+                PENDING = 1
+            def f(b):
+                return b.state.name == "PENDING"
+            """)]
+        assert conformance.check_state_names(files) == []
+
+    def test_foreign_tr_id_mutation_flagged(self):
+        files = [sf("""
+            def hack(node, tid, blocks):
+                node.r5.pending[tid] = blocks
+            """, rel=API_PATH)]
+        found = conformance.check_mutators(files)
+        assert rules(found) == ["conf-mutator"]
+        assert "pending" in found[0].message
+
+    def test_bad_fail_transfer_status_flagged(self):
+        files = [sf("""
+            def kill(self, t):
+                self.r5.fail_transfer(t, "bogus")
+            """)]
+        found = conformance.check_statuses(files)
+        assert rules(found) == ["conf-status"]
+
+    @pytest.mark.parametrize("status", WC_ERROR_STATUSES)
+    def test_spec_statuses_ok(self, status):
+        files = [sf(f"""
+            def kill(self, t):
+                self.r5.fail_transfer(t, "{status}")
+            """)]
+        assert conformance.check_statuses(files) == []
+
+
+# ---------------------------------------------------------------------------
+# spec round-trip against the real sources
+# ---------------------------------------------------------------------------
+class TestSpecRoundTrip:
+    """The acceptance bar: the spec tables and the implementation agree,
+    with the extractor proving every spec'd block transition has a
+    guarded write site and no write site exceeds the spec."""
+
+    @pytest.fixture(scope="class")
+    def src_files(self):
+        return collect_files(["src"], ROOT)
+
+    def test_block_transitions_round_trip(self, src_files):
+        findings, observed = conformance.extract_block_transitions(src_files)
+        assert findings == []
+        assert observed == set(BLOCK.transitions)
+
+    def test_conformance_pass_clean_on_repo(self, src_files):
+        assert conformance.run(src_files) == []
+
+    def test_typed_errors_clean_on_repo(self, src_files):
+        assert typed_errors.run(src_files) == []
+
+
+# ---------------------------------------------------------------------------
+# the spec model checker
+# ---------------------------------------------------------------------------
+class TestModelChecker:
+    @pytest.fixture(scope="class")
+    def result(self):
+        return model.check_model()
+
+    def test_model_clean(self, result):
+        assert result.findings == []
+        assert result.states_explored > 0
+
+    def test_every_spec_row_exercised(self, result):
+        for spec in ALL_SPECS:
+            assert result.taken[spec.name] == set(spec.transitions)
+
+    def test_every_spec_state_reachable(self, result):
+        for spec in ALL_SPECS:
+            assert result.visited[spec.name] == set(spec.states)
+
+    def test_scenarios_cover_fault_and_crash_axes(self):
+        scs = model.scenarios()
+        assert len(scs) == len({sc.label() for sc in scs})
+        assert any(sc.crash != "none" for sc in scs)
+        assert any(sc.budget == "bounded" for sc in scs)
+        assert any(sc.fault == "both" for sc in scs)
+
+
+# ---------------------------------------------------------------------------
+# suppressions
+# ---------------------------------------------------------------------------
+class TestSuppressions:
+    def test_justified_allow_suppresses(self):
+        text = ("import time\n\nT0 = time.time()  "
+                + ALLOW + "(det-wallclock): host telemetry only\n")
+        assert cli.lint([SourceFile(EVENT_PATH, text)],
+                        with_model=False) == []
+
+    def test_line_above_form_suppresses(self):
+        text = ("import time\n\n"
+                + ALLOW + "(det-wallclock): host telemetry only\n"
+                + "T0 = time.time()\n")
+        assert cli.lint([SourceFile(EVENT_PATH, text)],
+                        with_model=False) == []
+
+    def test_allow_without_justification_is_a_finding(self):
+        text = ("import time\n\nT0 = time.time()  "
+                + ALLOW + "(det-wallclock)\n")
+        found = cli.lint([SourceFile(EVENT_PATH, text)], with_model=False)
+        assert rules(found) == ["lint-suppression"]
+
+    def test_unknown_rule_is_a_finding(self):
+        text = "X = 1  " + ALLOW + "(no-such-rule): because\n"
+        found = cli.lint([SourceFile(EVENT_PATH, text)], with_model=False)
+        assert "lint-suppression" in rules(found)
+
+    def test_unused_allow_is_a_finding(self):
+        text = "X = 1  " + ALLOW + "(det-wallclock): stale comment\n"
+        found = cli.lint([SourceFile(EVENT_PATH, text)], with_model=False)
+        assert rules(found) == ["lint-unused-suppression"]
+
+    def test_every_repo_suppression_names_a_known_rule(self):
+        for f in collect_files(["src", "tests", "benchmarks"], ROOT):
+            for sup in f.suppressions.values():
+                assert set(sup.rules) <= set(KNOWN_RULES), \
+                    f"{f.rel}:{sup.line}"
+                assert sup.justification, f"{f.rel}:{sup.line}"
+
+
+# ---------------------------------------------------------------------------
+# same-timestamp race sanitizer
+# ---------------------------------------------------------------------------
+def _writer(key):
+    def cb():
+        pass
+    cb.__race_footprint__ = lambda args: (frozenset(), frozenset({key}))
+    return cb
+
+
+def _reader(key):
+    def cb():
+        pass
+    cb.__race_footprint__ = lambda args: (frozenset({key}), frozenset())
+    return cb
+
+
+class TestRaceSanitizer:
+    def test_planted_write_write_race_detected(self):
+        loop = RaceCheckLoop()
+        loop.at(5.0, _writer(("wr", 1)))
+        loop.at(5.0, _writer(("wr", 1)))
+        loop.run()
+        loop.flush()
+        assert len(loop.reports) == 1
+        assert "conflict" in loop.reports[0]
+
+    def test_read_write_race_detected(self):
+        loop = RaceCheckLoop()
+        loop.at(5.0, _writer(("wr", 1)))
+        loop.at(5.0, _reader(("wr", 1)))
+        loop.run()
+        loop.flush()
+        assert len(loop.reports) == 1
+
+    def test_read_read_is_not_a_race(self):
+        loop = RaceCheckLoop()
+        loop.at(5.0, _reader(("wr", 1)))
+        loop.at(5.0, _reader(("wr", 1)))
+        loop.run()
+        loop.flush()
+        assert loop.reports == []
+
+    def test_different_times_never_conflict(self):
+        loop = RaceCheckLoop()
+        loop.at(5.0, _writer(("wr", 1)))
+        loop.at(6.0, _writer(("wr", 1)))
+        loop.run()
+        loop.flush()
+        assert loop.reports == []
+
+    def test_disjoint_keys_never_conflict(self):
+        loop = RaceCheckLoop()
+        loop.at(5.0, _writer(("wr", 1)))
+        loop.at(5.0, _writer(("wr", 2)))
+        loop.run()
+        loop.flush()
+        assert loop.reports == []
+
+    def test_unknown_callbacks_are_tallied(self):
+        loop = RaceCheckLoop()
+        loop.at(5.0, lambda: None)
+        loop.run()
+        loop.flush()
+        assert sum(loop.unknown_callbacks.values()) == 1
+        assert loop.reports == []
+
+    def test_generic_footprint_from_block_argument(self):
+        blk = types.SimpleNamespace(
+            tr_id=1, round_id=0, index=2,
+            transfer=types.SimpleNamespace(tid=3))
+        (reads, writes), known = footprint_of(lambda b: None, (blk,))
+        assert known
+        assert reads == frozenset()
+        assert writes == {("block", 3, 2)}
+
+    def test_config_opt_in(self):
+        fab = Fabric.build(FabricConfig(n_nodes=2, race_check=True))
+        assert isinstance(fab.loop, RaceCheckLoop)
+        plain = Fabric.build(FabricConfig(n_nodes=2))
+        assert not isinstance(plain.loop, RaceCheckLoop)
+        assert isinstance(plain.loop, EventLoop)
+
+    def test_env_opt_in(self, monkeypatch):
+        monkeypatch.setenv("REPRO_RACE_CHECK", "1")
+        fab = Fabric.build(FabricConfig(n_nodes=2))
+        assert isinstance(fab.loop, RaceCheckLoop)
+
+    @pytest.mark.parametrize("topology", ["all_to_all", "ring"])
+    def test_soak_transparent_and_clean(self, topology):
+        """Instrumented soaks report zero conflicts AND stay
+        byte-identical to uninstrumented ones — the sanitizer observes,
+        never perturbs."""
+        cfg = FabricConfig(n_nodes=3, topology=topology)
+        plain = soak(17, config=cfg)
+        raced = soak(17, config=dataclasses.replace(cfg, race_check=True))
+        assert plain.violations == []
+        assert raced.violations == []
+        assert (json.dumps(plain.stats, sort_keys=True)
+                == json.dumps(raced.stats, sort_keys=True))
+
+
+# ---------------------------------------------------------------------------
+# the CLI (the build gate itself)
+# ---------------------------------------------------------------------------
+class TestCli:
+    def test_repo_is_lint_clean(self, capsys):
+        assert cli.main(["src", "tests", "benchmarks",
+                         "--root", str(ROOT), "-q"]) == 0
+
+    def test_findings_exit_nonzero(self, tmp_path, capsys):
+        bad = tmp_path / "bad.py"
+        bad.write_text("X = 1  " + ALLOW + "(no-such-rule): whatever\n")
+        assert cli.main(["bad.py", "--root", str(tmp_path),
+                         "-q", "--no-model"]) == 1
+
+    def test_no_files_exits_2(self, tmp_path, capsys):
+        assert cli.main(["nothing-here", "--root", str(tmp_path),
+                         "-q", "--no-model"]) == 2
