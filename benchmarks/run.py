@@ -5,12 +5,24 @@ table as ``name,us_per_call,derived`` CSV plus claim checks (DESIGN.md §1
 C1-C9), exiting non-zero if any claim check fails.  ``--json PATH``
 additionally writes machine-readable ``{name: us_per_call}`` results
 (the BENCH_*.json perf trajectory).
+
+``--compare OLD.json NEW.json`` runs no benchmarks: it prints a per-key
+delta table between two BENCH json files and exits non-zero if any
+throughput key (``*events_per_sec*``) regressed by more than
+``REGRESSION_PCT`` — the CI gate between the latest committed BENCH and
+the one the current commit just produced.
 """
 
 from __future__ import annotations
 
 import argparse
+import json
 import sys
+
+#: an events/sec key may drop at most this much vs the old BENCH before
+#: the compare gate fails (CI runners are noisy; a real hot-path
+#: regression shows up far past this)
+REGRESSION_PCT = 20.0
 
 from benchmarks import (arbiter_qos, chaos, fig_2_3_firehose, fig_4_1,
                         fig_4_2, fig_4_3, fig_4_4, fig_4_6, fig_4_7,
@@ -47,12 +59,57 @@ MODULES = (
 )
 
 
+def compare(old_path: str, new_path: str) -> int:
+    """Per-key delta table between two BENCH json files.
+
+    Returns the number of throughput regressions: ``*events_per_sec*``
+    keys whose new value fell more than ``REGRESSION_PCT`` below the
+    old one.  Keys only present on one side are listed informationally
+    (tiers come and go); non-throughput keys are shown but never gate —
+    most are virtual-time or count measurements whose changes are
+    deliberate and caught by the claim checks instead.
+    """
+    with open(old_path) as f:
+        old = json.load(f)
+    with open(new_path) as f:
+        new = json.load(f)
+    regressions = 0
+    print(f"key,old,new,delta_pct   ({old_path} -> {new_path})")
+    for key in sorted(old.keys() | new.keys()):
+        if key not in old:
+            print(f"{key},-,{new[key]},ADDED")
+            continue
+        if key not in new:
+            print(f"{key},{old[key]},-,REMOVED")
+            continue
+        o, n = old[key], new[key]
+        delta = (n - o) / o * 100.0 if o else 0.0
+        flag = ""
+        if "events_per_sec" in key and delta < -REGRESSION_PCT:
+            flag = f"  REGRESSION (>{REGRESSION_PCT:.0f}% slower)"
+            regressions += 1
+        print(f"{key},{o},{n},{delta:+.1f}%{flag}")
+    if regressions:
+        print(f"# {regressions} throughput regression(s) beyond "
+              f"{REGRESSION_PCT:.0f}%")
+    else:
+        print("# no throughput regressions")
+    return regressions
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write {name: us_per_call} results as JSON")
+    ap.add_argument("--compare", nargs=2, metavar=("OLD.json", "NEW.json"),
+                    default=None,
+                    help="compare two BENCH json files instead of running "
+                         "benchmarks; exit non-zero on a >"
+                         f"{REGRESSION_PCT:.0f}%% events/sec regression")
     add_backend_arg(ap)
     args = ap.parse_args()
+    if args.compare:
+        sys.exit(1 if compare(*args.compare) else 0)
     apply_backend(args.backend)
     for title, mod in MODULES:
         print(f"\n### {title}")

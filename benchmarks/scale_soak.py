@@ -13,6 +13,11 @@ O(1) fault lookups are proven here, in the regime the ROADMAP's
   Zero invariant violations required: WR conservation, per-link packet
   conservation, arbiter accounting, tr_ID free-list/index consistency.
 * **128-node DRAGONFLY** — topology breadth at reduced block count.
+* **1024-node TORUS_2D** — the sharded-executor tier: run once on the
+  single global wheel and once under ``FabricConfig(shards=32)``, and
+  require the two stats payloads byte-identical (the
+  :mod:`repro.core.shards` conservative-lookahead merge contract, proven
+  at the fabric size it exists for).
 
 Wall time and events/sec are emitted into the BENCH json trajectory, and
 an events/sec floor turns harness slowdowns into CI failures.  Tune with
@@ -39,11 +44,11 @@ EVENTS_PER_SEC_FLOOR = 15_000.0
 
 
 def run_tier(n_nodes: int, topology: str, dims: tuple, total_blocks: int,
-             hot_blocks: int, seed: int = SEED):
+             hot_blocks: int, seed: int = SEED, shards: int = 1):
     specs = scale_mix(n_nodes, total_blocks=total_blocks,
                       hot_blocks=hot_blocks)
     config = FabricConfig(n_nodes=n_nodes, topology=topology, dims=dims,
-                          frames_per_node=1 << 16)
+                          frames_per_node=1 << 16, shards=shards)
     t0 = time.perf_counter()
     result = soak(seed, tenants=specs, config=config,
                   max_events=400_000_000)
@@ -107,6 +112,26 @@ def main() -> None:
     report("128n_dragonfly", r128, wall128)
     check("scale: 128-node dragonfly soak holds every invariant",
           r128.ok, "; ".join(r128.violations[:3]))
+
+    # ------------------- 1024-node torus (the sharded-executor tier) -----
+    # This tier is what caught the VA-window overflow: tenant pds above
+    # 223 used to push fault IOVAs past the FIFO's 28-bit field,
+    # livelocking every faulting tenant (see repro.testing.traffic
+    # VA_SLOTS).  It runs twice — single wheel, then 32 per-node shards
+    # merged under conservative lookahead — and the two runs must be
+    # byte-identical (the repro.core.shards contract, at target scale).
+    blocks_1024 = 20_000 if args.quick else 200_000
+    r1k, wall1k = run_tier(1024, "torus_2d", (32, 32), blocks_1024,
+                           hot_blocks=TR_ID_SPACE // 4)
+    report("1024n_torus", r1k, wall1k)
+    check("scale: 1024-node torus soak holds every invariant",
+          r1k.ok, "; ".join(r1k.violations[:3]))
+    r1ks, wall1ks = run_tier(1024, "torus_2d", (32, 32), blocks_1024,
+                             hot_blocks=TR_ID_SPACE // 4, shards=32)
+    report("1024n_torus_sh32", r1ks, wall1ks)
+    check("scale: sharded (32-way) 1024-node run is byte-identical to "
+          "the single-wheel run", r1ks.json() == r1k.json(),
+          f"events {r1ks.stats['events']} vs {r1k.stats['events']}")
 
 
 if __name__ == "__main__":

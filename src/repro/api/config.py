@@ -92,6 +92,13 @@ class FabricConfig:
       are reported (their tie order is load-bearing).  Observation only
       — stats stay byte-identical.  Also enabled by the
       ``REPRO_RACE_CHECK`` environment variable.
+    * ``shards`` — partition the fabric's nodes into this many per-shard
+      event wheels merged under conservative lookahead (= the minimum
+      routed link latency); see :mod:`repro.core.shards`.  ``1``
+      (default) = the single global wheel.  Results are byte-identical
+      either way; sharding bounds per-queue size on 1000+-node fabrics
+      and is the scaffold for parallel execution.  Mutually exclusive
+      with ``race_check`` (the sanitizer wraps the single-queue loop).
     """
 
     n_nodes: int = 2
@@ -118,10 +125,21 @@ class FabricConfig:
     crash_detect_retries: int = 3
     lease_timeout_us: float = 10_000.0
     race_check: bool = False
+    shards: int = 1
 
     def __post_init__(self) -> None:
         if self.n_nodes < 1:
             raise ConfigError(f"n_nodes must be >= 1, got {self.n_nodes}")
+        if self.shards < 1:
+            raise ConfigError(f"shards must be >= 1, got {self.shards}")
+        if self.shards > self.n_nodes:
+            raise ConfigError(
+                f"shards={self.shards} exceeds n_nodes={self.n_nodes}: "
+                f"every shard must own at least one node")
+        if self.shards > 1 and self.race_check:
+            raise ConfigError(
+                "shards > 1 is mutually exclusive with race_check: the "
+                "race sanitizer wraps the single-queue event loop")
         if self.pldma_slots < 1:
             raise ConfigError(
                 f"pldma_slots must be >= 1, got {self.pldma_slots}")

@@ -25,7 +25,8 @@ from repro.core.arbiter import ArbiterStats, ServiceClass
 from repro.core.node import (BankCollision, DomainClosed, DomainExists,
                              FabricError, Node, NodeDown, Transfer, TrIdStats)
 from repro.core.pagetable import FrameAllocator
-from repro.core.simulator import EventLoop
+from repro.core.simulator import EventLoop, make_event_loop
+from repro.errors import ConfigError
 from repro.npr.stats import NPRStats
 from repro.net.interconnect import FabricStats, Interconnect
 from repro.net.router import NetworkPartitioned
@@ -280,14 +281,26 @@ class Fabric:
         self.config = config
         self.cost = config.cost
         if config.race_check or os.environ.get("REPRO_RACE_CHECK"):
+            if config.shards > 1:
+                raise ConfigError(
+                    "shards > 1 is mutually exclusive with the race "
+                    "sanitizer (REPRO_RACE_CHECK)")
             from repro.lint.race import RaceCheckLoop
             self.loop: EventLoop = RaceCheckLoop()
+        elif config.shards > 1:
+            from repro.core.shards import ShardedEventLoop
+            # conservative lookahead = min routed link latency: every
+            # cross-node (hence cross-shard) event crosses >= one hop
+            self.loop = ShardedEventLoop(
+                config.shards, lookahead_us=self.cost.hop_latency_us)
         else:
-            self.loop = EventLoop()
+            self.loop = make_event_loop()
+        node_loop = self.loop.handle_for if config.shards > 1 else None
         self.nodes: list[Node] = []
         for i in range(config.n_nodes):
             policy = config.policy_for_node(i)
-            node = Node(self.loop, self.cost, i,
+            node = Node(node_loop(i) if node_loop else self.loop,
+                        self.cost, i,
                         policy.make_resolver(self.cost),
                         allocator=FrameAllocator(config.frames_per_node),
                         hupcf=config.hupcf, fault_model=config.fault_model,

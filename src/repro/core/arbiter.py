@@ -78,7 +78,7 @@ CLASS_PRIORITY = (ServiceClass.LATENCY, ServiceClass.BULK)
 DEFAULT_PLDMA_SLOTS = A.OUTSTANDING_BLOCKS_PER_TRANSFER
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ArbiterStats:
     """Per-domain (or node-total) arbiter telemetry.
 
@@ -145,6 +145,14 @@ class DMAArbiter:
         self._depth_by_pd: dict[int, int] = {}
         self.stats = ArbiterStats()              # node-wide total
         self.domain_stats: dict[int, ArbiterStats] = {}
+        # cached enum member: enqueue/_pump test it per block, and the
+        # import is circular at module load (node.py imports arbiter) but
+        # fine here — a DMAArbiter only exists once its Node does
+        from repro.core.node import BlockState
+        self._done = BlockState.DONE
+        # DRR rotation bound factor, hoisted out of _next_block (the
+        # integer division showed up at million-block scale)
+        self._rot_factor = A.BLOCK_SIZE // self.quantum + 2
 
     # ------------------------------------------------------------ domains
     def register_domain(self, pd: int,
@@ -194,7 +202,12 @@ class DMAArbiter:
         return self._depth_by_pd.get(pd, 0)
 
     def _stats_for(self, pd: int) -> ArbiterStats:
-        return self.domain_stats.setdefault(pd, ArbiterStats())
+        # hot path (every enqueue/dispatch/completion): probe the dict
+        # once instead of allocating a throwaway default per setdefault
+        st = self.domain_stats.get(pd)
+        if st is None:
+            st = self.domain_stats[pd] = ArbiterStats()
+        return st
 
     def _queue_for(self, pd: int, cls: ServiceClass) -> _DomainQueue:
         q = self.queues.get((pd, cls))
@@ -212,7 +225,7 @@ class DMAArbiter:
         Re-entries go to the *back* of their class queue — a faulting
         block that lost its slot does not jump fresh traffic.
         """
-        if block.queued or block.state.name == "DONE":
+        if block.queued or block.state is self._done:
             return
         pd = block.transfer.pd
         cls = (block.transfer.service_class or self.class_of(pd))
@@ -221,21 +234,27 @@ class DMAArbiter:
         block.queued = True
         q = self._queue_for(pd, cls)
         q.blocks.append(block)
-        self._depth_total += 1
-        self._depth_by_pd[pd] = self._depth_by_pd.get(pd, 0) + 1
+        total = self._depth_total + 1
+        self._depth_total = total
+        depth = self._depth_by_pd.get(pd, 0) + 1
+        self._depth_by_pd[pd] = depth
         if not q.in_ring:
             q.in_ring = True
             self._active[cls].append(q)
-        st = self._stats_for(pd)
+        st = self.domain_stats.get(pd)       # _stats_for, inlined (hot)
+        if st is None:
+            st = self.domain_stats[pd] = ArbiterStats()
+        tot_st = self.stats
         if retransmit:
             st.requeues += 1
-            self.stats.requeues += 1
+            tot_st.requeues += 1
         else:
             st.enqueued += 1
-            self.stats.enqueued += 1
-        st.max_queue_depth = max(st.max_queue_depth, self.queue_depth(pd))
-        self.stats.max_queue_depth = max(self.stats.max_queue_depth,
-                                         self.queue_depth())
+            tot_st.enqueued += 1
+        if depth > st.max_queue_depth:            # high-water marks
+            st.max_queue_depth = depth
+        if total > tot_st.max_queue_depth:
+            tot_st.max_queue_depth = total
         self._pump()
 
     def requeue(self, block: "Block") -> None:
@@ -259,7 +278,9 @@ class DMAArbiter:
 
     def on_block_done(self, block: "Block") -> None:
         pd = block.transfer.pd
-        st = self._stats_for(pd)
+        st = self.domain_stats.get(pd)       # _stats_for, inlined (hot)
+        if st is None:
+            st = self.domain_stats[pd] = ArbiterStats()
         st.completed += 1
         self.stats.completed += 1
         left = self._outstanding.get(pd, 0) - 1
@@ -323,30 +344,36 @@ class DMAArbiter:
             if block is None:
                 return
             block.queued = False
-            if block.state.name == "DONE":     # completed while queued
+            if block.state is self._done:      # completed while queued
                 continue
             block.holds_slot = True
             block.grant_pending = True
             self.in_flight += 1
             pd = block.transfer.pd
-            st = self._stats_for(pd)
+            nbytes = block.nbytes
+            st = self.domain_stats.get(pd)   # _stats_for, inlined (hot)
+            if st is None:
+                st = self.domain_stats[pd] = ArbiterStats()
             st.dispatched += 1
-            st.bytes_served += block.nbytes
-            self.stats.dispatched += 1
-            self.stats.bytes_served += block.nbytes
-            r5 = self.node.r5
-            delay = (self.node.cost.retransmit_setup_us
-                     if block.is_retransmit else self.node.cost.per_block_r5_us)
-            self.node.loop.schedule(delay, r5._dispatch, block,
-                                    block.is_retransmit)
+            st.bytes_served += nbytes
+            tot_st = self.stats
+            tot_st.dispatched += 1
+            tot_st.bytes_served += nbytes
+            node = self.node
+            delay = (node.cost.retransmit_setup_us
+                     if block.is_retransmit else node.cost.per_block_r5_us)
+            node.loop.schedule(delay, node.r5._dispatch, block,
+                               block.is_retransmit)
 
     def _next_block(self) -> Optional["Block"]:
         """Deficit round robin, LATENCY ring strictly before BULK."""
         for cls in CLASS_PRIORITY:
             active = self._active[cls]
+            if not active:
+                continue
             # a full rotation credits every queue by quantum × weight, so
             # some head fits within ceil(BLOCK_SIZE / quantum) + 1 rotations
-            max_rot = (len(active) + 1) * (A.BLOCK_SIZE // self.quantum + 2)
+            max_rot = (len(active) + 1) * self._rot_factor
             rotations = 0
             while active and rotations <= max_rot:
                 q = active[0]

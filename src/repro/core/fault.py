@@ -59,7 +59,7 @@ class Disposition(enum.Enum):
     STALLED = 2      # transaction held; resume/terminate via CBn_RESUME
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class TranslationResult:
     disposition: Disposition
     frame: int = -1
@@ -68,7 +68,7 @@ class TranslationResult:
     tlb_hit: bool = False
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class ContextBank:
     index: int
     page_table: Optional[PageTable] = None
@@ -98,7 +98,7 @@ class ContextBank:
         return (self.far_high << 32) | self.far
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class SMMUStats:
     translations: int = 0
     tlb_hits: int = 0
@@ -124,7 +124,10 @@ class SMMU:
         self.banks = [ContextBank(i) for i in range(NUM_CONTEXT_BANKS)]
         self.interrupt_handler = interrupt_handler
         self.stats = SMMUStats()
-        self._tlb: dict[tuple[int, int], int] = {}   # (bank, vpn) -> frame
+        # micro-TLB keyed by packed ``(bank << 32) | vpn`` ints — int
+        # hashing beats tuple hashing on the per-page translate path, and
+        # vpns are 27-bit (39-bit IOVA space), so packing never collides
+        self._tlb: dict[int, int] = {}
 
     # -------------------------------------------------------------- config
     def attach_domain(self, bank_index: int, page_table: PageTable,
@@ -162,17 +165,18 @@ class SMMU:
 
     # ----------------------------------------------------------------- TLB
     def tlb_invalidate(self, bank_index: int, vpn: int) -> None:
-        if self._tlb.pop((bank_index, vpn), None) is not None:
+        if self._tlb.pop((bank_index << 32) | vpn, None) is not None:
             self.stats.tlb_invalidations += 1
 
     def tlb_invalidate_all(self, bank_index: int) -> None:
-        for key in [k for k in self._tlb if k[0] == bank_index]:
+        for key in [k for k in self._tlb if k >> 32 == bank_index]:
             del self._tlb[key]
             self.stats.tlb_invalidations += 1
 
     # ----------------------------------------------------------- translate
     def translate(self, bank_index: int, vpn: int,
                   access: Access) -> TranslationResult:
+        """Full translation record (driver-facing callers, tests)."""
         bank = self.banks[bank_index]
         pt = bank.page_table
         assert pt is not None, f"context bank {bank_index} not attached"
@@ -180,11 +184,11 @@ class SMMU:
 
         # Hit-under-previous-fault: if a fault is outstanding and HUPCF is
         # clear, *every* subsequent transaction terminates, resident or not.
-        if bank.fault_active and not bank.hupcf:
+        if bank.fsr and not bank.sctlr & SCTLR_HUPCF:
             self.stats.collateral_terminations += 1
             return TranslationResult(Disposition.TERMINATED, collateral=True)
 
-        cached = self._tlb.get((bank_index, vpn))
+        cached = self._tlb.get((bank_index << 32) | vpn)
         if cached is not None:
             self.stats.tlb_hits += 1
             return TranslationResult(Disposition.OK, frame=cached, tlb_hit=True)
@@ -192,13 +196,47 @@ class SMMU:
         pte = pt.lookup(vpn)
         if pte.state == PageState.RESIDENT and (access is Access.READ
                                                 or pte.writable):
-            self._tlb[(bank_index, vpn)] = pte.frame
+            self._tlb[(bank_index << 32) | vpn] = pte.frame
             return TranslationResult(Disposition.OK, frame=pte.frame)
 
-        # --- fault path ---
+        disp, recorded = self._record_fault(bank, vpn, access, pte)
+        return TranslationResult(disp, fault_recorded=recorded)
+
+    def translate_disposition(self, bank_index: int, vpn: int,
+                              access: Access) -> Disposition:
+        """Allocation-free variant of :meth:`translate` for the per-page
+        datapath (PLDMA source reads, destination arrivals): identical
+        state transitions and stats, but returns only the
+        :class:`Disposition` — the one field those paths consult — so
+        the resident-page common case builds no result record.
+        """
+        bank = self.banks[bank_index]
+        pt = bank.page_table
+        assert pt is not None, f"context bank {bank_index} not attached"
+        st = self.stats
+        st.translations += 1
+        if bank.fsr and not bank.sctlr & SCTLR_HUPCF:
+            st.collateral_terminations += 1
+            return Disposition.TERMINATED
+        if (bank_index << 32) | vpn in self._tlb:
+            st.tlb_hits += 1
+            return Disposition.OK
+        pte = pt.lookup(vpn)
+        if pte.state == PageState.RESIDENT and (access is Access.READ
+                                                or pte.writable):
+            self._tlb[(bank_index << 32) | vpn] = pte.frame
+            return Disposition.OK
+        return self._record_fault(bank, vpn, access, pte)[0]
+
+    def _record_fault(self, bank: ContextBank, vpn: int, access: Access,
+                      pte) -> tuple[Disposition, bool]:
+        """Shared fault path of both translate variants: FSR/FAR/FSYNR
+        capture (first fault only), MULTI accounting, interrupt, and the
+        Terminate-vs-Stall disposition.  Returns ``(disposition,
+        fault_recorded)``."""
         permission = (pte.state == PageState.RESIDENT)  # mapped but not writable
         recorded = False
-        if not bank.fault_active:
+        if not bank.fsr:
             bank.fsr = FSR_PF if permission else FSR_TF
             iova = vpn << 12
             bank.far = iova & 0xFFFF_FFFF
@@ -208,15 +246,15 @@ class SMMU:
             self.stats.faults_recorded += 1
             if bank.sctlr & SCTLR_CFIE and self.interrupt_handler is not None:
                 self.stats.interrupts += 1
-                self.interrupt_handler(bank_index)
+                self.interrupt_handler(bank.index)
         else:
             bank.fsr |= FSR_MULTI
             self.stats.multi_faults += 1
 
         if bank.fault_model is FaultModel.STALL:
             bank.stalled_vpn = vpn
-            return TranslationResult(Disposition.STALLED, fault_recorded=recorded)
-        return TranslationResult(Disposition.TERMINATED, fault_recorded=recorded)
+            return Disposition.STALLED, recorded
+        return Disposition.TERMINATED, recorded
 
     # ------------------------------------------------------------ driver IF
     def read_fault_record(self, bank_index: int) -> tuple[int, int, bool]:

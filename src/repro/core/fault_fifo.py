@@ -183,10 +183,19 @@ class FaultFIFO:
         return value
 
     def pop_entry(self) -> Optional[FIFOEntry]:
-        """Driver convenience: the two 64-bit reads, decoded."""
+        """Driver convenience: the two 64-bit reads, decoded.
+
+        Returns the head entry object directly instead of packing and
+        re-decoding the four words — the roundtrip is bit-exact for every
+        in-range field (``read64`` keeps the word-level FSM for register
+        clients), and the pop bookkeeping below is identical to a
+        low-then-high read pair.
+        """
         if not self._q:
             return None
-        lo = self.read64(0)
-        hi = self.read64(1)
-        return FIFOEntry.unpack_words(lo & 0xFFFFFFFF, lo >> 32,
-                                      hi & 0xFFFFFFFF, hi >> 32)
+        head = self._q.popleft()
+        self.last_popped_gen = self._gen_q.popleft()
+        self._read_lo_done = False
+        self._head_words = None
+        self.stats.pops += 1
+        return head

@@ -49,7 +49,8 @@ from repro.core.addresses import (NetlinkMessage, RAPFMessage, iova_field_pack,
                                   iova_field_unpack, split_blocks)
 from repro.core.arbiter import DEFAULT_PLDMA_SLOTS, DMAArbiter, ServiceClass
 from repro.core.costmodel import CostModel
-from repro.core.fault import SMMU, Access, Disposition, FaultModel
+from repro.core.fault import (SCTLR_HUPCF, SMMU, Access, Disposition,
+                              FaultModel)
 from repro.core.fault_fifo import FaultFIFO, FIFOEntry
 from repro.core.pagetable import FrameAllocator, PageTable
 from repro.core.resolver import DriverDedupCache, Resolver, Strategy
@@ -195,6 +196,13 @@ class Block:
 
 
 class Transfer:
+    # hot state: every page arrival and every ACK chases attributes on
+    # this object, so it is slotted like Block — no per-instance dict
+    __slots__ = ("tid", "pd", "service_class", "src_node", "dst_node",
+                 "src_va", "dst_va", "nbytes", "on_complete", "stats",
+                 "failed_status", "origin_id", "srq_held", "srq_node",
+                 "blocks", "next_block", "done_blocks", "live_blocks")
+
     def __init__(self, tid: int, pd: int, src_node: "Node", dst_node: "Node",
                  src_va: int, dst_va: int, nbytes: int,
                  on_complete: Optional[Callable[["Transfer"], None]] = None,
@@ -298,6 +306,15 @@ class Node:
         self.lease_timeout_us = lease_timeout_us
         # per-domain retry budgets: pd -> (max_retries, retry_backoff)
         self.retry_budgets: dict[int, tuple[Optional[int], float]] = {}
+        # hot-path cache of the BankManager's per-domain handle: a bound
+        # domain's bank is one dict probe away (see bank_of_pd); a steal
+        # nulls the victim handle's bank, so entries self-invalidate
+        self._bank_dom: dict[int, object] = {}
+        # stable references to the per-page-hot containers (both dicts
+        # are mutated in place, never rebound) — saves two attribute
+        # chains per received page
+        self._npr_domains = self.npr.domains
+        self._banks = self.tenancy.banks
         # demo/bench hook: blocks by (pd, src vpn) for source-fault attribution
         self.netlink_log: list[NetlinkMessage] = []
 
@@ -368,6 +385,7 @@ class Node:
         if bank is not None:
             self.smmu.detach_domain(bank)
         self.tenancy.release(pd)
+        self._bank_dom.pop(pd, None)
         self.npr.unregister_domain(pd)
         self.retry_budgets.pop(pd, None)
         self.domain_resolvers.pop(pd, None)
@@ -386,10 +404,29 @@ class Node:
         Stealing detaches the victim from the SMMU and invalidates the
         victim's NP-RDMA MTT entries: zero stale completions.
         """
+        banks = self.tenancy.banks
+        # fast path: a cached, still-bound domain handle costs one dict
+        # probe plus the same LRU-touch + hit accounting bind() would do
+        # — no lambda, no Binding allocation (this runs once per page)
+        dom = self._bank_dom.get(pd)
+        if dom is None:
+            dom = banks.domain_handle(pd)
+            if dom is not None:
+                self._bank_dom[pd] = dom
+        if dom is not None:
+            bank = dom.bank
+            if bank is not None:
+                # BankManager.note_hit inlined (LRU touch + hit counter):
+                # this is the once-per-page common case
+                banks.stats.hits += 1
+                tick = banks._tick + 1
+                banks._tick = tick
+                dom.last_use = tick
+                return bank, 0.0
         tn = self.tenancy
         binding = tn.bind_bank(
             pd, fault_active=lambda b: self.smmu.banks[b].fault_active)
-        if binding.hit:
+        if binding.hit:            # pragma: no cover - cache served above
             return binding.bank, 0.0
         penalty = self.cost.bank_rebind_us
         if binding.stolen:
@@ -640,7 +677,9 @@ class Node:
             return  # packets delivered to a dead node vanish
         if block.state is BlockState.DONE or round_id != block.round_id:
             return  # stale packets from a superseded round
-        if self.npr.owns(block):
+        transfer = block.transfer
+        pd = transfer.pd
+        if pd in self._npr_domains:         # inlined NPREngine.owns()
             # NP-RDMA domain: host-side verification instead of the SMMU
             # translate -> NACK -> fault-FIFO path
             self.npr.recv_page(block, page_idx, round_id, nbytes)
@@ -650,33 +689,58 @@ class Node:
         # live_blocks counts this transfer's IN_FLIGHT/PAUSED_* blocks —
         # including this one — so "any other live block" is a counter
         # compare instead of a per-page scan over every block.
-        interleaved = interleaved or block.transfer.live_blocks > 1
-        pd = block.transfer.pd
-        vpn = A.page_index(block.dst_va) + page_idx
+        interleaved = interleaved or transfer.live_blocks > 1
+        vpn = (block.dst_va >> 12) + page_idx   # A.page_index, inlined
         # bind-on-use: an overcommitted domain may have to steal a bank
         # here; the shootdown+rebind penalty delays this page's ACK/NACK
-        # (it is SMMU driver work on the translation's critical path)
-        bank, penalty = self.bank_of_pd(pd)
-        if penalty:
-            block.transfer.stats.driver_us += penalty
-        res = self.smmu.translate(bank, vpn, Access.WRITE)
-        if res.disposition is Disposition.OK:
-            block.delivered.add(page_idx)
-            if len(block.delivered) == block.n_pages:
+        # (it is SMMU driver work on the translation's critical path).
+        # The bank_of_pd hit path is inlined — cached bound handle, LRU
+        # touch, hit count, zero penalty — it runs once per page.
+        dom = self._bank_dom.get(pd)
+        if dom is not None and dom.bank is not None:
+            bank = dom.bank
+            banks = self._banks
+            banks.stats.hits += 1
+            tick = banks._tick + 1
+            banks._tick = tick
+            dom.last_use = tick
+            penalty = 0.0
+        else:
+            bank, penalty = self.bank_of_pd(pd)
+            if penalty:
+                transfer.stats.driver_us += penalty
+        # SMMU TLB-hit fast path inlined (once per received page):
+        # resident, cached, and not gated by an outstanding fault —
+        # stats identical to translate_disposition()'s hit branch
+        smmu = self.smmu
+        cbank = smmu.banks[bank]
+        if ((not cbank.fsr or cbank.sctlr & SCTLR_HUPCF)
+                and (bank << 32) | vpn in smmu._tlb):
+            sst = smmu.stats
+            sst.translations += 1
+            sst.tlb_hits += 1
+            ok = True
+        else:
+            ok = (smmu.translate_disposition(bank, vpn, Access.WRITE)
+                  is Disposition.OK)
+        if ok:
+            delivered = block.delivered
+            delivered.add(page_idx)
+            if len(delivered) == block.n_pages:
                 # the ACK travels back over the interconnect: charge the
                 # routed distance (the seed charged one hop, flat)
+                src_node = transfer.src_node
                 try:
-                    ctrl = (self.path_to(block.transfer.src_node.node_id)
-                                .send_ctrl(0))
+                    ctrl = self.path_to(src_node.node_id).send_ctrl(0)
                 except NetworkPartitioned:
                     return  # ACK lost; the sender's timeout recovers
                 delay = penalty + self.cost.ack_us + ctrl
-                self.loop.schedule(delay, block.transfer.src_node.r5.on_ack,
+                self.loop.schedule(delay, src_node.r5.on_ack,
                                    block, round_id)
             return
         # ---- destination fault: NACK + FIFO logging --------------------
-        block.transfer.stats.dst_faults += 1
-        entry = FIFOEntry(src_id=block.transfer.src_node.node_id,
+        transfer.stats.dst_faults += 1
+        entry = FIFOEntry(src_id=transfer.src_node.node_id,
                           tr_id=block.tr_id, seq_num=block.seq_num,
                           pdid=pd,
                           iova_field=iova_field_pack(0, vpn))
@@ -696,14 +760,14 @@ class Node:
             block.nacked_round = round_id
             # the PF-NACK (AXI slave error) propagates back per routed hop
             try:
-                ctrl = (self.path_to(block.transfer.src_node.node_id)
+                ctrl = (self.path_to(transfer.src_node.node_id)
                             .send_ctrl(0))
             except NetworkPartitioned:
                 ctrl = None  # NACK lost; the sender's timeout recovers
             if ctrl is not None:
                 delay = penalty + self.cost.nack_us + ctrl
                 self.loop.schedule(delay,
-                                   block.transfer.src_node.r5.on_nack,
+                                   transfer.src_node.r5.on_nack,
                                    block, round_id)
         # the SMMU interrupt fired inside translate() if this was the first
         # outstanding fault; MULTI faults rely on the FIFO alone (§3.2.1) —
@@ -739,8 +803,11 @@ class R5Scheduler:
         self.pending: dict[int, Block] = {}   # tr_id -> block
         # per-(pd, src vpn) index over pending blocks, launch-ordered:
         # the O(1) replacement for the per-fault O(pending) scan in
-        # find_block_by_src_page (maintained on launch/completion)
-        self._src_index: dict[tuple[int, int], list[Block]] = {}
+        # find_block_by_src_page (maintained on launch/completion).
+        # Keys are packed ints ``(pd << 32) | vpn`` — int hashing beats
+        # tuple hashing on the per-block add/remove path, and vpns are
+        # 27-bit (39-bit IOVA space), so the packing never collides.
+        self._src_index: dict[int, list[Block]] = {}
         self.id_stats = TrIdStats(space=space)
 
     # ----------------------------------------------------------- tr_ID pool
@@ -779,31 +846,31 @@ class R5Scheduler:
 
     # ------------------------------------------------------ src-fault index
     def _index_add(self, block: Block) -> None:
-        pd = block.transfer.pd
+        base = block.transfer.pd << 32
         idx = self._src_index
-        first = block.src_va >> 12
-        last = (block.src_va + block.nbytes - 1) >> 12
-        for vpn in range(first, last + 1):
-            lst = idx.get((pd, vpn))
+        first = base | (block.src_va >> 12)
+        last = base | ((block.src_va + block.nbytes - 1) >> 12)
+        for key in range(first, last + 1):
+            lst = idx.get(key)
             if lst is None:
-                idx[(pd, vpn)] = [block]
+                idx[key] = [block]
             else:
                 lst.append(block)
 
     def _index_remove(self, block: Block) -> None:
-        pd = block.transfer.pd
+        base = block.transfer.pd << 32
         idx = self._src_index
-        first = block.src_va >> 12
-        last = (block.src_va + block.nbytes - 1) >> 12
-        for vpn in range(first, last + 1):
-            lst = idx.get((pd, vpn))
+        first = base | (block.src_va >> 12)
+        last = base | ((block.src_va + block.nbytes - 1) >> 12)
+        for key in range(first, last + 1):
+            lst = idx.get(key)
             if lst is not None:
                 try:
                     lst.remove(block)
                 except ValueError:          # pragma: no cover - defensive
                     pass
                 if not lst:
-                    del idx[(pd, vpn)]
+                    del idx[key]
 
     # ---------------------------------------------------------------- user
     def submit(self, transfer: Transfer) -> None:
@@ -891,7 +958,7 @@ class R5Scheduler:
         # LATENCY blocks overtake BULK backlogs on congested shared hops
         latency_class = (block.service_class is not None
                          and block.service_class.wire_priority)
-        if node.npr.owns(block):
+        if pd in node._npr_domains:         # inlined NPREngine.owns()
             # NP-RDMA domain: the engine translates through its MTT (and
             # fixes source misses up host-side) instead of the SMMU loop
             # below; the R5 timeout stays armed as the common backstop
@@ -905,41 +972,70 @@ class R5Scheduler:
         bank, bank_penalty = node.bank_of_pd(pd)
         if bank_penalty:
             transfer.stats.driver_us += bank_penalty
+        # the per-page loop is the hottest code in the simulator: bind
+        # every loop-invariant lookup once, accumulate wire_bytes locally
+        src_va = block.src_va
+        src_end = src_va + block.nbytes
+        # stream key: (transfer, block-index) — unique among streams
+        # that can coexist on a link, unlike id(block), which CPython
+        # may reuse after a finished block is collected while its
+        # link is still draining (aliasing the interleave detector)
+        stream_key = (transfer.tid, block.index)
+        recv = transfer.dst_node.recv_page
+        schedule = self.loop.schedule
+        round_id = block.round_id
+        smmu = node.smmu
+        cbank = smmu.banks[bank]
+        sst = smmu.stats
+        tlb = smmu._tlb
+        bank_key = bank << 32
+        translate = smmu.translate_disposition
+        read = Access.READ
+        ok = Disposition.OK
+        stream = path.stream_page
+        wire_bytes = 0
         for i, vpn in enumerate(src_pages):
-            res = node.smmu.translate(bank, vpn, Access.READ)
-            if res.disposition is not Disposition.OK:
+            # SMMU TLB-hit fast path inlined (per source page): cached
+            # and not gated by an outstanding fault — identical stats
+            # to translate_disposition()'s hit branch
+            if ((not cbank.fsr or cbank.sctlr & SCTLR_HUPCF)
+                    and bank_key | vpn in tlb):
+                sst.translations += 1
+                sst.tlb_hits += 1
+            elif translate(bank, vpn, read) is not ok:
                 block.state = BlockState.PAUSED_SRC
                 transfer.stats.src_faults += 1
                 # deschedule-on-fault: the paused block yields its PLDMA
                 # slot so other tenants' queued blocks keep streaming
                 node.arbiter.on_block_paused(block)
                 break
-            pg_start = max(block.src_va, vpn << 12)
-            pg_end = min(block.src_va + block.nbytes, (vpn + 1) << 12)
+            pg_start = vpn << 12
+            if src_va > pg_start:
+                pg_start = src_va
+            pg_end = (vpn + 1) << 12
+            if src_end < pg_end:
+                pg_end = src_end
             nbytes = pg_end - pg_start
-            # stream key: (transfer, block-index) — unique among streams
-            # that can coexist on a link, unlike id(block), which CPython
-            # may reuse after a finished block is collected while its
-            # link is still draining (aliasing the interleave detector)
-            delay, interleaved = path.stream_page(
-                nbytes, (transfer.tid, block.index),
-                latency_class=latency_class)
-            block.wire_bytes += nbytes
-            self.loop.schedule(bank_penalty + delay,
-                               transfer.dst_node.recv_page, block, i,
-                               block.round_id, interleaved, nbytes)
+            delay, interleaved = stream(nbytes, stream_key,
+                                        latency_class=latency_class)
+            wire_bytes += nbytes
+            schedule(bank_penalty + delay, recv, block, i,
+                     round_id, interleaved, nbytes)
+        block.wire_bytes = wire_bytes
         self._arm_timeout(block)
 
     def _arm_timeout(self, block: Block) -> None:
         if block.timeout_event is not None:
             block.timeout_event.cancel()
         timeout = self.cost.timeout_us
-        backoff = self.node.retry_backoff_for(block.transfer.pd)
-        if backoff > 1.0 and block.retries:
+        # hot path (every dispatch re-arms): probe the budget dict once
+        # instead of building the (None, 1.0) default tuple per call
+        budget = self.node.retry_budgets.get(block.transfer.pd)
+        if budget is not None and budget[1] > 1.0 and block.retries:
             # exponential backoff per consecutive retransmission of this
             # block (FaultPolicy.retry_backoff; exponent capped so a long
             # retry tail cannot overflow the float timeline)
-            timeout *= backoff ** min(block.retries, 16)
+            timeout *= budget[1] ** min(block.retries, 16)
         block.timeout_event = self.loop.schedule(
             timeout, self._on_timeout, block, block.round_id)
 
@@ -1095,9 +1191,10 @@ class R5Scheduler:
         transfer.live_blocks -= 1
         if block.timeout_event is not None:
             block.timeout_event.cancel()
-        if self.pending.pop(block.tr_id, None) is block:
+        tid = block.tr_id
+        if self.pending.pop(tid, None) is block:
             self._index_remove(block)
-            self._free_tr_id(block.tr_id)   # recycle ONLY on completion
+            self._free_tr_id(tid)           # recycle ONLY on completion
         self.node.arbiter.on_block_done(block)
         transfer.done_blocks += 1
         # the freed ID may unblock launches deferred at exhaustion; the
@@ -1110,7 +1207,7 @@ class R5Scheduler:
             self._launch_next(transfer)
         while self._starved and self.tr_ids_free() > 0:
             self._launch_next(self._starved.popleft())
-        if transfer.complete:
+        if transfer.done_blocks == len(transfer.blocks):   # == .complete
             transfer.stats.t_complete = (self.loop.now
                                          + self.cost.completion_poll_us)
             if transfer.on_complete is not None:
@@ -1193,5 +1290,5 @@ class R5Scheduler:
         O(1) via the per-(pd, vpn) index — the seed scanned every pending
         block per source fault, O(pending) on the driver's critical path.
         """
-        lst = self._src_index.get((pd, vpn))
+        lst = self._src_index.get((pd << 32) | vpn)
         return lst[0] if lst else None

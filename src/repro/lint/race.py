@@ -125,42 +125,62 @@ class RaceCheckLoop(EventLoop):
                     break
 
     # ------------------------------------------- instrumented execution
-    # run()/step() are verbatim copies of EventLoop's with the single
-    # _observe() hook before each dispatch — the base loop keeps its
-    # hot path free of any hook indirection.
+    # run()/run_batch() are verbatim copies of the wheel EventLoop's with
+    # the single _observe() hook before each dispatch — the base loop
+    # keeps its hot path free of any hook indirection.  (step() comes
+    # from the base class: it delegates to run_batch(1).)
     def run(self, until: float | None = None,
             max_events: int = 50_000_000) -> None:
         import heapq
-        heap = self._heap
-        while heap and self.events_processed < max_events:
-            entry = heapq.heappop(heap)
+        fired = 0
+        heappop = heapq.heappop
+        while True:
+            active = self._active
+            if not active:
+                if not self._refill():
+                    return
+                active = self._active
+            entry = heappop(active)
             ev = entry[2]
             if ev.cancelled:
+                self._n_queued -= 1
                 self._n_cancelled -= 1
                 continue
             if until is not None and entry[0] > until:
-                heapq.heappush(heap, entry)
+                heapq.heappush(active, entry)
                 return
+            if fired >= max_events:
+                heapq.heappush(active, entry)
+                raise RuntimeError("event budget exhausted — livelock?")
+            fired += 1
             self.now = entry[0]
             self.events_processed += 1
+            self._n_queued -= 1
             ev.loop = None
             self._observe(ev)
             ev.fn(*ev.args)
-            heap = self._heap
-        if self._heap and self.events_processed >= max_events:
-            raise RuntimeError("event budget exhausted — livelock?")
 
-    def step(self) -> bool:
+    def run_batch(self, limit: int) -> int:
         import heapq
-        while self._heap:
-            t, _, ev = heapq.heappop(self._heap)
+        fired = 0
+        heappop = heapq.heappop
+        while fired < limit:
+            active = self._active
+            if not active:
+                if not self._refill():
+                    break
+                active = self._active
+            entry = heappop(active)
+            ev = entry[2]
             if ev.cancelled:
+                self._n_queued -= 1
                 self._n_cancelled -= 1
                 continue
-            self.now = t
+            self.now = entry[0]
             self.events_processed += 1
+            self._n_queued -= 1
             ev.loop = None
             self._observe(ev)
             ev.fn(*ev.args)
-            return True
-        return False
+            fired += 1
+        return fired

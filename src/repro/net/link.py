@@ -37,7 +37,7 @@ if TYPE_CHECKING:                                    # pragma: no cover
     from repro.core.simulator import EventLoop
 
 
-@dataclasses.dataclass
+@dataclasses.dataclass(slots=True)
 class LinkStats:
     """One direction's wire telemetry (all additive except the maxima)."""
 
@@ -209,7 +209,7 @@ class Path:
     """
 
     __slots__ = ("loop", "cost", "route", "links", "n_hops", "ledger",
-                 "_ledger_rec")
+                 "_ledger_rec", "latency_us", "_wire_div")
 
     def __init__(self, loop: EventLoop, cost: CostModel,
                  route: tuple[int, ...], links: tuple[Link, ...],
@@ -224,6 +224,13 @@ class Path:
         self.n_hops = sum(l.hops for l in links)
         self.ledger = ledger            # (src, dst) -> [data, ctrl] counts
         self._ledger_rec = None         # this path's entry, bound lazily
+        #: routed propagation charge, precomputed once per path — the
+        #: per-packet hot path reads a slot instead of multiplying (the
+        #: operands are both route/cost constants, so this is bit-exact)
+        self.latency_us = self.n_hops * cost.hop_latency_us
+        #: CostModel.packet_wire_us inlined: ``(nbytes * 8) / _wire_div``
+        #: is the identical expression with the divisor hoisted
+        self._wire_div = cost.link_gbps * 1e3
 
     @property
     def src(self) -> int:
@@ -233,10 +240,6 @@ class Path:
     def dst(self) -> int:
         return self.route[-1]
 
-    @property
-    def latency_us(self) -> float:
-        return self.n_hops * self.cost.hop_latency_us
-
     def stream_page(self, nbytes: int, block_key: Hashable,
                     latency_class: bool = False) -> tuple[float, bool]:
         """Reserve wire time on every link along the route for one page.
@@ -245,12 +248,57 @@ class Path:
         contract the seed's single :class:`Link` offered the PLDMA model.
         """
         now = self.loop.now
+        wire_us = (nbytes * 8) / self._wire_div   # CostModel.packet_wire_us
         t = now
         interleaved = False
         for link in self.links:
-            t, il = link.stream_page(nbytes, block_key, earliest=t,
-                                     latency_class=latency_class)
-            interleaved = interleaved or il
+            # Inlined Link.stream_page + Link.reserve — the call pair per
+            # page per hop (and the per-hop packet_wire_us recompute of a
+            # route-constant value) was measurable at million-block scale.
+            # Bit-identical to the Link methods, which remain the single-
+            # link API for control paths and tests.
+            st = link.stats
+            bb = link.busy_until
+            lb = link.lat_busy_until
+            if bb > now or lb > now:
+                lu = link.last_user
+                if lu is not None and lu != block_key:
+                    interleaved = True
+                    st.interleaves += 1
+            else:
+                # drained: a stream that finished long ago must not flag
+                # this one as interleaved (same hygiene as Link.reserve)
+                link.last_user = None
+            floor = t if t > now else now
+            if latency_class and link.qos:
+                start = floor if floor > lb else lb
+                end = start + wire_us
+                link.lat_busy_until = end
+                if bb > start:                   # jumped a BULK backlog
+                    if wire_us > 0:
+                        st.latency_overtakes += 1
+                    link.busy_until = bb + wire_us   # stolen wire time
+                else:
+                    link.busy_until = end
+            else:
+                start = floor
+                if bb > start:
+                    start = bb
+                if link.qos and lb > start:
+                    start = lb
+                end = start + wire_us
+                link.busy_until = end
+            waited = start - floor
+            if waited > 0:
+                st.queued += 1
+                st.queue_us += waited
+                if waited > st.max_queue_us:
+                    st.max_queue_us = waited
+            st.busy_us += wire_us
+            link.last_user = block_key
+            st.data_packets += 1
+            st.data_bytes += nbytes
+            t = end
         if self.ledger is not None:
             self._ledger()[0] += 1
         return (t - now) + self.latency_us, interleaved
@@ -265,10 +313,48 @@ class Path:
         ``hop_latency_us`` however far apart the nodes were).
         """
         now = self.loop.now
+        wire_us = (nbytes * 8) / self._wire_div if nbytes > 0 else 0.0
         t = now
         for link in self.links:
-            t = link.send_ctrl(nbytes, earliest=t,
-                               latency_class=latency_class)
+            # Inlined Link.send_ctrl + Link.reserve — every ACK/NACK/RAPF
+            # books per hop on the same hot path as data pages.
+            st = link.stats
+            st.ctrl_packets += 1
+            if not link.qos:
+                # legacy links never book: serialization + distance only
+                t = (now if now > t else t) + wire_us
+                continue
+            bb = link.busy_until
+            lb = link.lat_busy_until
+            if bb <= now and lb <= now:
+                link.last_user = None            # drained-wire hygiene
+            floor = t if t > now else now
+            if latency_class:
+                start = floor if floor > lb else lb
+                end = start + wire_us
+                link.lat_busy_until = end
+                if bb > start:                   # jumped a BULK backlog
+                    if wire_us > 0:
+                        st.latency_overtakes += 1
+                    link.busy_until = bb + wire_us   # stolen wire time
+                else:
+                    link.busy_until = end
+            else:
+                start = floor
+                if bb > start:
+                    start = bb
+                if lb > start:
+                    start = lb
+                end = start + wire_us
+                link.busy_until = end
+            waited = start - floor
+            if waited > 0:
+                st.queued += 1
+                st.queue_us += waited
+                if waited > st.max_queue_us:
+                    st.max_queue_us = waited
+            st.busy_us += wire_us
+            t = end
         if self.ledger is not None:
             self._ledger()[1] += 1
         return (t - now) + self.latency_us

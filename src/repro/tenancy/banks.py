@@ -136,6 +136,24 @@ class BankManager:
         self._tick += 1
         dom.last_use = self._tick
 
+    def domain_handle(self, pd: int) -> Optional[_Domain]:
+        """The mutable per-domain record, for caller-side caching.
+
+        The node's per-page hot path holds on to this handle: while
+        ``handle.bank`` is not None the binding is live, and a steal
+        nulls the victim's ``bank`` in place — so a cached handle can
+        never serve a stale bank.  Pair with :meth:`note_hit`.
+        """
+        return self._domains.get(pd)
+
+    def note_hit(self, dom: _Domain) -> None:
+        """Hit accounting for a caller-cached live binding: exactly what
+        :meth:`bind` does for an already-bound domain (LRU touch + hit
+        counter), minus the dict probe and the Binding allocation."""
+        self.stats.hits += 1
+        self._tick += 1
+        dom.last_use = self._tick
+
     def bind(self, pd: int,
              fault_active: Callable[[int], bool] = lambda bank: False,
              ) -> Binding:

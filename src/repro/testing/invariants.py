@@ -117,14 +117,15 @@ def check_tr_id_lifecycle(fabric) -> List[str]:
             if block.tr_id != tid:
                 out.append(f"{tag}: pending[{tid}] holds block with "
                            f"tr_id={block.tr_id}")
-        # rebuild the src index from pending (launch order == dict order)
+        # rebuild the src index from pending (launch order == dict order);
+        # keys are the scheduler's packed ``(pd << 32) | vpn`` ints
         expect: dict = {}
         for block in r5.pending.values():
-            pd = block.transfer.pd
+            base = block.transfer.pd << 32
             first = block.src_va >> 12
             last = (block.src_va + block.nbytes - 1) >> 12
             for vpn in range(first, last + 1):
-                expect.setdefault((pd, vpn), []).append(block)
+                expect.setdefault(base | vpn, []).append(block)
         if expect != r5._src_index:
             missing = set(expect) ^ set(r5._src_index)
             out.append(f"{tag}: src-fault index diverged from pending "
@@ -343,7 +344,8 @@ def check_bank_conservation(fabric) -> List[str]:
                     and node.smmu.banks[bank].page_table is not None:
                 out.append(f"{tag}: unbound bank {bank} still attached "
                            f"in the SMMU")
-        for (bank, vpn) in node.smmu._tlb:
+        for key in node.smmu._tlb:      # packed (bank << 32) | vpn keys
+            bank, vpn = key >> 32, key & 0xFFFF_FFFF
             if bank not in bindings:
                 out.append(f"{tag}: TLB entry for unbound bank {bank} "
                            f"vpn={vpn:#x} (missed shootdown)")
@@ -386,7 +388,8 @@ def check_tenant_isolation(fabric) -> List[str]:
                            f"(pd={pd}, vpn={vpn:#x}) but the page table "
                            f"disagrees")
         bindings = node.tenancy.banks.bindings()
-        for (bank, vpn), frame in node.smmu._tlb.items():
+        for key, frame in node.smmu._tlb.items():
+            bank, vpn = key >> 32, key & 0xFFFF_FFFF
             pd = bindings.get(bank)
             if pd is None:
                 continue                    # reported by bank conservation

@@ -30,6 +30,18 @@ DST_BASE = 0x20_0000_0000
 TENANT_STRIDE = 0x1_0000_0000       # 4 GB of VA per tenant
 REQUEST_STRIDE = 1 << 20            # 1 MB per request region
 
+#: VA window slots per base: the architecture carries 39-bit virtual
+#: addresses (``A.VA_BITS``), so only this many 4 GB tenant windows fit
+#: above ``DST_BASE`` — tenants beyond the last slot wrap around and
+#: reuse lower windows.  Aliasing across *protection domains* is safe
+#: (each pd has its own page table and frames), and pds below the wrap
+#: point keep their historical addresses byte-for-byte.  Without the
+#: wrap, a faulting tenant with ``pd >= 224`` (va >= 1 TB) overflows
+#: the fault FIFO's 28-bit IOVA field (Table 3.1): the driver then
+#: resolves a *truncated* VPN forever while the real page stays
+#: non-resident — a NACK/RAPF livelock the 1024-node soak tier caught.
+VA_SLOTS = ((1 << A.VA_BITS) - DST_BASE) // TENANT_STRIDE       # 96
+
 
 @dataclasses.dataclass(frozen=True)
 class TenantSpec:
@@ -174,11 +186,12 @@ class TenantRun:
         if key in self._mrs:
             return self._mrs[key]
         size = self.rng.choice(spec.size_choices)
-        src_va = SRC_BASE + spec.pd * TENANT_STRIDE + key * REQUEST_STRIDE
+        window = (spec.pd % VA_SLOTS) * TENANT_STRIDE
+        src_va = SRC_BASE + window + key * REQUEST_STRIDE
         # fresh_dst: a brand-new (cold, faulting) landing region per
         # request; otherwise all requests share one warm region
         slot = key if spec.fresh_dst else 0
-        dst_va = DST_BASE + spec.pd * TENANT_STRIDE + slot * REQUEST_STRIDE
+        dst_va = DST_BASE + window + slot * REQUEST_STRIDE
         src = self.domain.register_memory(spec.src_node, src_va, size,
                                           prep=spec.src_prep)
         dst = (self._mrs[0][1] if not spec.fresh_dst and self._mrs

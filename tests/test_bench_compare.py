@@ -1,0 +1,57 @@
+"""The BENCH regression gate (``benchmarks/run.py --compare``)."""
+
+import json
+
+import pytest
+
+from benchmarks.run import REGRESSION_PCT, compare
+
+
+def _write(tmp_path, name, payload):
+    p = tmp_path / name
+    p.write_text(json.dumps(payload))
+    return str(p)
+
+
+def test_compare_flags_only_deep_events_per_sec_drops(tmp_path, capsys):
+    old = {"scale/64n_torus_events_per_sec": 100.0,
+           "scale/128n_dragonfly_events_per_sec": 100.0,
+           "scale/64n_torus_wall_s": 10.0,
+           "fig4.1/ideal/16B": 4.0}
+    new = {"scale/64n_torus_events_per_sec": 79.0,     # -21%: regression
+           "scale/128n_dragonfly_events_per_sec": 81.0,  # -19%: within band
+           "scale/64n_torus_wall_s": 99.0,    # not a throughput key: free
+           "fig4.1/ideal/16B": 400.0}         # ditto
+    n = compare(_write(tmp_path, "old.json", old),
+                _write(tmp_path, "new.json", new))
+    assert n == 1
+    out = capsys.readouterr().out
+    assert "REGRESSION" in out
+    assert f"{REGRESSION_PCT:.0f}%" in out
+
+
+def test_compare_handles_added_and_removed_keys(tmp_path, capsys):
+    old = {"scale/64n_torus_events_per_sec": 100.0,
+           "tenancy/retired_key": 5.0}
+    new = {"scale/64n_torus_events_per_sec": 120.0,
+           "scale/1024n_torus_events_per_sec": 50.0}
+    n = compare(_write(tmp_path, "old.json", old),
+                _write(tmp_path, "new.json", new))
+    assert n == 0      # a brand-new slow tier must not trip the gate
+    out = capsys.readouterr().out
+    assert "ADDED" in out and "REMOVED" in out
+    assert "no throughput regressions" in out
+
+
+def test_compare_identical_files_is_clean(tmp_path):
+    payload = {"scale/64n_torus_events_per_sec": 100.0}
+    p = _write(tmp_path, "same.json", payload)
+    assert compare(p, p) == 0
+
+
+@pytest.mark.parametrize("drop,expected", [(19.9, 0), (20.1, 1)])
+def test_compare_threshold_boundary(tmp_path, drop, expected):
+    old = {"x_events_per_sec": 1000.0}
+    new = {"x_events_per_sec": 1000.0 * (1 - drop / 100.0)}
+    assert compare(_write(tmp_path, "o.json", old),
+                   _write(tmp_path, "n.json", new)) == expected

@@ -1,0 +1,205 @@
+"""Wheel ↔ heap event-kernel equivalence (the frozen tie-break contract).
+
+The bucketed wheel (:class:`repro.core.simulator.EventLoop`) and the
+legacy binary heap (:class:`~repro.core.simulator.HeapEventLoop`,
+``REPRO_EVENT_LOOP=heap``) must be observationally identical: same fire
+order, same ``now`` trace, same ``idle`` answers, same live-event
+counts — under any interleaving of ``schedule`` / ``cancel`` / ``at`` /
+``step`` / ``run_batch`` / ``peek_time`` / ``run``, including handlers
+that schedule more work while firing.
+
+The property test drives both kernels with one randomized op sequence.
+It uses ``hypothesis`` when the environment has it and falls back to a
+seeded ``random.Random`` sweep otherwise (the container this repo grew
+in ships no hypothesis), so the contract is exercised either way.
+"""
+
+import os
+import random
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.simulator import (EventLoop, HeapEventLoop, WHEEL_BUCKET_US,
+                                  WHEEL_SPAN, make_event_loop)
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _fire(log, loop, tag):
+    log.append((loop.now, tag))
+
+
+def _chain(log, loop, tag, delay):
+    # a handler that schedules more work while firing: the schedule-order
+    # seq allocated *during* the run must tie-break identically too
+    log.append((loop.now, tag))
+    loop.schedule(delay, _fire, log, loop, -tag)
+
+
+def _live(loop):
+    if isinstance(loop, HeapEventLoop):
+        return len(loop._heap) - loop._n_cancelled
+    return loop._n_queued - loop._n_cancelled
+
+
+def _random_ops_trial(rng, n_ops=300):
+    wheel = EventLoop()
+    heap = HeapEventLoop()
+    loops = (wheel, heap)
+    logs = ([], [])
+    handles = []          # parallel (wheel_event, heap_event) pairs
+    tag = 0
+
+    def check():
+        assert wheel.now == heap.now
+        assert logs[0] == logs[1]
+        assert wheel.idle == heap.idle
+        assert _live(wheel) == _live(heap)
+
+    for _ in range(n_ops):
+        op = rng.random()
+        if op < 0.40:
+            tag += 1
+            kind = rng.random()
+            if kind < 0.25:          # same-timestamp burst
+                delay = 0.0
+            elif kind < 0.60:        # in-bucket / near-wheel
+                delay = rng.uniform(0.0, 4 * WHEEL_BUCKET_US)
+            elif kind < 0.90:        # mid-wheel
+                delay = rng.uniform(0.0, WHEEL_SPAN * WHEEL_BUCKET_US * 0.9)
+            else:                    # far-future heap tier (overflow)
+                delay = rng.uniform(WHEEL_SPAN * WHEEL_BUCKET_US,
+                                    8 * WHEEL_SPAN * WHEEL_BUCKET_US)
+            if rng.random() < 0.2:
+                chain_delay = rng.uniform(0.0, 2 * WHEEL_BUCKET_US)
+                pair = tuple(
+                    lp.schedule(delay, _chain, lg, lp, tag, chain_delay)
+                    for lp, lg in zip(loops, logs))
+            else:
+                pair = tuple(lp.schedule(delay, _fire, lg, lp, tag)
+                             for lp, lg in zip(loops, logs))
+            handles.append(pair)
+        elif op < 0.50 and handles:
+            we, he = handles[rng.randrange(len(handles))]
+            we.cancel()
+            he.cancel()
+            we.cancel()              # double-cancel must not double-count
+            he.cancel()
+        elif op < 0.58:
+            tag += 1
+            t = wheel.now + rng.uniform(-10.0, 100.0)   # may clamp to now
+            for lp, lg in zip(loops, logs):
+                lp.at(t, _fire, lg, lp, tag)
+        elif op < 0.74:
+            k = rng.randrange(1, 8)
+            assert wheel.run_batch(k) == heap.run_batch(k)
+            check()
+        elif op < 0.82:
+            assert wheel.step() == heap.step()
+            check()
+        elif op < 0.92:
+            assert wheel.peek_time() == heap.peek_time()
+        else:
+            until = wheel.now + rng.uniform(0.0, 200.0)
+            wheel.run(until=until)
+            heap.run(until=until)
+            check()
+
+    wheel.run()
+    heap.run()
+    check()
+    assert wheel.events_processed == heap.events_processed
+    assert _live(wheel) == 0
+    assert wheel.idle and heap.idle
+    # bulk sweeps may or may not have triggered, but never negative
+    # bookkeeping: accounting drained exactly
+    assert wheel.compactions >= 0 and heap.compactions >= 0
+    assert wheel._n_cancelled == 0
+
+
+if HAVE_HYPOTHESIS:                                   # pragma: no cover
+    @settings(max_examples=60, deadline=None)
+    @given(st.integers(min_value=0, max_value=2**32 - 1))
+    def test_wheel_heap_equivalence_property(seed):
+        _random_ops_trial(random.Random(seed))
+else:
+    @pytest.mark.parametrize("seed", range(40))
+    def test_wheel_heap_equivalence_property(seed):
+        _random_ops_trial(random.Random(seed))
+
+
+def test_same_timestamp_fires_in_schedule_order():
+    """The frozen (time, seq) contract, directly: a same-time burst
+    fires in schedule order on both kernels."""
+    for loop in (EventLoop(), HeapEventLoop()):
+        log = []
+        for i in range(50):
+            loop.schedule(5.0, log.append, i)
+        loop.schedule(0.0, log.append, -1)
+        loop.run()
+        assert log == [-1] + list(range(50))
+
+
+def test_cancelled_overflow_and_bucket_entries_are_swept():
+    """Cancelled events parked in a future bucket (and in the overflow
+    tier) are reclaimed in bulk when the bucket activates, and the
+    accounting (live = queued - cancelled) stays exact."""
+    loop = EventLoop()
+    keep = []
+    span_us = WHEEL_SPAN * WHEEL_BUCKET_US
+    evs = [loop.schedule(100.0 + (i % 7) * 1e-3, keep.append, i)
+           for i in range(64)]
+    far = [loop.schedule(2 * span_us + i, keep.append, 1000 + i)
+           for i in range(8)]
+    for ev in evs[::2] + far[:4]:
+        ev.cancel()
+    assert _live(loop) == 36
+    loop.run()
+    assert loop.compactions >= 1
+    assert sorted(keep) == sorted([i for i in range(64) if i % 2]
+                                  + [1000 + i for i in range(4, 8)])
+    assert loop.idle and loop._n_cancelled == 0
+
+
+@pytest.mark.parametrize("cls", [EventLoop, HeapEventLoop])
+def test_run_max_events_budget_is_per_call(cls):
+    """Satellite regression: ``run(max_events=)`` bounds THIS call, not
+    the loop's lifetime — a long first run must not poison a later one;
+    a genuine zero-delay livelock still trips it."""
+    loop = cls()
+    for i in range(500):
+        loop.schedule(float(i), lambda: None)
+    loop.run(until=300.0)                 # fires 301 events
+    loop.run(max_events=250)              # 199 left: must NOT trip
+    assert loop.events_processed == 500
+
+    def livelock():
+        loop.schedule(0.0, livelock)
+
+    loop.schedule(0.0, livelock)
+    with pytest.raises(RuntimeError, match="event budget"):
+        loop.run(max_events=100)
+
+
+def test_make_event_loop_env_dispatch():
+    code = ("from repro.core.simulator import make_event_loop;"
+            "print(type(make_event_loop()).__name__)")
+    env = dict(os.environ)
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.stdout.strip() == "EventLoop"
+    env["REPRO_EVENT_LOOP"] = "heap"
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.stdout.strip() == "HeapEventLoop"
+    env["REPRO_EVENT_LOOP"] = "bogus"
+    out = subprocess.run([sys.executable, "-c", code], env=env,
+                         capture_output=True, text=True)
+    assert out.returncode != 0 and "REPRO_EVENT_LOOP" in out.stderr

@@ -57,6 +57,26 @@ class TestSoakInvariants:
                  config=FabricConfig(n_nodes=1))
         assert r.violations == []
 
+    @pytest.mark.parametrize("pd", [224, 1025])
+    def test_high_pd_faulting_tenant_completes(self, pd):
+        """Regression (found by the 1024-node soak tier): a faulting
+        tenant whose pd-strided VA window lay beyond 1 TB overflowed the
+        fault FIFO's 28-bit IOVA field, so the driver resolved a
+        truncated VPN forever while the real page stayed non-resident —
+        every such tenant livelocked in NACK/RAPF rounds.  The tenant VA
+        layout now wraps windows inside the 39-bit VA space
+        (``repro.testing.traffic.VA_SLOTS``)."""
+        tenants = [
+            TenantSpec(pd=pd, name="high-pd-fault", mode="closed",
+                       inflight=2, n_requests=4, size_choices=(65536,),
+                       dst_prep=BufferPrep.FAULTING, fresh_dst=True),
+        ]
+        r = soak(9, tenants=tenants, config=FabricConfig(n_nodes=2),
+                 max_events=200_000)
+        assert r.violations == []
+        t = r.stats["tenants"][0]
+        assert t["completed"] == t["posted"] == 4
+
 
 class TestDeterminism:
     """Guards the event loop against wall-clock / iteration-order
